@@ -1,0 +1,83 @@
+"""§Perf helper: full-model roofline terms for hillclimb variants.
+
+Usage: PYTHONPATH=src python benchmarks/perf_compare.py
+Reads baseline probes from results/dryrun and variant probes from
+results/perf, extrapolates to full depth, and prints the three terms.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.lm_archs import ARCHS  # noqa: E402
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+CELLS = {
+    ("h2o-danube-3-4b", "train_4k"): [
+        ("baseline", "dryrun", "probe"),
+        ("P4 pad head_dim 120->128 (Dh-shard)", "perf", "probe_pad128"),
+        ("q-shard + kv-replicate", "perf", "probe_qshard"),
+        ("qshard + flash blocks 1024", "perf", "probe_qshard_b1024"),
+        ("qshard + pad128", "perf", "probe_pad128_qshard"),
+        ("Ulysses-GQA (a2a q, kv-replicate+slice)", "perf",
+         "probe_ulysses_gqa"),
+    ],
+    ("hubert-xlarge", "prefill_32k"): [
+        ("baseline", "dryrun", "probe"),
+        ("Ulysses a2a seq-parallel attention", "perf", "probe_ulysses"),
+    ],
+    ("deepseek-moe-16b", "train_4k"): [
+        ("baseline (TP-F experts)", "dryrun", "probe"),
+        ("EP all_to_all routing", "perf", "probe_ep"),
+        ("EP + EP-native weight layout", "perf", "probe_ep2"),
+        ("EP-native + capacity 1.0", "perf", "probe_ep2_cf1"),
+        ("EP + 3-D shard_map boundary", "perf", "probe_ep3"),
+        ("TP + 3-D shard_map boundary", "perf", "probe_tp3d"),
+    ],
+}
+
+
+def terms(arch, sub, tag):
+    p = os.path.join(ROOT, sub, f"{arch[0]}__{arch[1]}__{tag}.json")
+    if not os.path.exists(p):
+        return None
+    d = json.load(open(p))
+    if not d.get("ok"):
+        return None
+    ng = ARCHS[arch[0]].n_groups
+    g1, g2 = d["g1"], d["g2"]
+    f = g1["flops"] + (g2["flops"] - g1["flops"]) * (ng - 1)
+    b = g1["bytes_accessed"] + (g2["bytes_accessed"]
+                                - g1["bytes_accessed"]) * (ng - 1)
+    c1 = g1["collectives"]["total_bytes"]
+    c2 = g2["collectives"]["total_bytes"]
+    c = c1 + (c2 - c1) * (ng - 1)
+    return f / PEAK, b / HBM, c / LINK
+
+
+def main():
+    for cell, variants in CELLS.items():
+        print(f"\n=== {cell[0]} x {cell[1]} ===")
+        base = None
+        for label, sub, tag in variants:
+            t = terms(cell, sub, tag)
+            if t is None:
+                print(f"  {label:42s} (missing)")
+                continue
+            tc, tm, tx = t
+            dom = max(tc, tm, tx)
+            which = ["compute", "memory", "collective"][[tc, tm, tx].index(dom)]
+            if base is None:
+                base = dom
+            print(f"  {label:42s} C={tc:8.3f}s M={tm:8.3f}s X={tx:8.3f}s "
+                  f"dom={which:10s} bound={dom:7.3f}s "
+                  f"({base/dom:4.2f}x vs baseline)")
+
+
+if __name__ == "__main__":
+    main()

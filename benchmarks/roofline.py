@@ -1,0 +1,164 @@
+"""Roofline analysis from the dry-run artifacts (deliverable (g)).
+
+Reads results/dryrun/*.json and derives, per (arch x shape) on the
+single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs_per_device / 197e12        [s]
+    memory term     = HLO_bytes_per_device / 819e9         [s]
+    collective term = collective_bytes_per_device / 50e9   [s]
+
+HLO costs come from the *probe* lowerings (two unrolled group counts,
+finite-differenced and extrapolated to the full depth) because
+HloCostAnalysis counts a scanned while-body once. ``cost_analysis`` on
+the partitioned module is per-device (verified against an analytic
+matmul: ratio 255 ≈ 256 chips), so the spec's global/(chips*BW) equals
+our per-device/BW. Memory figures come from the full scanned compile.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e)
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link (ICI)
+CHIPS = 256             # single pod 16x16
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.lm_archs import ARCHS, SHAPES, all_cells  # noqa: E402
+from repro.models.lm import active_param_count, param_count  # noqa: E402
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def _load(arch, shape, tag) -> Optional[dict]:
+    p = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{tag}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def extrapolate(probe: dict, cfg) -> Dict[str, float]:
+    """cost(full) = g1 + (g2 - g1) * (n_groups - 1)."""
+    g1, g2 = probe["g1"], probe["g2"]
+    ng = cfg.n_groups
+    out = {}
+    for key in ("flops", "bytes_accessed"):
+        d = g2[key] - g1[key]
+        out[key] = g1[key] + d * (ng - 1)
+    c1 = g1["collectives"]["total_bytes"]
+    c2 = g2["collectives"]["total_bytes"]
+    out["collective_bytes"] = c1 + (c2 - c1) * (ng - 1)
+    return out
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    n = active_param_count(cfg) if cfg.n_experts else param_count(cfg)
+    if sh["kind"] == "train":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 6.0 * n * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 2.0 * n * tokens
+    tokens = sh["global_batch"]  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze_cell(arch: str, shape: str) -> Optional[dict]:
+    full = _load(arch, shape, "pod")
+    probe = _load(arch, shape, "probe")
+    if not full or not full.get("ok"):
+        return {"arch": arch, "shape": shape, "ok": False,
+                "error": (full or {}).get("error", "missing")}
+    cfg = ARCHS[arch]
+    row = {"arch": arch, "shape": shape, "ok": True,
+           "kind": full["kind"],
+           "mem_args_GiB": full["full"]["memory"]["argument_bytes"] / 2**30,
+           "mem_temp_GiB": full["full"]["memory"]["temp_bytes"] / 2**30,
+           "compile_s": full["full"]["compile_s"]}
+    if probe and probe.get("ok"):
+        costs = extrapolate(probe, cfg)
+    else:  # fallback: scanned costs (body counted once) — flagged
+        costs = {"flops": full["full"]["flops"],
+                 "bytes_accessed": full["full"]["bytes_accessed"],
+                 "collective_bytes":
+                     full["full"]["collectives"]["total_bytes"]}
+        row["probe_missing"] = True
+    t_c = costs["flops"] / PEAK_FLOPS
+    t_m = costs["bytes_accessed"] / HBM_BW
+    t_x = costs["collective_bytes"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    mf = model_flops(arch, shape)
+    hlo_global = costs["flops"] * CHIPS
+    row.update(
+        flops_per_dev=costs["flops"],
+        bytes_per_dev=costs["bytes_accessed"],
+        coll_bytes_per_dev=costs["collective_bytes"],
+        t_compute_s=t_c, t_memory_s=t_m, t_collective_s=t_x,
+        dominant=dom[0],
+        step_time_bound_s=dom[1],
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global else float("nan"),
+        roofline_fraction=(mf / CHIPS / PEAK_FLOPS) / dom[1]
+        if dom[1] > 0 else float("nan"),
+    )
+    return row
+
+
+_SUGGEST = {
+    "compute": "cut non-useful FLOPs (causal-waste in attention tiles, "
+               "remat recompute) or raise MXU utilization (128-aligned "
+               "tiles)",
+    "memory": "fuse elementwise chains, keep bf16 end-to-end, raise "
+              "arithmetic intensity with larger per-device tiles",
+    "collective": "reshard to cut all-gather volume (wider FSDP prefetch, "
+                  "TP only where weights amortize) and overlap with "
+                  "compute",
+}
+
+
+def fmt_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful ratio | roofline frac | args GiB | "
+           "temp GiB |\n|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if not r["ok"]:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                         f"{r.get('error','')[:60]} | | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['mem_args_GiB']:.1f} | "
+            f"{r['mem_temp_GiB']:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    rows = [analyze_cell(a, s) for a, s in all_cells()]
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(fmt_table(rows))
+    ok = [r for r in rows if r["ok"]]
+    print(f"\n{len(ok)}/{len(rows)} cells analyzed")
+    for dom in ("compute", "memory", "collective"):
+        n = sum(1 for r in ok if r["dominant"] == dom)
+        print(f"  {dom}-bound: {n}   -> {_SUGGEST[dom]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving example: batched prefill + decode through the KV caches.
+
+Uses the reduced gemma3-4b config (local:global pattern with ring caches
+for the SWA layers) so it runs on CPU; the same `make_prefill_step` /
+`make_decode_step` functions are what the 512-chip dry-run lowers.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lm_archs import ARCHS
+from repro.models import init_params, make_decode_step, make_prefill_step
+
+cfg = ARCHS["gemma3-4b"].smoke()
+params = init_params(cfg, jax.random.PRNGKey(0))
+
+BATCH, PROMPT, NEW = 4, 24, 16
+prefill = jax.jit(make_prefill_step(cfg, max_len=PROMPT + NEW))
+decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (BATCH, PROMPT)))
+
+t0 = time.time()
+logits, caches, pos = prefill(params, {"tokens": prompts})
+tok = jnp.argmax(logits, -1)[:, None]
+generated = [tok]
+for _ in range(NEW - 1):
+    logits, caches, pos = decode(params, caches, tok, pos)
+    tok = jnp.argmax(logits, -1)[:, None]
+    generated.append(tok)
+out = jnp.concatenate(generated, axis=1)
+dt = time.time() - t0
+
+assert out.shape == (BATCH, NEW)
+assert bool(jnp.isfinite(logits).all())
+print(f"served {BATCH} requests: prompt={PROMPT} tokens, "
+      f"generated={NEW} tokens each in {dt:.2f}s")
+print("sample continuation token ids:", np.asarray(out[0])[:10])

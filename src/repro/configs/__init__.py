@@ -1,0 +1,1 @@
+"""Config registry: paper CNNs + the 10 assigned LM architectures."""

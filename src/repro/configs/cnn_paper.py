@@ -1,0 +1,98 @@
+"""The paper's three evaluation CNNs (Tables I, II, III), built verbatim.
+
+Weights are He-initialized from a fixed seed (the paper's latency results
+do not depend on weight values, only structure); the ball classifier can
+additionally be *trained* on the synthetic ball dataset via
+``examples/train_ball.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import (
+    BatchNorm,
+    CNNGraph,
+    Conv2D,
+    Dropout,
+    Input,
+    LeakyReLU,
+    MaxPool,
+    ReLU,
+    Softmax,
+)
+
+
+def _conv(rng, kh, kw, ci, co, **kw_args) -> Conv2D:
+    fan_in = kh * kw * ci
+    w = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=(kh, kw, ci, co))
+    b = rng.normal(0.0, 0.01, size=(co,))
+    return Conv2D(weights=w.astype(np.float32), bias=b.astype(np.float32),
+                  **kw_args)
+
+
+def _bn(rng, c) -> BatchNorm:
+    return BatchNorm(
+        mean=rng.normal(0, 0.5, c), var=rng.uniform(0.5, 1.5, c),
+        gamma=rng.uniform(0.8, 1.2, c), beta=rng.normal(0, 0.1, c))
+
+
+def ball_classifier(seed: int = 0) -> CNNGraph:
+    """Paper Table I — 16x16x1 ball/no-ball classifier."""
+    r = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(16, 16, 1)),
+        _conv(r, 5, 5, 1, 8, strides=(2, 2), padding="same"),
+        ReLU(),
+        MaxPool(size=(2, 2), strides=(2, 2)),
+        _conv(r, 3, 3, 8, 12, padding="valid"),
+        ReLU(),
+        _conv(r, 2, 2, 12, 2, padding="valid"),
+        Softmax(),
+    ])
+
+
+def pedestrian_classifier(seed: int = 0) -> CNNGraph:
+    """Paper Table II — 36x18 (Daimler) pedestrian classifier."""
+    r = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(36, 18, 1)),
+        _conv(r, 3, 3, 1, 12, padding="same"),
+        ReLU(),
+        MaxPool(size=(2, 2)),
+        _conv(r, 3, 3, 12, 32, padding="same"),
+        LeakyReLU(alpha=0.1),
+        MaxPool(size=(2, 2)),
+        _conv(r, 3, 3, 32, 64, padding="same"),
+        LeakyReLU(alpha=0.1),
+        MaxPool(size=(2, 2)),
+        Dropout(rate=0.3),
+        _conv(r, 4, 2, 64, 2, padding="valid"),
+        Softmax(),
+    ])
+
+
+def robot_detector(seed: int = 0) -> CNNGraph:
+    """Paper Table III — 60x80x3 YOLO-style robot detector backbone."""
+    r = np.random.default_rng(seed)
+    layers = [Input(shape=(60, 80, 3))]
+
+    def block(ci, co, pool):
+        layers.append(_conv(r, 3, 3, ci, co, padding="same"))
+        layers.append(_bn(r, co))
+        layers.append(LeakyReLU(alpha=0.1))
+        if pool:
+            layers.append(MaxPool(size=(2, 2)))
+
+    block(3, 8, pool=True)
+    block(8, 12, pool=False)
+    block(12, 8, pool=True)
+    block(8, 16, pool=False)
+    block(16, 20, pool=False)
+    return CNNGraph(layers)
+
+
+PAPER_CNNS = {
+    "ball": ball_classifier,
+    "pedestrian": pedestrian_classifier,
+    "robot": robot_detector,
+}

@@ -1,0 +1,719 @@
+"""NNCG — the ANSI C code generator (paper §II).
+
+Generates, from a trained :class:`CNNGraph`, one plain C file exposing
+
+    void <func>(const float *restrict x, float *restrict out);
+
+implementing the four design principles:
+
+* **P1 unroll levels** — per-layer ``level``: 0 = all loops unrolled
+  (straight-line code), 1 = keep the outermost spatial loop, 2 = keep both
+  spatial loops, ``None`` = no unrolling (plain loop nest).  Matches the
+  paper: "At level 0 all loops are unrolled. Level 1 does not unroll the
+  outer most loop and so forth."
+* **P2 conditional moves** — activations and pooling emit the C ternary
+  operator, never an ``if`` block.
+* **P3 constants** — with any unrolling the trained weights are printed
+  as literals into the code line; without unrolling they are emitted as
+  ``static const`` arrays.  Zero padding taps are *elided entirely* at
+  level 0 (a static-knowledge win no generic library has).
+* **P4 SIMD structure** — three modes: ``generic`` (paper's scalar
+  baseline, output-channel loop outside the tap loops), ``structured``
+  (channel loop innermost over contiguous memory → auto-vectorizable),
+  and ``sse`` (explicit SSSE3/SSE intrinsics over groups of 4 output
+  channels, the paper's shipped mode).
+
+The only dependencies of the generated file are ``math.h`` (softmax) and,
+in ``sse`` mode, ``emmintrin.h`` — exactly the paper's dependency set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .graph import (
+    BatchNorm,
+    CNNGraph,
+    Conv2D,
+    Dense,
+    Dropout,
+    Flatten,
+    Input,
+    LeakyReLU,
+    MaxPool,
+    ReLU,
+    Softmax,
+)
+
+Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
+
+
+@dataclass(frozen=True)
+class ISA:
+    """Vector instruction-set descriptor (P4). The paper ships SSSE3 and
+    names AVX as future work — ``avx`` implements it (8-wide + FMA)."""
+
+    name: str
+    width: int
+    reg: str
+    header: str
+    cc_flags: tuple
+    prefix: str
+
+    def load(self, ptr: str) -> str:
+        return f"{self.prefix}_loadu_ps(&{ptr})"
+
+    def store(self, ptr: str, reg: str) -> str:
+        return f"{self.prefix}_storeu_ps(&{ptr}, {reg});"
+
+    def set1(self, x: str) -> str:
+        return f"{self.prefix}_set1_ps({x})"
+
+    def zero(self) -> str:
+        return f"{self.prefix}_setzero_ps()"
+
+    def add(self, a: str, b: str) -> str:
+        return f"{self.prefix}_add_ps({a}, {b})"
+
+    def mul(self, a: str, b: str) -> str:
+        return f"{self.prefix}_mul_ps({a}, {b})"
+
+    def vmax(self, a: str, b: str) -> str:
+        return f"{self.prefix}_max_ps({a}, {b})"
+
+    def fmadd(self, a: str, b: str, c: str) -> str:
+        """a*b + c."""
+        if self.name == "avx":
+            return f"{self.prefix}_fmadd_ps({a}, {b}, {c})"
+        return self.add(c, self.mul(a, b))
+
+    def set_lits(self, vals) -> str:
+        lits = ", ".join(_flit(v) for v in reversed(list(vals)))
+        return f"{self.prefix}_set_ps({lits})"
+
+
+SSE = ISA(name="sse", width=4, reg="__m128", header="emmintrin.h",
+          cc_flags=("-mssse3",), prefix="_mm")
+AVX = ISA(name="avx", width=8, reg="__m256", header="immintrin.h",
+          cc_flags=("-mavx2", "-mfma"), prefix="_mm256")
+ISAS = {"sse": SSE, "avx": AVX}
+
+
+@dataclass
+class CodegenOptions:
+    simd: str = "sse"            # 'generic' | 'structured' | 'sse' | 'avx'
+    unroll: Union[Level, Dict[str, Level]] = 0
+    func_name: str = "nncg_net"
+    term_budget: int = 60_000    # max emitted FMA terms per layer before
+                                 # the level is demoted (icache trade-off)
+
+    @property
+    def isa(self) -> Optional[ISA]:
+        return ISAS.get(self.simd)
+
+    def level_for(self, layer_name: str) -> Level:
+        if isinstance(self.unroll, dict):
+            return self.unroll.get(layer_name, None)
+        return self.unroll
+
+
+def _flit(v: float) -> str:
+    """Format a float32 as a C literal (paper P3)."""
+    s = np.format_float_scientific(np.float32(v), unique=True, trim="0")
+    return f"{s}f"
+
+
+class _W:
+    """Tiny indented writer."""
+
+    def __init__(self) -> None:
+        self.lines: List[str] = []
+        self._ind = 0
+
+    def __call__(self, line: str = "") -> None:
+        self.lines.append("    " * self._ind + line if line else "")
+
+    def open(self, line: str) -> None:
+        self(line + " {")
+        self._ind += 1
+
+    def close(self) -> None:
+        self._ind -= 1
+        self("}")
+
+    def text(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+def estimate_terms(layer, in_shape, level: Level) -> int:
+    """Emitted multiply-add terms for a conv/pool at an unroll level —
+    the code-size side of the paper's unroll/icache trade-off."""
+    if isinstance(layer, Conv2D):
+        oh, ow, co = layer.out_shape(in_shape)
+        taps = layer.kh * layer.kw * layer.c_in
+        per_out = taps
+        n_out = {0: oh * ow * co, 1: ow * co, 2: co}.get(level, 0)
+        return n_out * per_out if level is not None else taps
+    if isinstance(layer, MaxPool):
+        oh, ow, c = layer.out_shape(in_shape)
+        taps = layer.size[0] * layer.size[1]
+        n_out = {0: oh * ow * c, 1: ow * c, 2: c}.get(level, 0)
+        return n_out * taps if level is not None else taps
+    return 0
+
+
+def choose_levels(graph: CNNGraph, budget: int = 60_000) -> Dict[str, Level]:
+    """Pick, per layer, the deepest unroll level within the term budget.
+
+    This is the static analogue of the paper's per-layer variant
+    benchmarking ("we independently benchmark every code version and
+    select the one with the best runtime performance") — the benchmark
+    harness can still override per layer.
+    """
+    levels: Dict[str, Level] = {}
+    shape = graph.input_shape
+    for layer in graph.layers:
+        if isinstance(layer, (Conv2D, MaxPool)):
+            for lvl in (0, 1, 2, None):
+                if lvl is None or estimate_terms(layer, shape, lvl) <= budget:
+                    levels[layer.name] = lvl
+                    break
+        shape = layer.out_shape(shape)
+    return levels
+
+
+# ---------------------------------------------------------------------------
+# code generation
+# ---------------------------------------------------------------------------
+
+
+class CGenerator:
+    def __init__(self, graph: CNNGraph, opts: CodegenOptions):
+        self.g = graph
+        self.opts = opts
+        self.w = _W()
+        self.decls = _W()
+        self._uid = 0
+
+    # -- helpers ------------------------------------------------------------
+
+    def uid(self) -> int:
+        self._uid += 1
+        return self._uid
+
+    def const_array(self, name: str, arr: np.ndarray) -> str:
+        vals = ", ".join(_flit(v) for v in np.asarray(arr, np.float32).ravel())
+        self.decls(f"static const float {name}[{arr.size}] = {{{vals}}};")
+        return name
+
+    def buffer(self, name: str, size: int) -> str:
+        self.decls(f"static float {name}[{size}];")
+        return name
+
+    # -- activation epilogues (P2: ternary, never a branch) ------------------
+
+    def act_scalar(self, expr: str, act: Optional[str], alpha: float) -> str:
+        if act == "relu":
+            return f"(({expr}) > 0.0f ? ({expr}) : 0.0f)"
+        if act == "leaky_relu":
+            return f"(({expr}) > 0.0f ? ({expr}) : {_flit(alpha)} * ({expr}))"
+        return expr
+
+    def act_sse(self, reg: str, act: Optional[str], alpha: float) -> List[str]:
+        isa = self.opts.isa
+        if act == "relu":
+            return [f"{reg} = {isa.vmax(reg, isa.zero())};"]
+        if act == "leaky_relu":
+            # max(x, a*x) == leaky_relu(x) for 0 < a < 1 — branch-free
+            return [f"{reg} = {isa.vmax(reg, isa.mul(reg, isa.set1(_flit(alpha))))};"]
+        return []
+
+    # -- padding ------------------------------------------------------------
+
+    def emit_padded_copy(self, src: str, in_shape, pads) -> Tuple[str, Tuple[int, int, int]]:
+        """Materialize a zero-padded copy (paper Eq. 1) for the looped modes
+        where tap bounds are not static."""
+        h, wdt, c = in_shape
+        pt, pb, pl, pr = pads
+        ph, pw = h + pt + pb, wdt + pl + pr
+        name = f"pad{self.uid()}"
+        self.buffer(name, ph * pw * c)
+        w = self.w
+        w(f"/* zero-pad {src}: ({h}x{wdt}x{c}) -> ({ph}x{pw}x{c}) */")
+        w(f"for (int z = 0; z < {ph * pw * c}; ++z) {name}[z] = 0.0f;")
+        w.open(f"for (int i = 0; i < {h}; ++i)")
+        w(f"for (int z = 0; z < {wdt * c}; ++z) "
+          f"{name}[((i + {pt}) * {pw} + {pl}) * {c} + z] = "
+          f"{src}[i * {wdt * c} + z];")
+        w.close()
+        return name, (ph, pw, c)
+
+    # -- conv ---------------------------------------------------------------
+
+    def emit_conv(self, layer: Conv2D, in_shape, src: str, dst: str) -> None:
+        opts, w = self.opts, self.w
+        level = opts.level_for(layer.name)
+        oh, ow, co = layer.out_shape(in_shape)
+        sh, sw = layer.strides
+        pads = layer.pad_amounts(in_shape)
+        kh, kw_, ci = layer.kh, layer.kw, layer.c_in
+        W_ = layer.weights  # HWIO
+        B_ = layer.bias
+        # demote level if over budget (icache trade-off, P1)
+        while level is not None and estimate_terms(layer, in_shape, level) > opts.term_budget:
+            level = {0: 1, 1: 2, 2: None}[level]
+
+        w(f"/* Conv2D {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} pad={layer.padding} "
+          f"act={layer.activation} level={level} simd={opts.simd} */")
+
+        use_pad_buf = any(pads) and level != 0
+        if use_pad_buf:
+            src, in_shape = self.emit_padded_copy(src, in_shape, pads)
+            pads = (0, 0, 0, 0)
+        h, wdt, _ = in_shape
+        pt, _pb, pl, _pr = pads
+
+        literals = level is not None
+        wname = bname = None
+        if not literals:
+            wname = self.const_array(f"w{self.uid()}", W_)
+            bname = self.const_array(f"b{self.uid()}", B_)
+
+        def x_index(i, j, n, m, o) -> str:
+            """Index into src for output (i,j) tap (n,m,o); i/j may be C exprs."""
+            if isinstance(i, int):
+                row = i * sh + n - pt
+            else:
+                row = f"({i} * {sh} + {n - pt})"
+            if isinstance(j, int):
+                col = j * sw + m - pl
+            else:
+                col = f"({j} * {sw} + {m - pl})"
+            if isinstance(row, int) and isinstance(col, int):
+                return str((row * wdt + col) * ci + o)
+            return f"(({row}) * {wdt} + ({col})) * {ci} + {o}"
+
+        def out_index(i, j, k) -> str:
+            if isinstance(i, int) and isinstance(j, int) and isinstance(k, int):
+                return str((i * ow + j) * co + k)
+            ke = str(k)
+            return f"(({i}) * {ow} + ({j})) * {co} + {ke}"
+
+        def in_bounds(i, j, n, m) -> bool:
+            """Static OOB elision (only callable when i and j are ints)."""
+            r, c = i * sh + n - pt, j * sw + m - pl
+            return 0 <= r < h and 0 <= c < wdt
+
+        def emit_body(i, j) -> None:
+            static_ij = isinstance(i, int) and isinstance(j, int)
+            if opts.isa is not None:
+                self._conv_body_sse(layer, W_, B_, wname, bname, literals,
+                                    i, j, static_ij, x_index, out_index,
+                                    in_bounds, dst, src)
+            elif opts.simd == "structured":
+                self._conv_body_structured(layer, W_, B_, wname, bname, literals,
+                                           i, j, static_ij, x_index, out_index,
+                                           in_bounds, dst, src)
+            else:
+                self._conv_body_generic(layer, W_, B_, wname, bname, literals,
+                                        i, j, static_ij, x_index, out_index,
+                                        in_bounds, dst, src)
+
+        if level == 0:
+            for i in range(oh):
+                for j in range(ow):
+                    emit_body(i, j)
+        elif level == 1:
+            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            for j in range(ow):
+                emit_body("i", j)
+            w.close()
+        elif level == 2:
+            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            emit_body("i", "j")
+            w.close()
+            w.close()
+        else:
+            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            self._conv_loops_rolled(layer, wname, bname, in_shape,
+                                    (oh, ow, co), dst, src, pads)
+            w.close()
+            w.close()
+
+        if layer.activation == "softmax":
+            self.emit_softmax((oh, ow, co), dst)
+
+    # rolled inner loops (level=None): weights from const arrays
+    def _conv_loops_rolled(self, layer, wname, bname, in_shape, out_shape,
+                           dst, src, pads):
+        w = self.w
+        h, wdt, ci = in_shape
+        oh, ow, co = out_shape
+        kh, kw_ = layer.kh, layer.kw
+        sh, sw = layer.strides
+        pt, _, pl, _ = pads
+        assert pt == 0 and pl == 0, "rolled mode uses padded buffers"
+        if self.opts.isa is not None:
+            isa = self.opts.isa
+            co4 = co - co % isa.width
+            w.open(f"for (int k = 0; k < {co4}; k += {isa.width})")
+            w(f"{isa.reg} acc = {isa.load(f'{bname}[k]')};")
+            w.open(f"for (int n = 0; n < {kh}; ++n)")
+            w.open(f"for (int m = 0; m < {kw_}; ++m)")
+            w.open(f"for (int o = 0; o < {ci}; ++o)")
+            xv = f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o]"
+            wv = f"{wname}[((n * {kw_} + m) * {ci} + o) * {co} + k]"
+            w(f"acc = {isa.fmadd(isa.set1(xv), isa.load(wv), 'acc')};")
+            w.close(); w.close(); w.close()
+            for ln in self.act_sse("acc", layer.activation
+                                   if layer.activation != "softmax" else None,
+                                   layer.alpha):
+                w(ln)
+            w(isa.store(f"{dst}[(i * {ow} + j) * {co} + k]", "acc"))
+            w.close()
+            ks = range(co4, co)
+        elif self.opts.simd == "structured":
+            # channel loop innermost over contiguous memory -> auto-vec
+            w(f"float acc[{co}];")
+            w(f"for (int k = 0; k < {co}; ++k) acc[k] = {bname}[k];")
+            w.open(f"for (int n = 0; n < {kh}; ++n)")
+            w.open(f"for (int m = 0; m < {kw_}; ++m)")
+            w.open(f"for (int o = 0; o < {ci}; ++o)")
+            w(f"const float xv = {src}[((i * {sh} + n) * {wdt} + "
+              f"(j * {sw} + m)) * {ci} + o];")
+            w(f"for (int k = 0; k < {co}; ++k) "
+              f"acc[k] += xv * {wname}[((n * {kw_} + m) * {ci} + o) * {co} + k];")
+            w.close(); w.close(); w.close()
+            act = layer.activation if layer.activation != "softmax" else None
+            w(f"for (int k = 0; k < {co}; ++k) "
+              f"{dst}[(i * {ow} + j) * {co} + k] = "
+              f"{self.act_scalar('acc[k]', act, layer.alpha)};")
+            ks = ()
+        else:
+            w.open(f"for (int k = 0; k < {co}; ++k)")
+            w(f"float acc = {bname}[k];")
+            w.open(f"for (int n = 0; n < {kh}; ++n)")
+            w.open(f"for (int m = 0; m < {kw_}; ++m)")
+            w.open(f"for (int o = 0; o < {ci}; ++o)")
+            w(f"acc += {wname}[((n * {kw_} + m) * {ci} + o) * {co} + k] * "
+              f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];")
+            w.close(); w.close(); w.close()
+            act = layer.activation if layer.activation != "softmax" else None
+            w(f"{dst}[(i * {ow} + j) * {co} + k] = "
+              f"{self.act_scalar('acc', act, layer.alpha)};")
+            w.close()
+            ks = ()
+        # scalar tail for sse mode
+        for k in ks:
+            w(f"{{ float acc = {bname}[{k}];")
+            w(f"  for (int n = 0; n < {kh}; ++n) for (int m = 0; m < {kw_}; ++m) "
+              f"for (int o = 0; o < {ci}; ++o) "
+              f"acc += {wname}[((n * {kw_} + m) * {ci} + o) * {co} + {k}] * "
+              f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];")
+            act = layer.activation if layer.activation != "softmax" else None
+            w(f"  {dst}[(i * {ow} + j) * {co} + {k}] = "
+              f"{self.act_scalar('acc', act, layer.alpha)}; }}")
+
+    # unrolled bodies --------------------------------------------------------
+
+    def _taps(self, layer, i, j, static_ij, in_bounds):
+        for n in range(layer.kh):
+            for m in range(layer.kw):
+                if static_ij and not in_bounds(i, j, n, m):
+                    continue  # P3: zero tap elided entirely
+                for o in range(layer.c_in):
+                    yield n, m, o
+
+    def _conv_body_generic(self, layer, W_, B_, wname, bname, literals,
+                           i, j, static_ij, x_index, out_index, in_bounds,
+                           dst, src):
+        w = self.w
+        co = layer.c_out
+        act = layer.activation if layer.activation != "softmax" else None
+        w.open("")  # scope block
+        for k in range(co):
+            bias = _flit(B_[k]) if literals else f"{bname}[{k}]"
+            w(f"float a{k} = {bias};")
+        for n, m, o in self._taps(layer, i, j, static_ij, in_bounds):
+            xv = f"{src}[{x_index(i, j, n, m, o)}]"
+            for k in range(co):
+                wv = (_flit(W_[n, m, o, k]) if literals
+                      else f"{wname}[{((n * layer.kw + m) * layer.c_in + o) * co + k}]")
+                w(f"a{k} += {xv} * {wv};")
+        for k in range(co):
+            w(f"{dst}[{out_index(i, j, k)}] = "
+              f"{self.act_scalar(f'a{k}', act, layer.alpha)};")
+        w.close()
+
+    def _conv_body_structured(self, layer, W_, B_, wname, bname, literals,
+                              i, j, static_ij, x_index, out_index, in_bounds,
+                              dst, src):
+        # identical accumulators but channel-contiguous arrays
+        self._conv_body_generic(layer, W_, B_, wname, bname, literals, i, j,
+                                static_ij, x_index, out_index, in_bounds,
+                                dst, src)
+
+    def _conv_body_sse(self, layer, W_, B_, wname, bname, literals,
+                       i, j, static_ij, x_index, out_index, in_bounds,
+                       dst, src):
+        w = self.w
+        isa = self.opts.isa
+        vw = isa.width
+        co = layer.c_out
+        co4 = co - co % vw
+        act = layer.activation if layer.activation != "softmax" else None
+        w.open("")
+        for kg in range(0, co4, vw):
+            if literals:
+                w(f"{isa.reg} v{kg} = "
+                  f"{isa.set_lits(B_[kg:kg + vw])};")
+            else:
+                w(f"{isa.reg} v{kg} = {isa.load(f'{bname}[{kg}]')};")
+        for n, m, o in self._taps(layer, i, j, static_ij, in_bounds):
+            xv = f"{src}[{x_index(i, j, n, m, o)}]"
+            w(f"{{ const {isa.reg} xb = {isa.set1(xv)};")
+            for kg in range(0, co4, vw):
+                if literals:
+                    wreg = isa.set_lits(W_[n, m, o, kg:kg + vw])
+                else:
+                    off = ((n * layer.kw + m) * layer.c_in + o) * co + kg
+                    wreg = isa.load(f"{wname}[{off}]")
+                w(f"  v{kg} = {isa.fmadd('xb', wreg, f'v{kg}')};")
+            w("}")
+        for kg in range(0, co4, vw):
+            for ln in self.act_sse(f"v{kg}", act, layer.alpha):
+                w(ln)
+            w(isa.store(f"{dst}[{out_index(i, j, kg)}]", f"v{kg}"))
+        # scalar tail
+        for k in range(co4, co):
+            bias = _flit(B_[k]) if literals else f"{bname}[{k}]"
+            w(f"float t{k} = {bias};")
+            for n, m, o in self._taps(layer, i, j, static_ij, in_bounds):
+                xv = f"{src}[{x_index(i, j, n, m, o)}]"
+                wv = (_flit(W_[n, m, o, k]) if literals
+                      else f"{wname}[{((n * layer.kw + m) * layer.c_in + o) * co + k}]")
+                w(f"t{k} += {xv} * {wv};")
+            w(f"{dst}[{out_index(i, j, k)}] = "
+              f"{self.act_scalar(f't{k}', act, layer.alpha)};")
+        w.close()
+
+    # -- pooling / elementwise / softmax / dense -----------------------------
+
+    def emit_maxpool(self, layer: MaxPool, in_shape, src: str, dst: str) -> None:
+        w, opts = self.w, self.opts
+        h, wdt, c = in_shape
+        oh, ow, co = layer.out_shape(in_shape)
+        kh, kw_ = layer.size
+        sh, sw = layer.strides
+        level = opts.level_for(layer.name)
+        while level is not None and estimate_terms(layer, in_shape, level) > opts.term_budget:
+            level = {0: 1, 1: 2, 2: None}[level]
+        w(f"/* MaxPool {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} level={level} */")
+
+        def body(i, j):
+            isa = opts.isa
+            if isa is not None and c % isa.width == 0:
+                w.open("")
+                for kg in range(0, c, isa.width):
+                    first = True
+                    for n in range(kh):
+                        for m in range(kw_):
+                            idx = x_idx(i, j, n, m, kg)
+                            if first:
+                                w(f"{isa.reg} p{kg} = "
+                                  f"{isa.load(f'{src}[{idx}]')};")
+                                first = False
+                            else:
+                                w(f"p{kg} = {isa.vmax(f'p{kg}', isa.load(f'{src}[{idx}]'))};")
+                    w(isa.store(f"{dst}[{o_idx(i, j, kg)}]", f"p{kg}"))
+                w.close()
+            else:
+                w.open("")
+                for k in range(c):
+                    first = True
+                    for n in range(kh):
+                        for m in range(kw_):
+                            idx = x_idx(i, j, n, m, k)
+                            if first:
+                                w(f"float q{k} = {src}[{idx}];")
+                                first = False
+                            else:
+                                # P2: ternary, not an if
+                                w(f"q{k} = {src}[{idx}] > q{k} ? "
+                                  f"{src}[{idx}] : q{k};")
+                    w(f"{dst}[{o_idx(i, j, k)}] = q{k};")
+                w.close()
+
+        def x_idx(i, j, n, m, k):
+            if isinstance(i, int) and isinstance(j, int):
+                return str(((i * sh + n) * wdt + (j * sw + m)) * c + k)
+            return (f"(({i} * {sh} + {n}) * {wdt} + ({j} * {sw} + {m})) "
+                    f"* {c} + {k}")
+
+        def o_idx(i, j, k):
+            if isinstance(i, int) and isinstance(j, int):
+                return str((i * ow + j) * co + k)
+            return f"(({i}) * {ow} + ({j})) * {co} + {k}"
+
+        if level == 0:
+            for i in range(oh):
+                for j in range(ow):
+                    body(i, j)
+        elif level == 1:
+            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            for j in range(ow):
+                body("i", j)
+            w.close()
+        elif level == 2:
+            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            body("i", "j")
+            w.close(); w.close()
+        else:
+            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            if opts.isa is not None and c % opts.isa.width == 0:
+                isa = opts.isa
+                w.open(f"for (int k = 0; k < {c}; k += {isa.width})")
+                w(f"{isa.reg} p = "
+                  f"{isa.load(f'{src}[' + x_idx('i', 'j', 0, 0, 0) + ' + k]')};")
+                for n in range(kh):
+                    for m in range(kw_):
+                        if n == 0 and m == 0:
+                            continue
+                        ld = isa.load(f"{src}[" + x_idx('i', 'j', n, m, 0)
+                                      + " + k]")
+                        w(f"p = {isa.vmax('p', ld)};")
+                w(isa.store(f"{dst}[(i * {ow} + j) * {co} + k]", "p"))
+                w.close()
+            else:
+                w.open(f"for (int k = 0; k < {c}; ++k)")
+                w(f"float q = {src}[{x_idx('i', 'j', 0, 0, 0)} + k];")
+                for n in range(kh):
+                    for m in range(kw_):
+                        if n == 0 and m == 0:
+                            continue
+                        w(f"q = {src}[{x_idx('i', 'j', n, m, 0)} + k] > q ? "
+                          f"{src}[{x_idx('i', 'j', n, m, 0)} + k] : q;")
+                w(f"{dst}[(i * {ow} + j) * {co} + k] = q;")
+                w.close()
+            w.close(); w.close()
+
+    def emit_elementwise(self, in_shape, src, dst, act, alpha) -> None:
+        w = self.w
+        n = int(np.prod(in_shape))
+        isa = self.opts.isa
+        if isa is not None and n % isa.width == 0 and act in (
+                "relu", "leaky_relu"):
+            w.open(f"for (int z = 0; z < {n}; z += {isa.width})")
+            w(f"{isa.reg} v = {isa.load(f'{src}[z]')};")
+            for ln in self.act_sse("v", act, alpha):
+                w(ln)
+            w(isa.store(f"{dst}[z]", "v"))
+            w.close()
+        else:
+            w(f"for (int z = 0; z < {n}; ++z) {dst}[z] = "
+              f"{self.act_scalar(f'{src}[z]', act, alpha)};")
+
+    def emit_batchnorm(self, layer: BatchNorm, in_shape, src, dst) -> None:
+        w = self.w
+        scale, shift = layer.scale_shift()
+        c = in_shape[2]
+        sname = self.const_array(f"s{self.uid()}", scale)
+        tname = self.const_array(f"t{self.uid()}", shift)
+        n = int(np.prod(in_shape))
+        w(f"for (int z = 0; z < {n}; ++z) "
+          f"{dst}[z] = {src}[z] * {sname}[z % {c}] + {tname}[z % {c}];")
+
+    def emit_softmax(self, shape, buf) -> None:
+        w = self.w
+        h, wdt, c = shape
+        w(f"/* softmax over {c} channels */")
+        w.open(f"for (int p = 0; p < {h * wdt}; ++p)")
+        w(f"float mx = {buf}[p * {c}];")
+        w(f"for (int k = 1; k < {c}; ++k) "
+          f"mx = {buf}[p * {c} + k] > mx ? {buf}[p * {c} + k] : mx;")
+        w("float s = 0.0f;")
+        w(f"for (int k = 0; k < {c}; ++k) "
+          f"{{ {buf}[p * {c} + k] = expf({buf}[p * {c} + k] - mx); "
+          f"s += {buf}[p * {c} + k]; }}")
+        w(f"for (int k = 0; k < {c}; ++k) {buf}[p * {c} + k] /= s;")
+        w.close()
+
+    def emit_dense(self, layer: Dense, in_shape, src, dst) -> None:
+        w = self.w
+        d_in, d_out = layer.weights.shape
+        wname = self.const_array(f"w{self.uid()}", layer.weights)
+        bname = self.const_array(f"b{self.uid()}", layer.bias)
+        act = layer.activation if layer.activation != "softmax" else None
+        w(f"/* Dense {layer.name}: {d_in}->{d_out} */")
+        w.open(f"for (int k = 0; k < {d_out}; ++k)")
+        w(f"float acc = {bname}[k];")
+        w(f"for (int z = 0; z < {d_in}; ++z) "
+          f"acc += {src}[z] * {wname}[z * {d_out} + k];")
+        w(f"{dst}[k] = {self.act_scalar('acc', act, layer.alpha)};")
+        w.close()
+        if layer.activation == "softmax":
+            self.emit_softmax((1, 1, d_out), dst)
+
+    # -- driver ---------------------------------------------------------------
+
+    def generate(self) -> str:
+        g, opts = self.g, self.opts
+        shapes = g.shapes()
+        body_layers = [
+            (l, shapes[i - 1] if i > 0 else g.input_shape, shapes[i])
+            for i, l in enumerate(g.layers)
+            if not isinstance(l, (Input, Dropout, Flatten))
+        ]
+        # buffer per producing layer; last one writes to `out`
+        src = "x"
+        self.w.open(f"void {opts.func_name}(const float *restrict x, "
+                    f"float *restrict out)")
+        for idx, (layer, ish, osh) in enumerate(body_layers):
+            last = idx == len(body_layers) - 1
+            dst = "out" if last else self.buffer(
+                f"buf{self.uid()}", int(np.prod(osh)))
+            if isinstance(layer, Conv2D):
+                self.emit_conv(layer, ish, src, dst)
+            elif isinstance(layer, MaxPool):
+                self.emit_maxpool(layer, ish, src, dst)
+            elif isinstance(layer, ReLU):
+                self.emit_elementwise(ish, src, dst, "relu", 0.0)
+            elif isinstance(layer, LeakyReLU):
+                self.emit_elementwise(ish, src, dst, "leaky_relu", layer.alpha)
+            elif isinstance(layer, Softmax):
+                if src != dst:
+                    self.w(f"for (int z = 0; z < {int(np.prod(ish))}; ++z) "
+                           f"{dst}[z] = {src}[z];")
+                self.emit_softmax(ish, dst)
+            elif isinstance(layer, BatchNorm):
+                self.emit_batchnorm(layer, ish, src, dst)
+            elif isinstance(layer, Dense):
+                self.emit_dense(layer, ish, src, dst)
+            else:  # pragma: no cover
+                raise TypeError(f"cgen: unhandled layer {type(layer).__name__}")
+            src = dst
+        self.w.close()
+
+        hdr = _W()
+        hdr("/* Generated by NNCG-JAX (repro of Urbann et al., 2020).")
+        hdr(f" * net: in {g.input_shape} -> out {g.output_shape}, "
+            f"{g.param_count()} params, simd={opts.simd} */")
+        hdr("#include <math.h>")
+        if opts.isa is not None:
+            hdr(f"#include <{opts.isa.header}>")
+        hdr("")
+        return hdr.text() + self.decls.text() + "\n" + self.w.text()
+
+
+def generate_c(graph: CNNGraph, opts: Optional[CodegenOptions] = None) -> str:
+    """Generate the single ANSI C file for a trained CNN."""
+    return CGenerator(graph, opts or CodegenOptions()).generate()

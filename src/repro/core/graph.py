@@ -1,0 +1,263 @@
+"""Layer-graph IR for trained CNNs (the NNCG front-end).
+
+The paper compiles a *trained* Keras model; here the IR is framework-free:
+a sequential list of layers carrying trained weights as numpy arrays.
+Layout is channels-last (NHWC / HWIO) throughout — the paper's P4
+principle (vectorize over output channels) requires ``c_out`` to be the
+fastest-varying dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Shape3 = Tuple[int, int, int]  # (h, w, c)
+
+
+def _pair(v) -> Tuple[int, int]:
+    if isinstance(v, (tuple, list)):
+        a, b = v
+        return int(a), int(b)
+    return int(v), int(v)
+
+
+@dataclass
+class Layer:
+    """Base class. ``out_shape`` is filled in by ``CNNGraph.infer_shapes``."""
+
+    name: str = field(default="", kw_only=True)
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:  # pragma: no cover
+        raise NotImplementedError
+
+    def param_count(self) -> int:
+        return 0
+
+
+@dataclass
+class Input(Layer):
+    shape: Shape3 = (1, 1, 1)
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return tuple(int(s) for s in self.shape)
+
+
+@dataclass
+class Conv2D(Layer):
+    """2-D convolution, weights HWIO ``(kh, kw, c_in, c_out)``.
+
+    ``activation`` holds a fused activation (None | 'relu' | 'leaky_relu'
+    | 'softmax') — the fusion pass moves standalone activation layers in
+    here so the code generator emits a single fused loop nest (paper
+    §II-B.1).
+    """
+
+    weights: np.ndarray = None
+    bias: np.ndarray = None
+    strides: Tuple[int, int] = (1, 1)
+    padding: str = "valid"  # 'same' | 'valid'
+    activation: Optional[str] = None
+    alpha: float = 0.1  # leaky-ReLU slope
+
+    def __post_init__(self):
+        self.strides = _pair(self.strides)
+        if not hasattr(self.weights, "aval"):  # leave jax tracers alone
+            self.weights = np.asarray(self.weights, dtype=np.float32)
+        if self.bias is None:
+            self.bias = np.zeros(self.weights.shape[-1], dtype=np.float32)
+        if not hasattr(self.bias, "aval"):
+            self.bias = np.asarray(self.bias, dtype=np.float32)
+        assert self.weights.ndim == 4, "Conv2D weights must be HWIO"
+        assert self.padding in ("same", "valid")
+
+    @property
+    def kh(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def kw(self) -> int:
+        return self.weights.shape[1]
+
+    @property
+    def c_in(self) -> int:
+        return self.weights.shape[2]
+
+    @property
+    def c_out(self) -> int:
+        return self.weights.shape[3]
+
+    def pad_amounts(self, in_shape: Shape3) -> Tuple[int, int, int, int]:
+        """(top, bottom, left, right) zero padding (paper Eq. 1)."""
+        if self.padding == "valid":
+            return (0, 0, 0, 0)
+        h, w, _ = in_shape
+        sh, sw = self.strides
+        out_h = -(-h // sh)  # ceil
+        out_w = -(-w // sw)
+        pad_h = max((out_h - 1) * sh + self.kh - h, 0)
+        pad_w = max((out_w - 1) * sw + self.kw - w, 0)
+        return (pad_h // 2, pad_h - pad_h // 2, pad_w // 2, pad_w - pad_w // 2)
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        h, w, c = in_shape
+        assert c == self.c_in, f"{self.name}: c_in {self.c_in} != input {c}"
+        sh, sw = self.strides
+        pt, pb, pl, pr = self.pad_amounts(in_shape)
+        oh = (h + pt + pb - self.kh) // sh + 1
+        ow = (w + pl + pr - self.kw) // sw + 1
+        return (oh, ow, self.c_out)
+
+    def param_count(self) -> int:
+        return int(self.weights.size + self.bias.size)
+
+
+@dataclass
+class Dense(Layer):
+    """Fully connected: weights ``(d_in, d_out)``; input is flattened."""
+
+    weights: np.ndarray = None
+    bias: np.ndarray = None
+    activation: Optional[str] = None
+    alpha: float = 0.1
+
+    def __post_init__(self):
+        if not hasattr(self.weights, "aval"):
+            self.weights = np.asarray(self.weights, dtype=np.float32)
+        if self.bias is None:
+            self.bias = np.zeros(self.weights.shape[-1], dtype=np.float32)
+        if not hasattr(self.bias, "aval"):
+            self.bias = np.asarray(self.bias, dtype=np.float32)
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        d_in = int(np.prod(in_shape))
+        assert d_in == self.weights.shape[0]
+        return (1, 1, int(self.weights.shape[1]))
+
+    def param_count(self) -> int:
+        return int(self.weights.size + self.bias.size)
+
+
+@dataclass
+class MaxPool(Layer):
+    size: Tuple[int, int] = (2, 2)
+    strides: Optional[Tuple[int, int]] = None  # default = size
+
+    def __post_init__(self):
+        self.size = _pair(self.size)
+        self.strides = _pair(self.strides) if self.strides is not None else self.size
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        h, w, c = in_shape
+        kh, kw = self.size
+        sh, sw = self.strides
+        return ((h - kh) // sh + 1, (w - kw) // sw + 1, c)
+
+
+@dataclass
+class ReLU(Layer):
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return in_shape
+
+
+@dataclass
+class LeakyReLU(Layer):
+    alpha: float = 0.1
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return in_shape
+
+
+@dataclass
+class Softmax(Layer):
+    """Softmax over the channel dimension."""
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return in_shape
+
+
+@dataclass
+class BatchNorm(Layer):
+    """Inference-mode batch normalization over channels (paper §II-B.4)."""
+
+    mean: np.ndarray = None
+    var: np.ndarray = None
+    gamma: np.ndarray = None
+    beta: np.ndarray = None
+    eps: float = 1e-3
+
+    def __post_init__(self):
+        self.mean = np.asarray(self.mean, dtype=np.float32)
+        self.var = np.asarray(self.var, dtype=np.float32)
+        if self.gamma is None:
+            self.gamma = np.ones_like(self.mean)
+        if self.beta is None:
+            self.beta = np.zeros_like(self.mean)
+        self.gamma = np.asarray(self.gamma, dtype=np.float32)
+        self.beta = np.asarray(self.beta, dtype=np.float32)
+
+    def scale_shift(self) -> Tuple[np.ndarray, np.ndarray]:
+        """y = scale * x + shift."""
+        inv = self.gamma / np.sqrt(self.var + self.eps)
+        return inv.astype(np.float32), (self.beta - self.mean * inv).astype(np.float32)
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return in_shape
+
+    def param_count(self) -> int:
+        return int(self.mean.size * 4)
+
+
+@dataclass
+class Dropout(Layer):
+    rate: float = 0.5
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return in_shape
+
+
+@dataclass
+class Flatten(Layer):
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return (1, 1, int(np.prod(in_shape)))
+
+
+@dataclass
+class CNNGraph:
+    """A sequential CNN: ``layers[0]`` must be :class:`Input`."""
+
+    layers: List[Layer]
+
+    def __post_init__(self):
+        assert self.layers and isinstance(self.layers[0], Input)
+        for i, l in enumerate(self.layers):
+            if not l.name:
+                l.name = f"{type(l).__name__.lower()}_{i}"
+
+    @property
+    def input_shape(self) -> Shape3:
+        return self.layers[0].shape
+
+    def shapes(self) -> List[Shape3]:
+        """Per-layer output shapes (``shapes[i]`` = output of layer i)."""
+        out: List[Shape3] = []
+        cur = self.input_shape
+        for l in self.layers:
+            cur = l.out_shape(cur)
+            out.append(cur)
+        return out
+
+    @property
+    def output_shape(self) -> Shape3:
+        return self.shapes()[-1]
+
+    def param_count(self) -> int:
+        return sum(l.param_count() for l in self.layers)
+
+    def replace(self, layers: Sequence[Layer]) -> "CNNGraph":
+        return CNNGraph(list(layers))
+
+    def copy(self) -> "CNNGraph":
+        return CNNGraph([dataclasses.replace(l) for l in self.layers])

@@ -1,0 +1,186 @@
+"""Pure-JAX executor for :class:`repro.core.graph.CNNGraph`.
+
+Serves two roles:
+  1. the numerical *oracle* the generated C is validated against, and
+  2. the **XLA baseline** for the paper's speed-up tables — the paper's
+     main comparison is TensorFlow XLA; ``jax.jit`` is the same compiler
+     stack, so ``jit(forward)`` is the modern equivalent of the tfcompile
+     object file.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import (
+    BatchNorm,
+    CNNGraph,
+    Conv2D,
+    Dense,
+    Dropout,
+    Flatten,
+    Input,
+    LeakyReLU,
+    MaxPool,
+    ReLU,
+    Softmax,
+)
+
+_DIMS = ("NHWC", "HWIO", "NHWC")
+
+
+def _activation(x: jnp.ndarray, kind: Optional[str], alpha: float) -> jnp.ndarray:
+    if kind is None:
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "leaky_relu":
+        # branch-free select — the paper's P2 (conditional move) principle
+        return jnp.where(x > 0, x, alpha * x)
+    if kind == "softmax":
+        return jax.nn.softmax(x, axis=-1)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def forward(graph: CNNGraph, x: jnp.ndarray) -> jnp.ndarray:
+    """Run the graph on a batched NHWC input ``x``."""
+    assert x.ndim == 4, "expected NHWC batch"
+    for layer in graph.layers:
+        if isinstance(layer, Input):
+            assert x.shape[1:] == tuple(layer.shape), (
+                f"input shape {x.shape[1:]} != {layer.shape}"
+            )
+        elif isinstance(layer, Conv2D):
+            pt, pb, pl, pr = layer.pad_amounts(x.shape[1:])
+            x = jax.lax.conv_general_dilated(
+                x,
+                jnp.asarray(layer.weights),
+                window_strides=layer.strides,
+                padding=((pt, pb), (pl, pr)),
+                dimension_numbers=_DIMS,
+            )
+            x = x + jnp.asarray(layer.bias)
+            x = _activation(x, layer.activation, layer.alpha)
+        elif isinstance(layer, Dense):
+            x = x.reshape(x.shape[0], -1) @ jnp.asarray(layer.weights)
+            x = x + jnp.asarray(layer.bias)
+            x = _activation(x, layer.activation, layer.alpha)
+            x = x.reshape(x.shape[0], 1, 1, -1)
+        elif isinstance(layer, MaxPool):
+            kh, kw = layer.size
+            sh, sw = layer.strides
+            x = jax.lax.reduce_window(
+                x,
+                -jnp.inf,
+                jax.lax.max,
+                window_dimensions=(1, kh, kw, 1),
+                window_strides=(1, sh, sw, 1),
+                padding="VALID",
+            )
+        elif isinstance(layer, ReLU):
+            x = jnp.maximum(x, 0.0)
+        elif isinstance(layer, LeakyReLU):
+            x = jnp.where(x > 0, x, layer.alpha * x)
+        elif isinstance(layer, Softmax):
+            x = jax.nn.softmax(x, axis=-1)
+        elif isinstance(layer, BatchNorm):
+            scale, shift = layer.scale_shift()
+            x = x * jnp.asarray(scale) + jnp.asarray(shift)
+        elif isinstance(layer, Dropout):
+            pass  # identity at inference
+        elif isinstance(layer, Flatten):
+            x = x.reshape(x.shape[0], 1, 1, -1)
+        else:  # pragma: no cover
+            raise TypeError(f"unhandled layer {type(layer).__name__}")
+    return x
+
+
+def make_jit_forward(graph: CNNGraph):
+    """Compile the graph with XLA — weights are baked as constants
+    (paper P3: the trained model is fully known at compile time)."""
+
+    @jax.jit
+    def f(x):
+        return forward(graph, x)
+
+    return f
+
+
+def forward_pallas(graph: CNNGraph, x: jnp.ndarray) -> jnp.ndarray:
+    """Run the CNN through the Pallas TPU kernels (conv2d fused with
+    bias+activation, maxpool) — the TPU-native deployment path of the
+    generated-C artifact. Interpret-mode on CPU; Mosaic on TPU.
+    Expects an optimized graph (BN folded, activations fused)."""
+    from repro.kernels import ops
+    assert x.ndim == 4
+    for layer in graph.layers:
+        if isinstance(layer, Input):
+            continue
+        if isinstance(layer, Conv2D):
+            act = layer.activation if layer.activation != "softmax" else None
+            x = ops.conv2d(x, jnp.asarray(layer.weights),
+                           jnp.asarray(layer.bias), strides=layer.strides,
+                           padding=layer.padding, act=act,
+                           alpha=layer.alpha)
+            if layer.activation == "softmax":
+                x = jax.nn.softmax(x, axis=-1)
+        elif isinstance(layer, MaxPool):
+            x = ops.maxpool2d(x, size=layer.size, strides=layer.strides)
+        elif isinstance(layer, ReLU):
+            x = jnp.maximum(x, 0.0)
+        elif isinstance(layer, LeakyReLU):
+            x = jnp.where(x > 0, x, layer.alpha * x)
+        elif isinstance(layer, Softmax):
+            x = jax.nn.softmax(x, axis=-1)
+        elif isinstance(layer, (Dropout, BatchNorm, Dense, Flatten)):
+            raise NotImplementedError(
+                f"run passes.optimize first ({type(layer).__name__})")
+    return x
+
+
+def extract_params(graph: CNNGraph) -> dict:
+    """Trainable weights as a pytree keyed by layer name."""
+    out = {}
+    for layer in graph.layers:
+        if isinstance(layer, (Conv2D, Dense)):
+            out[layer.name] = {"w": jnp.asarray(layer.weights),
+                               "b": jnp.asarray(layer.bias)}
+    return out
+
+
+def insert_params(graph: CNNGraph, params: dict) -> CNNGraph:
+    """Write trained weights back into a copy of the graph — the
+    'trained Keras model' NNCG consumes, produced by our own trainer."""
+    g = graph.copy()
+    for layer in g.layers:
+        if layer.name in params:
+            layer.weights = np.asarray(params[layer.name]["w"], np.float32)
+            layer.bias = np.asarray(params[layer.name]["b"], np.float32)
+    return g
+
+
+def forward_with_params(graph: CNNGraph, params: dict,
+                        x: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable forward: like :func:`forward` but weights come from
+    the ``params`` pytree (training path)."""
+    import dataclasses as _dc
+    layers = []
+    for layer in graph.layers:
+        if layer.name in params:
+            layer = _dc.replace(layer, weights=params[layer.name]["w"],
+                                bias=params[layer.name]["b"])
+        layers.append(layer)
+    return forward(CNNGraph(layers), x)
+
+
+def predict(graph: CNNGraph, x: np.ndarray) -> np.ndarray:
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    y = make_jit_forward(graph)(jnp.asarray(x, dtype=jnp.float32))
+    y = np.asarray(y)
+    return y[0] if squeeze else y

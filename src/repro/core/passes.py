@@ -1,0 +1,129 @@
+"""Graph rewrite passes (the NNCG optimization pipeline).
+
+These are the paper's compile-time rewrites, applied before code
+generation:
+
+* ``fold_batchnorm``  — paper §II-B.4: bn(conv(x)) = Σ x·(w/σ) − μ/σ,
+  generalized to learnable γ/β.
+* ``remove_dropout``  — dropout is identity at inference.
+* ``fuse_activations`` — standalone ReLU/LeakyReLU/Softmax layers are
+  folded into the preceding Conv2D/Dense so one loop nest computes both
+  (enables the P2 ternary emission in the same code line).
+* ``align_channels`` — paper P4: pad conv output channels to a SIMD
+  multiple (4 for SSSE3, 128 for TPU lanes) with zero filters; downstream
+  layers are widened consistently so numerics are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .graph import (
+    BatchNorm,
+    CNNGraph,
+    Conv2D,
+    Dense,
+    Dropout,
+    Layer,
+    LeakyReLU,
+    MaxPool,
+    ReLU,
+    Softmax,
+)
+
+
+def fold_batchnorm(graph: CNNGraph) -> CNNGraph:
+    """Fold each BatchNorm into the closest preceding Conv2D.
+
+    Layers between the conv and the BN must be channel-preserving and
+    *linear in scale* for the fold to be exact; in the paper's nets BN
+    immediately follows the conv, which is the case we fold. A BN with no
+    foldable conv is kept (the executors handle it directly).
+    """
+    layers = [dataclasses.replace(l) for l in graph.layers]
+    out: List[Layer] = []
+    for layer in layers:
+        if isinstance(layer, BatchNorm) and out and isinstance(out[-1], Conv2D) \
+                and out[-1].activation is None:
+            conv = out[-1]
+            scale, shift = layer.scale_shift()
+            conv.weights = (conv.weights * scale[None, None, None, :]).astype(np.float32)
+            conv.bias = (conv.bias * scale + shift).astype(np.float32)
+        else:
+            out.append(layer)
+    return graph.replace(out)
+
+
+def remove_dropout(graph: CNNGraph) -> CNNGraph:
+    return graph.replace([l for l in graph.layers if not isinstance(l, Dropout)])
+
+
+def fuse_activations(graph: CNNGraph) -> CNNGraph:
+    layers = [dataclasses.replace(l) for l in graph.layers]
+    out: List[Layer] = []
+    for layer in layers:
+        prev = out[-1] if out else None
+        fusible = isinstance(prev, (Conv2D, Dense)) and prev.activation is None
+        if fusible and isinstance(layer, ReLU):
+            prev.activation = "relu"
+        elif fusible and isinstance(layer, LeakyReLU):
+            prev.activation = "leaky_relu"
+            prev.alpha = layer.alpha
+        elif fusible and isinstance(layer, Softmax):
+            prev.activation = "softmax"
+        else:
+            out.append(layer)
+    return graph.replace(out)
+
+
+def align_channels(graph: CNNGraph, multiple: int = 4) -> CNNGraph:
+    """Pad every Conv2D's ``c_out`` (except the last conv) to a multiple.
+
+    Zero filters produce zero channels; ReLU/LeakyReLU/MaxPool map zero to
+    zero, and the next conv's weights gain zero-weight input channels, so
+    the visible outputs are bit-identical. Softmax is *not* scale-free, so
+    the conv feeding a softmax (or the network output) is never padded.
+    """
+    layers = [dataclasses.replace(l) for l in graph.layers]
+    conv_idx = [i for i, l in enumerate(layers) if isinstance(l, Conv2D)]
+    for pos, i in enumerate(conv_idx):
+        conv = layers[i]
+        pad = (-conv.c_out) % multiple
+        if pad == 0:
+            continue
+        is_last_conv = pos == len(conv_idx) - 1
+        # anything non-channel-preserving (Dense/Flatten/Softmax) after this
+        # conv and before the next conv blocks padding
+        nxt = conv_idx[pos + 1] if not is_last_conv else len(layers)
+        between_ok = all(
+            isinstance(layers[j], (ReLU, LeakyReLU, MaxPool, BatchNorm, Dropout))
+            for j in range(i + 1, nxt)
+        )
+        if is_last_conv or not between_ok:
+            continue
+        conv.weights = np.pad(conv.weights, ((0, 0),) * 3 + ((0, pad),)).astype(np.float32)
+        conv.bias = np.pad(conv.bias, (0, pad)).astype(np.float32)
+        for j in range(i + 1, nxt):
+            bn = layers[j]
+            if isinstance(bn, BatchNorm):
+                bn.mean = np.pad(bn.mean, (0, pad))
+                bn.var = np.pad(bn.var, (0, pad), constant_values=1.0)
+                bn.gamma = np.pad(bn.gamma, (0, pad))
+                bn.beta = np.pad(bn.beta, (0, pad))
+        nxt_conv = layers[conv_idx[pos + 1]]
+        nxt_conv.weights = np.pad(
+            nxt_conv.weights, ((0, 0), (0, 0), (0, pad), (0, 0))
+        ).astype(np.float32)
+    return graph.replace(layers)
+
+
+def optimize(graph: CNNGraph, simd_multiple: int = 4) -> CNNGraph:
+    """The full NNCG pipeline in paper order."""
+    g = remove_dropout(graph)
+    g = fold_batchnorm(g)
+    g = fuse_activations(g)
+    if simd_multiple > 1:
+        g = align_channels(g, simd_multiple)
+    return g

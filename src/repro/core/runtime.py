@@ -1,0 +1,138 @@
+"""Compile-and-load harness for NNCG-generated C.
+
+The paper's deployment story: the generated file has no dependencies
+beyond ``math.h``/``libm`` (plus SSE intrinsics when enabled), so any
+ANSI C compiler — native or cross — produces the executable.  Here we
+compile a shared object with the host ``cc`` and bind it via ctypes so
+tests/benchmarks can call it directly against the JAX oracle.
+"""
+from __future__ import annotations
+
+import ctypes
+import hashlib
+import os
+import subprocess
+import tempfile
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .cgen import CodegenOptions, generate_c
+from .graph import CNNGraph
+
+_CACHE_DIR = os.path.join(tempfile.gettempdir(), "nncg_cache")
+
+
+def _cc() -> str:
+    return os.environ.get("CC", "cc")
+
+
+def compile_c(source: str, *, simd: str = "sse",
+              extra_flags: Sequence[str] = ()) -> str:
+    """Compile C source to a shared object; returns the .so path."""
+    os.makedirs(_CACHE_DIR, exist_ok=True)
+    key = hashlib.sha256(
+        (source + repr(extra_flags)).encode()).hexdigest()[:16]
+    so_path = os.path.join(_CACHE_DIR, f"nncg_{key}.so")
+    if os.path.exists(so_path):
+        return so_path
+    c_path = os.path.join(_CACHE_DIR, f"nncg_{key}.c")
+    with open(c_path, "w") as f:
+        f.write(source)
+    flags = ["-O3", "-fPIC", "-shared", "-std=c99"]
+    from .cgen import ISAS
+    if simd in ISAS:
+        flags.extend(ISAS[simd].cc_flags)
+    cmd = [_cc(), *flags, *extra_flags, c_path, "-o", so_path, "-lm"]
+    t0 = time.time()
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"cc failed ({' '.join(cmd)}):\n{proc.stderr[:4000]}")
+    compile_s = time.time() - t0
+    with open(so_path + ".meta", "w") as f:
+        f.write(f"compile_s={compile_s:.3f} bytes={len(source)}\n")
+    return so_path
+
+
+@dataclass
+class CompiledNet:
+    """A callable wrapping the generated ``void f(const float*, float*)``."""
+
+    so_path: str
+    func_name: str
+    in_size: int
+    out_size: int
+    c_source_bytes: int
+
+    def __post_init__(self):
+        lib = ctypes.CDLL(self.so_path)
+        self._fn = getattr(lib, self.func_name)
+        self._fn.restype = None
+        self._fn.argtypes = [ctypes.POINTER(ctypes.c_float),
+                             ctypes.POINTER(ctypes.c_float)]
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        x = np.ascontiguousarray(x, dtype=np.float32)
+        assert x.size == self.in_size, (x.size, self.in_size)
+        out = np.empty(self.out_size, dtype=np.float32)
+        self._fn(x.ctypes.data_as(ctypes.POINTER(ctypes.c_float)),
+                 out.ctypes.data_as(ctypes.POINTER(ctypes.c_float)))
+        return out
+
+    def time_per_call_us(self, x: np.ndarray, iters: int = 2000,
+                         warmup: int = 50) -> float:
+        x = np.ascontiguousarray(x, dtype=np.float32)
+        out = np.empty(self.out_size, dtype=np.float32)
+        xp = x.ctypes.data_as(ctypes.POINTER(ctypes.c_float))
+        op = out.ctypes.data_as(ctypes.POINTER(ctypes.c_float))
+        fn = self._fn
+        for _ in range(warmup):
+            fn(xp, op)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(xp, op)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+
+def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
+          extra_flags: Sequence[str] = ()) -> CompiledNet:
+    """graph -> C -> .so -> callable."""
+    opts = opts or CodegenOptions()
+    src = generate_c(graph, opts)
+    so = compile_c(src, simd=opts.simd, extra_flags=extra_flags)
+    return CompiledNet(
+        so_path=so,
+        func_name=opts.func_name,
+        in_size=int(np.prod(graph.input_shape)),
+        out_size=int(np.prod(graph.output_shape)),
+        c_source_bytes=len(src),
+    )
+
+
+def host_supports_ssse3() -> bool:
+    return _cpu_has("ssse3")
+
+
+def host_supports_avx2() -> bool:
+    return _cpu_has("avx2") and _cpu_has("fma")
+
+
+def best_isa() -> str:
+    """Pick the widest supported vector mode (paper: 'extension of NNCG
+    to other instruction sets like AVX can be realized rapidly')."""
+    if host_supports_avx2():
+        return "avx"
+    if host_supports_ssse3():
+        return "sse"
+    return "structured"
+
+
+def _cpu_has(flag: str) -> bool:
+    try:
+        with open("/proc/cpuinfo") as f:
+            return flag in f.read()
+    except OSError:  # pragma: no cover
+        return False

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused Conv2D + bias + (leaky-)ReLU.
+
+This is the paper's compute hot spot (§II-B.1) rebuilt TPU-native instead
+of ported: the CPU version vectorizes over output channels with SSE
+(groups of 4); here ``c_out`` lives on the 128-wide lane dimension and
+each kernel invocation computes the convolution as an **implicit GEMM** —
+one MXU ``dot`` per filter tap over the ``c_in`` contraction — which is
+how a systolic array wants to see a convolution (no im2col
+materialization in HBM).
+
+NNCG principle mapping:
+  * P1 (unroll/caching): the tap loop is a *static* Python loop — fully
+    unrolled at trace time; the whole padded image tile stays resident in
+    VMEM across taps (the cache-residency side of the trade-off).
+  * P2 (cond-move):     activation is a ``jnp.where`` → VPU select.
+  * P3 (constants):     shapes/taps/strides are compile-time constants;
+    BN is folded into weights/bias *before* the call (passes.py).
+  * P4 (SIMD layout):   NHWC with ``c_out`` blocked on lanes,
+    ``block_cout`` a multiple of 128 where the layer allows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
+                 sh: int, sw: int, oh: int, ow: int,
+                 act: Optional[str], alpha: float):
+    ci = x_ref.shape[-1]
+    tc = o_ref.shape[-1]
+    x = x_ref[0]  # (HP, WP, CI) — whole padded tile, VMEM-resident
+    acc = jnp.zeros((oh * ow, tc), jnp.float32)
+    for n in range(kh):          # P1: static tap loop, unrolled at trace
+        for m in range(kw):
+            xs = jax.lax.slice(
+                x, (n, m, 0),
+                (n + (oh - 1) * sh + 1, m + (ow - 1) * sw + 1, ci),
+                (sh, sw, 1))  # (OH, OW, CI)
+            acc += jnp.dot(xs.reshape(oh * ow, ci),
+                           w_ref[n, m].astype(x.dtype),
+                           preferred_element_type=jnp.float32)
+    acc = acc + b_ref[0][None, :].astype(jnp.float32)
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act == "leaky_relu":
+        acc = jnp.where(acc > 0, acc, alpha * acc)  # P2: select, no branch
+    o_ref[0] = acc.reshape(oh, ow, tc).astype(o_ref.dtype)
+
+
+def conv2d_pallas(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                  strides: Tuple[int, int] = (1, 1),
+                  padding: str = "valid",
+                  act: Optional[str] = None, alpha: float = 0.1,
+                  block_cout: Optional[int] = None,
+                  interpret: bool = True) -> jax.Array:
+    """x: (N,H,W,CI) NHWC; w: (KH,KW,CI,CO) HWIO; b: (CO,)."""
+    n, h, wd, ci = x.shape
+    kh, kw, wci, co = w.shape
+    assert wci == ci
+    sh, sw = strides
+    if padding == "same":
+        out_h, out_w = -(-h // sh), -(-wd // sw)
+        ph = max((out_h - 1) * sh + kh - h, 0)
+        pw = max((out_w - 1) * sw + kw - wd, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+        h, wd = h + ph, wd + pw
+    oh = (h - kh) // sh + 1
+    ow = (wd - kw) // sw + 1
+    tc = block_cout or min(co, 128)
+    if co % tc:
+        tc = co
+    b2 = b.reshape(1, co)
+    kern = functools.partial(_conv_kernel, kh=kh, kw=kw, sh=sh, sw=sw,
+                             oh=oh, ow=ow, act=act, alpha=alpha)
+    return pl.pallas_call(
+        kern,
+        grid=(n, co // tc),
+        in_specs=[
+            pl.BlockSpec((1, h, wd, ci), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, tc), lambda i, j: (0, 0, 0, j)),
+            pl.BlockSpec((1, tc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, tc), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, co), x.dtype),
+        interpret=interpret,
+    )(x, w, b2)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash attention (prefill) with causal + sliding
+window masks and GQA.
+
+The LM-side hot spot. Online-softmax tiling: the KV sequence is the
+innermost (sequential) grid axis; running (m, l, acc) live in VMEM
+scratch across KV steps, so the O(S^2) score matrix never exists in HBM.
+
+NNCG principle mapping: masks are built from iota arithmetic and applied
+with ``jnp.where`` — branch-free (P2); the (causal, window, GQA group)
+structure is compile-time constant (P3); block shapes put the MXU dims on
+(128, 128) tiles (P4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  bq: int, bk: int, n_kv_blocks: int):
+    sb = pl.program_id(3)
+    tb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # (BQ, D)
+    k = k_ref[0, 0]  # (BK, D)
+    v = v_ref[0, 0]  # (BK, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qi = tb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = sb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)  # kill fully-masked rows exactly
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(sb == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked query rows -> 0
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    assert t % bq == 0 and s % bk == 0, "pad sequence to block multiples"
+    scale = scale if scale is not None else d ** -0.5
+    n_kv_blocks = s // bk
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv_blocks=n_kv_blocks)
+    return pl.pallas_call(
+        kern,
+        grid=(b, hq, t // bq, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, tb, sb: (bi, hi, tb, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, tb, sb: (bi, hi // group, sb, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, tb, sb: (bi, hi // group, sb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, tb, sb: (bi, hi, tb, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

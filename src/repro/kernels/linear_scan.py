@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: chunked diagonal-decay linear-attention scan.
+
+One kernel serves both SSM families in the pool:
+
+  * **Mamba2**: per-head scalar decay ``a_t`` (broadcast over N),
+    B_t -> ``k``, C_t -> ``r``, x_t -> ``v``.
+  * **RWKV6**:  data-dependent per-channel decay ``w_t`` -> ``decay``,
+    key/value/receptance map directly.
+
+Recurrence (per head, state S in R^{N x M}):
+
+    S_t = diag(decay_t) @ S_{t-1} + k_t^T v_t
+    y_t = r_t @ S_t
+
+The sequence is chunked on the innermost grid axis; the state is VMEM
+scratch carried across sequential grid steps — the TPU version of the
+paper's "keep the working set cache-resident across the unrolled loop"
+(P1/P3: chunk size, head count and state width are compile-time
+constants; no branches anywhere, P2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(decay_ref, k_ref, v_ref, r_ref, s0_ref, y_ref, sT_ref,
+                 state_scr, *, chunk: int, n_chunks: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    def step(t, state):
+        d = decay_ref[0, t].astype(jnp.float32)   # (H, N)
+        k = k_ref[0, t].astype(jnp.float32)       # (H, N)
+        v = v_ref[0, t].astype(jnp.float32)       # (H, M)
+        r = r_ref[0, t].astype(jnp.float32)       # (H, N)
+        state = d[:, :, None] * state + k[:, :, None] * v[:, None, :]
+        y = (r[:, :, None] * state).sum(axis=1)   # (H, M)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return state
+
+    state = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = state
+
+    @pl.when(cb == n_chunks - 1)
+    def _emit_state():
+        sT_ref[0] = state.astype(sT_ref.dtype)
+
+
+def linear_scan_pallas(decay: jax.Array, k: jax.Array, v: jax.Array,
+                       r: jax.Array, s0: jax.Array, *,
+                       chunk: int = 128, interpret: bool = True):
+    """decay/k/r: (B, T, H, N); v: (B, T, H, M); s0: (B, H, N, M).
+
+    Returns (y: (B, T, H, M), final_state: (B, H, N, M)).
+    """
+    b, t, h, n = k.shape
+    m = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, "pad T to a chunk multiple"
+    n_chunks = t // chunk
+    kern = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+    grid = (b, n_chunks)
+    seq_spec = lambda shape_last2: pl.BlockSpec(
+        (1, chunk) + shape_last2, lambda bi, ci: (bi, ci, 0, 0))
+    state_spec = pl.BlockSpec((1, h, n, m), lambda bi, ci: (bi, 0, 0, 0))
+    y, s_final = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[seq_spec((h, n)), seq_spec((h, n)), seq_spec((h, m)),
+                  seq_spec((h, n)), state_spec],
+        out_specs=[seq_spec((h, m)), state_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, t, h, m), v.dtype),
+                   jax.ShapeDtypeStruct((b, h, n, m), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((h, n, m), jnp.float32)],
+        interpret=interpret,
+    )(decay, k, v, r, s0)
+    return y, s_final

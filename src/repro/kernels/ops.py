@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated in interpret mode per the repo
+policy). On a real TPU backend the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from .conv2d import conv2d_pallas
+from .flash_attention import flash_attention_pallas
+from .linear_scan import linear_scan_pallas
+from .maxpool2d import maxpool2d_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "strides", "padding", "act", "alpha", "block_cout"))
+def conv2d(x, w, b, *, strides: Tuple[int, int] = (1, 1),
+           padding: str = "valid", act: Optional[str] = None,
+           alpha: float = 0.1, block_cout: Optional[int] = None):
+    return conv2d_pallas(x, w, b, strides=strides, padding=padding, act=act,
+                         alpha=alpha, block_cout=block_cout,
+                         interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("size", "strides", "block_c"))
+def maxpool2d(x, *, size: Tuple[int, int] = (2, 2),
+              strides: Optional[Tuple[int, int]] = None,
+              block_c: Optional[int] = None):
+    return maxpool2d_pallas(x, size=size, strides=strides, block_c=block_c,
+                            interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def linear_scan(decay, k, v, r, s0, *, chunk: int = 128):
+    return linear_scan_pallas(decay, k, v, r, s0, chunk=chunk,
+                              interpret=_default_interpret())

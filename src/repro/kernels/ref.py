@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def conv2d_ref(x, w, b, *, strides=(1, 1), padding="valid",
+               act: Optional[str] = None, alpha: float = 0.1):
+    pad = padding.upper()
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=strides, padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "leaky_relu":
+        y = jnp.where(y > 0, y, alpha * y)
+    return y
+
+
+def maxpool2d_ref(x, *, size=(2, 2), strides=None):
+    kh, kw = size
+    sh, sw = strides or size
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, kh, kw, 1), (1, sh, sw, 1), "VALID")
+
+
+def attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
+                  scale: Optional[float] = None):
+    """Dense masked softmax attention; q (B,Hq,T,D), k/v (B,Hkv,S,D)."""
+    b, hq, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhtd,bhsd->bhts", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v.astype(p.dtype)).astype(q.dtype)
+
+
+def linear_scan_ref(decay, k, v, r, s0):
+    """Oracle for the chunked scan: lax.scan over time.
+
+    decay/k/r: (B,T,H,N); v: (B,T,H,M); s0: (B,H,N,M).
+    """
+    def step(state, inp):
+        d, kk, vv, rr = inp
+        state = d[..., None] * state + kk[..., None] * vv[..., None, :]
+        y = (rr[..., None] * state).sum(axis=-2)
+        return state, y
+
+    def one_batch(s0_b, d_b, k_b, v_b, r_b):
+        sT, y = jax.lax.scan(step, s0_b.astype(jnp.float32),
+                             (d_b.astype(jnp.float32), k_b.astype(jnp.float32),
+                              v_b.astype(jnp.float32), r_b.astype(jnp.float32)))
+        return y.astype(v.dtype), sT
+
+    y, sT = jax.vmap(one_batch)(s0, decay, k, v, r)
+    return y, sT

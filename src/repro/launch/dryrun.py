@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any jax import: jax locks the device
+# count on first init. Tests may shrink the placeholder device count:
+if os.environ.get("NNCG_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["NNCG_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell on placeholder host devices, and record memory / cost / collective
+metrics for the roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+      --shape train_4k [--multipod] [--probe] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.lm_archs import ARCHS, SHAPES, all_cells, cell_supported
+from repro.models.config import ModelConfig
+from repro.models.lm import (make_decode_step, make_eval_step,
+                             make_prefill_step, make_train_step)
+from repro.models.stack import init_cache
+from repro.optim import AdamW
+
+from .mesh import dp_axes, make_mesh, make_production_mesh
+from .sharding import MeshPar
+from .specs import input_specs, output_shardings
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*\(?([a-z0-9\[\],{}/ ]+?)\)?\s", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collectives(hlo_text: str):
+    """Sum operand sizes of every collective op in post-SPMD HLO."""
+    per_kind = {}
+    count = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind = m.group(1).lower()
+        shapes = m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+def build_step(cfg: ModelConfig, mesh, kind: str, batch: int, seq: int):
+    par = MeshPar(mesh, cfg)
+    if kind == "train":
+        opt = AdamW()
+        step = make_train_step(cfg, opt, par)
+        return step
+    if kind == "prefill":
+        if cfg.is_encoder:
+            ev = make_eval_step(cfg, par)
+            return lambda params, b: ev(params, {**b, "labels":
+                                                 jnp.zeros((batch, seq),
+                                                           jnp.int32)})
+        pf = make_prefill_step(cfg, max_len=seq, par=par)
+        return pf
+    if kind == "decode":
+        return make_decode_step(cfg, par)
+    raise ValueError(kind)
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for kv in pairs or ():
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             mesh_shape=None, probe: bool = False,
+             mesh_axes=None, overrides=None) -> dict:
+    cfg = ARCHS[arch]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sh = SHAPES[shape_name]
+    kind, seq, gbatch = sh["kind"], sh["seq_len"], sh["global_batch"]
+    if mesh_shape:
+        mesh = make_mesh(mesh_shape, mesh_axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    result = {"arch": arch, "shape": shape_name, "kind": kind,
+              "mesh": list(tuple(mesh.shape.values())),
+              "axes": list(mesh.axis_names),
+              "multi_pod": multi_pod, "probe": probe, "ok": False}
+    t0 = time.time()
+    try:
+        variants = []
+        if probe:
+            # two small *unrolled* lowerings -> per-group cost by finite
+            # difference (scan bodies are counted once by HloCostAnalysis,
+            # so the roofline extrapolates from unrolled groups instead)
+            for g in (1, 2):
+                variants.append((f"g{g}", dataclasses.replace(
+                    cfg, n_layers=len(cfg.prologue) + len(cfg.pattern) * g,
+                    scan_layers=False, grad_accum=1)))
+                # grad_accum=1: the microbatch loop is a lax.scan whose
+                # body HloCostAnalysis counts once — probes must see the
+                # whole batch in one step for correct FLOP extrapolation.
+        else:
+            variants.append(("full", cfg))
+        for tag, vcfg in variants:
+            step = build_step(vcfg, mesh, kind, gbatch, seq)
+            args = input_specs(vcfg, mesh, kind, gbatch, seq)
+            # donate the state/caches buffer (in-place update on device)
+            # and pin output shardings (unpinned outputs can materialize
+            # unsharded gradient/cache trees)
+            donate = {"train": (0,), "decode": (1,)}.get(kind, ())
+            out_sh = output_shardings(vcfg, mesh, kind, args)
+            with mesh:
+                t_lower = time.time()
+                lowered = jax.jit(step, donate_argnums=donate,
+                                  out_shardings=out_sh).lower(*args)
+                t_compile = time.time()
+                compiled = lowered.compile()
+                t_done = time.time()
+                mem = compiled.memory_analysis()
+                cost = compiled.cost_analysis()
+                hlo = compiled.as_text()
+            coll = parse_collectives(hlo)
+            result[tag] = {
+                "lower_s": round(t_compile - t_lower, 2),
+                "compile_s": round(t_done - t_compile, 2),
+                "flops": float(cost.get("flops", -1)),
+                "bytes_accessed": float(cost.get("bytes accessed", -1)),
+                "utilization_ops": {k: v for k, v in cost.items()
+                                    if k.startswith("utilization")},
+                "memory": {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "generated_code_bytes": getattr(
+                        mem, "generated_code_size_in_bytes", None),
+                },
+                "collectives": coll,
+                "hlo_bytes": len(hlo),
+            }
+        result["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    result["total_s"] = round(time.time() - t0, 2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="two unrolled small lowerings for cost extrapolation")
+    ap.add_argument("--mesh", help="debug mesh shape, e.g. 2,2,2")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", dest="overrides",
+                    help="config override, e.g. --set head_dim=128")
+    ap.add_argument("--tag", default=None,
+                    help="output filename tag (default pod/multipod/probe)")
+    args = ap.parse_args()
+
+    mesh_shape = tuple(int(x) for x in args.mesh.split(",")) if args.mesh \
+        else None
+    cells = (all_cells() if args.all
+             else [(args.arch, args.shape)])
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        if not cell_supported(arch, shape):
+            print(f"SKIP {arch} x {shape} (unsupported per DESIGN.md)")
+            continue
+        tag = args.tag or ("probe" if args.probe else
+                           ("multipod" if args.multipod else "pod"))
+        path = os.path.join(args.out, f"{arch}__{shape}__{tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"have {path}")
+            continue
+        r = run_cell(arch, shape, multi_pod=args.multipod,
+                     mesh_shape=mesh_shape, probe=args.probe,
+                     overrides=_parse_overrides(args.overrides))
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        status = "OK" if r["ok"] else f"FAIL {r.get('error', '')[:120]}"
+        print(f"{arch} x {shape} [{tag}] {status} ({r['total_s']}s)",
+              flush=True)
+        if r["ok"]:
+            key = "full" if not args.probe else "g2"
+            m = r[key]["memory"]
+            print(f"   flops={r[key]['flops']:.3g} "
+                  f"coll={r[key]['collectives']['total_bytes']:.3g}B "
+                  f"args={m['argument_bytes']} temp={m['temp_bytes']}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .config import ModelConfig
+from .stack import Par, DEFAULT_PAR, init_params, init_cache, apply_stack
+from .lm import (forward, loss_fn, make_train_step, make_eval_step,
+                 make_prefill_step, make_decode_step, param_count,
+                 active_param_count)

@@ -1,0 +1,105 @@
+"""P4 lane-alignment pass at LM scale.
+
+The paper pads conv output channels to the SIMD width (multiples of 4
+for SSSE3) with zero filters. The TPU reading: pad *head_dim* to a lane
+multiple (128) with zero columns so the attention tensors shard on the
+'model' axis and land on aligned MXU tiles.
+
+Zero-padding is **exact**: padded q/k dims contribute 0 to every logit,
+padded v dims produce zero outputs that meet zero rows of ``wo``.
+``pad_head_dim`` transforms trained params; running the padded params
+under ``replace(cfg, head_dim=new_dh)`` computes the identical function
+(tested in tests/test_align.py).
+
+h2o-danube-3-4b is the motivating case: head_dim=120 divides neither 16
+(TP axis) nor 128 (lanes), so the baseline replicates every attention
+tensor across the model axis; 120→128 unlocks Dh-sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def _pad_head_cols(w, n_heads, dh_old, dh_new, *, rotary: bool,
+                   scale: float = 1.0):
+    """Pad the per-head output columns of w (..., D, H*dh_old).
+
+    ``rotary=True`` pads in rope-pair space — each half of the head dim
+    grows separately, so the (i, i + dh/2) rotation pairing of the
+    original dims is preserved."""
+    *lead, d, hd = w.shape
+    w = w.reshape(*lead, d, n_heads, dh_old) * scale
+    pad = dh_new - dh_old
+    if rotary:
+        h_old, h_new = dh_old // 2, dh_new // 2
+        w = w.reshape(*lead, d, n_heads, 2, h_old)
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, h_new - h_old)])
+    else:
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, pad)])
+    return w.reshape(*lead, d, n_heads * dh_new)
+
+
+def _pad_head_rows(w, n_heads, dh_old, dh_new):
+    """Pad the per-head input rows of wo (..., H*dh_old, D)."""
+    *lead, hd, d = w.shape
+    w = w.reshape(*lead, n_heads, dh_old, d)
+    w = jnp.pad(w, [(0, 0)] * (w.ndim - 3) + [(0, 0),
+                                              (0, dh_new - dh_old), (0, 0)])
+    return w.reshape(*lead, n_heads * dh_new, d)
+
+
+def _pad_bias(b, n_heads, dh_old, dh_new, *, rotary: bool,
+              scale: float = 1.0):
+    *lead, hd = b.shape
+    b = b.reshape(*lead, n_heads, dh_old) * scale
+    if rotary:
+        h_old, h_new = dh_old // 2, dh_new // 2
+        b = b.reshape(*lead, n_heads, 2, h_old)
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, h_new - h_old)])
+    else:
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, dh_new - dh_old)])
+    return b.reshape(*lead, n_heads * dh_new)
+
+
+def pad_head_dim(params, cfg: ModelConfig, new_dh: int):
+    """Returns (padded_params, new_cfg). Function-preserving:
+    * q/k pad in rope-pair space + ``rope_dim`` pins the original
+      frequency ladder (padded dims stay zero under rotation);
+    * wq/bq absorb sqrt(new/old) so the softmax scale is unchanged;
+    * v/wo pad plainly (v is not rotated)."""
+    old = cfg.head_dim
+    assert new_dh >= old and new_dh % 2 == 0 and old % 2 == 0
+    assert cfg.mrope_sections is None, "mrope sections need their own pad"
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    qscale = (new_dh / old) ** 0.5  # flash scales by 1/sqrt(Dh_new)
+
+    def fix_attn(p):
+        q = dict(p)
+        q["wq"] = _pad_head_cols(p["wq"], H, old, new_dh, rotary=True,
+                                 scale=qscale)
+        q["wk"] = _pad_head_cols(p["wk"], Hkv, old, new_dh, rotary=True)
+        q["wv"] = _pad_head_cols(p["wv"], Hkv, old, new_dh, rotary=False)
+        q["wo"] = _pad_head_rows(p["wo"], H, old, new_dh)
+        if "bq" in p:
+            q["bq"] = _pad_bias(p["bq"], H, old, new_dh, rotary=True,
+                                scale=qscale)
+            q["bk"] = _pad_bias(p["bk"], Hkv, old, new_dh, rotary=True)
+            q["bv"] = _pad_bias(p["bv"], Hkv, old, new_dh, rotary=False)
+        return q
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "wq" in node:
+                return fix_attn(node)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    new_cfg = dataclasses.replace(cfg, head_dim=new_dh, rope_dim=old)
+    return walk(params), new_cfg

@@ -1,0 +1,307 @@
+"""Memory-efficient attention with a hand-written flash backward.
+
+``jax.grad`` through a scanned online-softmax stores every block's
+probability matrix (O(T^2) residuals — measured 270+ GiB/device for
+qwen1.5-110b train_4k). The flash-attention backward fixes this: the
+forward saves only (q, k, v, o, lse) = O(T), and the backward re-tiles
+the score blocks. Both directions are plain (non-differentiated) scans,
+so nothing inside them is retained.
+
+Two variants:
+  * ``flash_mha``  — full/causal attention, q-blocks x kv-blocks;
+  * ``local_mha``  — sliding-window: every block reads one contiguous,
+    statically-sized context slice, so compute AND memory are
+    O(T * window) in both directions (never O(T^2)).
+
+Layouts: q (B,T,H,Dh), k/v (B,T,Hkv,Dh), GQA by H = Hkv*G.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+# =========================================================== full/causal ====
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_mha(q, k, v, causal=True, window=None, scale=None,
+              block_q=512, block_k=512):
+    o, _ = _fwd(q, k, v, causal, window, scale, block_q, block_k)
+    return o
+
+
+def _fwd(q, k, v, causal, window, scale, block_q, block_k):
+    B, T, H, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bq, bk = min(block_q, T), min(block_k, Tk)
+    assert T % bq == 0 and Tk % bk == 0
+    nq, nk = T // bq, Tk // bk
+    sc = scale if scale is not None else Dh ** -0.5
+    qs = (q.astype(jnp.float32) * sc).astype(q.dtype)
+    qb = jnp.moveaxis(qs.reshape(B, nq, bq, Hkv, G, Dh), 1, 0)
+
+    def q_block(_, inp):
+        q_i, iq = inp
+        qpos = iq * bq + jnp.arange(bq)
+
+        def kv_block(state, ik):
+            m, l, acc = state
+            k_j = jax.lax.dynamic_slice_in_dim(k, ik * bk, bk, 1)
+            v_j = jax.lax.dynamic_slice_in_dim(v, ik * bk, bk, 1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32)
+            msk = _mask(qpos, ik * bk + jnp.arange(bk), causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            p = jnp.where(msk[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + p.sum(-1, keepdims=True)
+            acc = alpha[..., 0, None] * acc + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, Hkv, G, bq, 1), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, 1), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, Dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        l_safe = jnp.where(l == 0, 1.0, l)
+        o = (acc / l_safe).astype(q.dtype)
+        lse = (m + jnp.log(l_safe))[..., 0]          # (B,Hkv,G,bq)
+        return None, (jnp.moveaxis(o, 3, 1), lse)
+
+    _, (ys, lses) = jax.lax.scan(q_block, None, (qb, jnp.arange(nq)))
+    o = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, Dh)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, Hkv, G, T)
+    return o, lse
+
+
+def _flash_fwd_rule(q, k, v, causal, window, scale, block_q, block_k):
+    o, lse = _fwd(q, k, v, causal, window, scale, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, window, scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    B, T, H, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bq, bk = min(block_q, T), min(block_k, Tk)
+    nq, nk = T // bq, Tk // bk
+    sc = scale if scale is not None else Dh ** -0.5
+
+    doh = do.reshape(B, T, Hkv, G, Dh)
+    oh = o.reshape(B, T, Hkv, G, Dh)
+    # delta_i = sum_d do_i * o_i   (B,Hkv,G,T)
+    delta = jnp.einsum("bthgd,bthgd->bhgt", doh.astype(jnp.float32),
+                       oh.astype(jnp.float32))
+    qh = q.reshape(B, T, Hkv, G, Dh)
+
+    def kv_step(dq_acc, ik):
+        k_j = jax.lax.dynamic_slice_in_dim(k, ik * bk, bk, 1)
+        v_j = jax.lax.dynamic_slice_in_dim(v, ik * bk, bk, 1)
+        kpos = ik * bk + jnp.arange(bk)
+
+        def q_step(carry, iq):
+            dq_acc, dk_j, dv_j = carry
+            q_i = jax.lax.dynamic_slice(
+                qh, (0, iq * bq, 0, 0, 0), (B, bq, Hkv, G, Dh))
+            do_i = jax.lax.dynamic_slice(
+                doh, (0, iq * bq, 0, 0, 0), (B, bq, Hkv, G, Dh))
+            lse_i = jax.lax.dynamic_slice(
+                lse, (0, 0, 0, iq * bq), (B, Hkv, G, bq))
+            dlt_i = jax.lax.dynamic_slice(
+                delta, (0, 0, 0, iq * bq), (B, Hkv, G, bq))
+            qpos = iq * bq + jnp.arange(bq)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * sc
+            msk = _mask(qpos, kpos, causal, window)
+            p = jnp.exp(s - lse_i[..., None])
+            p = jnp.where(msk[None, None, None], p, 0.0)
+            dv_j = dv_j + jnp.einsum("bhgqk,bqhgd->bkhd", p,
+                                     do_i.astype(jnp.float32))
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i, v_j,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dlt_i[..., None]) * sc
+            dq_i = jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_j,
+                              preferred_element_type=jnp.float32)
+            dk_j = dk_j + jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                                     q_i.astype(jnp.float32))
+            dq_acc = jax.lax.dynamic_update_slice(
+                dq_acc,
+                (jax.lax.dynamic_slice(
+                    dq_acc, (0, iq * bq, 0, 0, 0), (B, bq, Hkv, G, Dh))
+                 + dq_i.astype(dq_acc.dtype)),
+                (0, iq * bq, 0, 0, 0))
+            return (dq_acc, dk_j, dv_j), None
+
+        zero_k = jnp.zeros((B, bk, Hkv, Dh), jnp.float32)
+        (dq_acc, dk_j, dv_j), _ = jax.lax.scan(
+            q_step, (dq_acc, zero_k, zero_k), jnp.arange(nq))
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, T, Hkv, G, Dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Tk, Hkv, Dh)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Tk, Hkv, Dh)
+    return (dq.reshape(B, T, H, Dh).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_mha.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+# ============================================================ local (SWA) ====
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def local_mha(q, k, v, window, scale=None, block_q=256):
+    o, _ = _local_fwd(q, k, v, window, scale, block_q)
+    return o
+
+
+def _ctx_slice(x, start, ctx):
+    return jax.lax.dynamic_slice(
+        x, (0, start) + (0,) * (x.ndim - 2), (x.shape[0], ctx) + x.shape[2:])
+
+
+def _local_fwd(q, k, v, window, scale, block_q):
+    B, T, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    bq = min(block_q, T)
+    assert T % bq == 0
+    nq = T // bq
+    ctx = min(window + bq, T)
+    sc = scale if scale is not None else Dh ** -0.5
+    qh = q.reshape(B, T, Hkv, G, Dh)
+
+    def q_block(_, iq):
+        qstart = iq * bq
+        start = jnp.clip(qstart + bq - ctx, 0, T - ctx)
+        q_i = _ctx_slice(qh, qstart, bq)
+        k_j = _ctx_slice(k, start, ctx)
+        v_j = _ctx_slice(v, start, ctx)
+        qpos = qstart + jnp.arange(bq)
+        kpos = start + jnp.arange(ctx)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                       preferred_element_type=jnp.float32) * sc
+        msk = (kpos[None, :] <= qpos[:, None]) & (
+            qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        mx = s.max(-1, keepdims=True)
+        p = jnp.exp(s - mx)
+        p = jnp.where(msk[None, None, None], p, 0.0)
+        l = p.sum(-1, keepdims=True)
+        l = jnp.where(l == 0, 1.0, l)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", (p / l).astype(v.dtype), v_j)
+        lse = (mx + jnp.log(l))[..., 0]
+        return None, (o, lse)
+
+    _, (ys, lses) = jax.lax.scan(q_block, None, jnp.arange(nq))
+    o = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, Dh).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, Hkv, G, T)
+    return o, lse
+
+
+def _local_fwd_rule(q, k, v, window, scale, block_q):
+    o, lse = _local_fwd(q, k, v, window, scale, block_q)
+    return o, (q, k, v, o, lse)
+
+
+def _local_bwd_rule(window, scale, block_q, res, do):
+    q, k, v, o, lse = res
+    B, T, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    bq = min(block_q, T)
+    nq = T // bq
+    ctx = min(window + bq, T)
+    sc = scale if scale is not None else Dh ** -0.5
+    qh = q.reshape(B, T, Hkv, G, Dh)
+    doh = do.reshape(B, T, Hkv, G, Dh)
+    oh = o.reshape(B, T, Hkv, G, Dh)
+    delta = jnp.einsum("bthgd,bthgd->bhgt", doh.astype(jnp.float32),
+                       oh.astype(jnp.float32))
+
+    def recompute_p(q_i, k_j, lse_i, qpos, kpos):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                       preferred_element_type=jnp.float32) * sc
+        msk = (kpos[None, :] <= qpos[:, None]) & (
+            qpos[:, None] - kpos[None, :] < window)
+        p = jnp.exp(s - lse_i[..., None])
+        return jnp.where(msk[None, None, None], p, 0.0)
+
+    # pass 1: dq per q-block (same slices as forward)
+    def dq_block(_, iq):
+        qstart = iq * bq
+        start = jnp.clip(qstart + bq - ctx, 0, T - ctx)
+        q_i = _ctx_slice(qh, qstart, bq)
+        do_i = _ctx_slice(doh, qstart, bq)
+        k_j = _ctx_slice(k, start, ctx)
+        v_j = _ctx_slice(v, start, ctx)
+        lse_i = jax.lax.dynamic_slice(lse, (0, 0, 0, qstart),
+                                      (B, Hkv, G, bq))
+        dlt_i = jax.lax.dynamic_slice(delta, (0, 0, 0, qstart),
+                                      (B, Hkv, G, bq))
+        qpos = qstart + jnp.arange(bq)
+        kpos = start + jnp.arange(ctx)
+        p = recompute_p(q_i, k_j, lse_i, qpos, kpos)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i, v_j,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dlt_i[..., None]) * sc
+        dq_i = jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_j,
+                          preferred_element_type=jnp.float32)
+        return None, dq_i
+
+    _, dqs = jax.lax.scan(dq_block, None, jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, T, H, Dh)
+
+    # pass 2: dk/dv per kv-block; q rows that can see block j live in
+    # [jstart, jstart + bq + window) — one contiguous static slice.
+    bkv = bq
+    nkv = T // bkv
+    qctx = min(window + bkv, T)
+
+    def dkv_block(_, jk):
+        kstart = jk * bkv
+        qs = jnp.clip(kstart, 0, T - qctx)
+        k_j = _ctx_slice(k, kstart, bkv)
+        v_j = _ctx_slice(v, kstart, bkv)
+        q_i = _ctx_slice(qh, qs, qctx)
+        do_i = _ctx_slice(doh, qs, qctx)
+        lse_i = jax.lax.dynamic_slice(lse, (0, 0, 0, qs), (B, Hkv, G, qctx))
+        dlt_i = jax.lax.dynamic_slice(delta, (0, 0, 0, qs),
+                                      (B, Hkv, G, qctx))
+        qpos = qs + jnp.arange(qctx)
+        kpos = kstart + jnp.arange(bkv)
+        p = recompute_p(q_i, k_j, lse_i, qpos, kpos)        # (B,h,g,qctx,bkv)
+        dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p, do_i.astype(jnp.float32))
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i, v_j,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dlt_i[..., None]) * sc
+        dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_i.astype(jnp.float32))
+        return None, (dk_j, dv_j)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_block, None, jnp.arange(nkv))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, T, Hkv, Dh)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, T, Hkv, Dh)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+local_mha.defvjp(_local_fwd_rule, _local_bwd_rule)

@@ -1,0 +1,235 @@
+"""Core LM building blocks (pure functional JAX).
+
+Layout conventions:
+  activations  (B, T, D)          heads (B, T, H, Dh)
+  attn weights (D, H*Dh) etc.     all params live in plain dicts
+
+NNCG principle mapping (see DESIGN.md §3): every mask is iota+select
+(P2), every structural decision (pattern, window, group sizes) is a
+trace-time constant (P3), head/lane dims are 128-aligned by the configs
+(P4), and the layer stack is scanned or unrolled per LoopPolicy (P1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ norms ----
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def group_norm_heads(x, scale, eps: float = 1e-5):
+    """Per-head LayerNorm (RWKV6 wkv output norm). x: (..., H, N)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope ----
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+         rope_dim: Optional[int] = None) -> jax.Array:
+    """Rotary embedding; x (B, T, H, Dh), positions (B, T) int32.
+    ``rope_dim``: the *original* head_dim when Dh has been lane-padded
+    (P4 alignment) — keeps the frequency ladder of the unpadded model so
+    padding is function-preserving."""
+    dh = x.shape[-1]
+    half = dh // 2
+    base_half = (rope_dim or dh) // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / base_half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,T,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions3: jax.Array,
+          sections: Tuple[int, int, int], theta: float = 1e4) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: head_dim/2 freqs split into (t, h, w)
+    sections, each rotated by its own position stream.
+    x (B,T,H,Dh); positions3 (3,B,T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_streams = positions3.astype(jnp.float32)[..., None] * freqs  # (3,B,T,half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)  # (half,)
+    # per-channel stream select as a one-hot mix (P2: no gather/branch)
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)  # (half, 3)
+    ang = jnp.einsum("sbtf,fs->btf", ang_streams, onehot)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ linear ----
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(
+        jax.nn.gelu, approximate=True), "relu": jax.nn.relu}[name]
+
+
+def gated_mlp(x, p, act: str = "silu"):
+    h = act_fn(act)(linear(x, p["wg"]))
+    if "wu" in p:
+        h = h * linear(x, p["wu"])
+    return linear(h, p["wd"])
+
+
+# -------------------------------------------------------------- attention ----
+
+def flash_attention_jax(q, k, v, *, causal=True, window=None, scale=None,
+                        q_offset=0, block_q=512, block_k=512):
+    """Blockwise online-softmax attention in pure jnp (lax.scan tiling).
+
+    q (B,Tq,H,Dh); k,v (B,Tk,Hkv,Dh). Used on the dry-run/XLA path; the
+    Pallas kernel implements the same math for real TPU execution.
+    """
+    B, Tq, H, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bq, bk = min(block_q, Tq), min(block_k, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0
+    nq, nk = Tq // bq, Tk // bk
+    scale = scale if scale is not None else Dh ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, Hkv, G, Dh), 1, 0)
+
+    def q_block(carry, inp):
+        del carry
+        q_i, iq = inp  # (B,bq,Hkv,G,Dh)
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_block(state, ik):
+            m, l, acc = state
+            k_j = jax.lax.dynamic_slice_in_dim(k, ik * bk, bk, 1)
+            v_j = jax.lax.dynamic_slice_in_dim(v, ik * bk, bk, 1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ik * bk + jnp.arange(bk)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + p.sum(-1, keepdims=True)
+            acc = alpha[..., 0, None] * acc + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, Hkv, G, bq, 1), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, 1), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, Dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        l = jnp.where(l == 0, 1.0, l)
+        o = (acc / l).astype(q.dtype)  # (B,Hkv,G,bq,Dh)
+        return None, jnp.moveaxis(o, 3, 1)  # (B,bq,Hkv,G,Dh)
+
+    _, ys = jax.lax.scan(q_block, None, (qb, jnp.arange(nq)))
+    out = jnp.moveaxis(ys, 0, 1)  # (B,nq,bq,Hkv,G,Dh)
+    return out.reshape(B, Tq, H, Dh)
+
+
+def local_attention_jax(q, k, v, *, window: int, scale=None, block_q=256):
+    """Exact causal sliding-window attention: each q block of ``bq`` rows
+    reads only the ``window + bq`` keys that can be visible to it —
+    compute is O(T * window), never O(T^2)."""
+    B, T, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    bq = min(block_q, T)
+    assert T % bq == 0
+    nq = T // bq
+    ctx = window + bq
+    scale = scale if scale is not None else Dh ** -0.5
+    if T < ctx:  # short sequence: plain flash with window mask
+        return flash_attention_jax(q, k, v, causal=True, window=window,
+                                   scale=scale)
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, Hkv, G, Dh), 1, 0)
+
+    def q_block(_, inp):
+        q_i, iq = inp
+        qstart = iq * bq
+        start = jnp.clip(qstart + bq - ctx, 0, T - ctx)
+        k_j = jax.lax.dynamic_slice_in_dim(k, start, ctx, 1)
+        v_j = jax.lax.dynamic_slice_in_dim(v, start, ctx, 1)
+        qpos = qstart + jnp.arange(bq)
+        kpos = start + jnp.arange(ctx)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (kpos[None, :] <= qpos[:, None]) & (
+            qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j)
+        return None, jnp.moveaxis(o.astype(q.dtype), 3, 1)
+
+    _, ys = jax.lax.scan(q_block, None, (qb, jnp.arange(nq)))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, T, H, Dh)
+
+
+def decode_attention_jax(q, k_cache, v_cache, pos, *, window=None,
+                         ring=False, scale=None):
+    """One-token attention against a cache.
+
+    q (B,1,H,Dh); k_cache/v_cache (B,S,Hkv,Dh); pos scalar int32 — the
+    position of the *new* token (cache already contains it at its slot).
+    ``ring=True`` means the cache is a rolling buffer of size S=window.
+    """
+    B, S, Hkv, Dh = k_cache.shape
+    H = q.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    qh = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    slots = jnp.arange(S)
+    if ring:
+        # slot s holds absolute position: pos - ((pos - s) mod S)
+        slot_pos = pos - jnp.mod(pos - slots, S)
+    else:
+        slot_pos = slots
+    mask = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        mask &= (pos - slot_pos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)

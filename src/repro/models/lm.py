@@ -1,0 +1,185 @@
+"""LM-level API: forward, loss, train_step / prefill / decode factories.
+
+All step functions are **branch-free** (paper P2) and close over the
+config (P3: every structural decision is a trace-time constant), so a
+``.lower().compile()`` of any step is a fully specialized program — the
+TPU analogue of NNCG's single self-contained C function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .stack import DEFAULT_PAR, Par, apply_stack, init_cache, init_params
+from .layers import rms_norm
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens_or_embeds, par: Par):
+    if jnp.issubdtype(tokens_or_embeds.dtype, jnp.integer):
+        emb = params["embed"]
+        x = jnp.take(emb, tokens_or_embeds, axis=0)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma-style scale
+    else:  # frontend stub (audio frames / vision patches) or VLM embeds
+        x = tokens_or_embeds.astype(jnp.dtype(cfg.dtype))
+    return par.constraint(x, "activations")
+
+
+def unembed(params, cfg: ModelConfig, x, par: Par):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("btd,dv->btv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return par.constraint(logits, "logits")
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any],
+            par: Par = DEFAULT_PAR, caches=None, pos=None):
+    """batch: {'tokens' (B,T) int | 'embeds' (B,T,D), optional 'positions'
+    (B,T), optional 'positions3' (3,B,T)}."""
+    inp = batch["embeds"] if "embeds" in batch else batch["tokens"]
+    x = embed_tokens(params, cfg, inp, par)
+    B, T = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        base = jnp.arange(T, dtype=jnp.int32)[None]
+        positions = base + (0 if pos is None else pos)
+        positions = jnp.broadcast_to(positions, (B, T))
+    pos3 = batch.get("positions3")
+    x, new_caches = apply_stack(x, params, cfg, par, positions=positions,
+                                caches=caches, pos=pos, pos3=pos3)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, cfg, x, par)
+    return logits, new_caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch, par: Par = DEFAULT_PAR,
+            z_loss: float = 1e-4):
+    logits, _ = forward(params, cfg, batch, par)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    xent = (nll * mask).sum() / denom
+    zl = z_loss * ((lse ** 2) * mask).sum() / denom
+    return xent + zl, {"xent": xent, "z_loss": zl}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, par: Par = DEFAULT_PAR):
+    """Returns train_step(state, batch) -> (state, metrics); state is
+    (params, opt_state, step)."""
+
+    from repro.optim.adamw import global_norm
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, par), has_aux=True)
+
+    def train_step(state, batch):
+        params, opt_state, step = state
+        K = cfg.grad_accum
+        if K > 1:
+            # microbatching: K sequential grad microsteps, one optimizer
+            # update — activation memory scales 1/K (grads are one f32
+            # tree). The batch dim splits evenly across microbatches so
+            # per-device sharding is unchanged.
+            def to_micro(key, a):
+                if key == "positions3":  # (3, B, T): batch is dim 1
+                    return jnp.moveaxis(
+                        a.reshape(a.shape[0], K, a.shape[1] // K,
+                                  *a.shape[2:]), 1, 0)
+                return a.reshape((K, a.shape[0] // K) + a.shape[1:])
+
+            micro = {k: to_micro(k, v) for k, v in batch.items()}
+
+            def acc(carry, b):
+                gsum, lsum = carry
+                (loss, aux), g = grad_fn(params, b)
+                gsum = jax.tree.map(
+                    lambda s, x: s + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), aux
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), auxs = jax.lax.scan(acc, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / K, gsum)
+            loss = lsum / K
+            aux = jax.tree.map(lambda a: a.mean(), auxs)
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+        gnorm = global_norm(grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        metrics = {"loss": loss, **aux, "grad_norm": gnorm}
+        return (params, opt_state, step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, par: Par = DEFAULT_PAR):
+    def eval_step(params, batch):
+        loss, aux = loss_fn(params, cfg, batch, par)
+        return {"loss": loss, **aux}
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      par: Par = DEFAULT_PAR):
+    """prefill(params, batch) -> (last_logits (B,V), caches, next_pos)."""
+
+    def prefill(params, batch):
+        inp = batch["embeds"] if "embeds" in batch else batch["tokens"]
+        B, T = inp.shape[:2]
+        caches = init_cache(cfg, B, max_len)
+        logits, caches = forward(params, cfg, batch, par, caches=caches,
+                                 pos=jnp.int32(0))
+        return logits[:, -1], caches, jnp.int32(T)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, par: Par = DEFAULT_PAR):
+    """decode(params, caches, tokens (B,1) | embeds, pos) ->
+    (logits (B,V), caches, pos+1). One new token against the caches."""
+    assert not cfg.is_encoder, f"{cfg.name} is encoder-only: no decode step"
+
+    def decode(params, caches, tokens, pos):
+        batch = ({"tokens": tokens} if cfg.embed_inputs
+                 else {"embeds": tokens})
+        B = tokens.shape[0]
+        batch["positions"] = jnp.broadcast_to(
+            pos[None, None].astype(jnp.int32), (B, 1))
+        if cfg.mrope_sections is not None:
+            batch["positions3"] = jnp.broadcast_to(
+                pos[None, None, None].astype(jnp.int32), (3, B, 1))
+        logits, caches = forward(params, cfg, batch, par, caches=caches,
+                                 pos=pos)
+        return logits[:, -1], caches, pos + 1
+
+    return decode
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    import math
+    shapes = jax.eval_shape(lambda: init_params(cfg))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: shared + top-k routed only)."""
+    n = param_count(cfg)
+    if not cfg.n_experts:
+        return n
+    Fe = cfg.moe_d_ff or cfg.d_ff
+    D = cfg.d_model
+    per_expert = 3 * D * Fe
+    inactive = (cfg.n_experts - cfg.top_k) * per_expert * cfg.n_layers
+    return n - inactive

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts MLP (deepseek-moe fine-grained, grok-1 coarse).
+
+Routing is **branch-free** (paper P2): top-k selection feeds a sort-based
+grouped matmul — tokens are argsorted by expert id, scattered into an
+(E, C, D) capacity buffer, processed with three batched einsums, and
+combined back with the gate weights. No `lax.cond`, no per-expert Python
+branching; dropped tokens (over capacity) fall out via a select mask.
+
+Sharding contract (see distribution.py): the token dim S is the local
+per-device shard (the caller wraps this in shard_map over the data axes);
+expert weights are tensor-parallel on the hidden dim F ('model' axis), so
+the down-projection emits a partial sum the caller psums.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn, linear
+
+
+def moe_mlp(x: jax.Array, p: dict, *, top_k: int, act: str = "silu",
+            capacity_factor: float = 1.25,
+            router_in_f32: bool = True) -> jax.Array:
+    """x: (S, D) local tokens. Returns (S, D) — partial over F-shards if
+    the expert weights are F-sharded (caller psums).
+
+    p: router (D, E); wg, wu (E, D, F); wd (E, F, D);
+       optional shared_wg/wu/wd for always-on shared experts.
+    """
+    S, D = x.shape
+    E = p["router"].shape[1]
+    F = p["wg"].shape[-1]
+    C = max(int(S * top_k / E * capacity_factor), 1)
+
+    rx = x.astype(jnp.float32) if router_in_f32 else x
+    logits = rx @ p["router"].astype(rx.dtype)            # (S, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eidx = jax.lax.top_k(probs, top_k)             # (S, k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch (no branches, no host loops) ----
+    flat_e = eidx.reshape(-1)                             # (S*k,)
+    order = jnp.argsort(flat_e)                           # stable
+    sorted_e = flat_e[order]
+    token_of_slot = order // top_k
+    # position of each slot within its expert group
+    counts = jax.ops.segment_sum(jnp.ones_like(sorted_e), sorted_e,
+                                 num_segments=E)          # (E,)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(S * top_k) - starts[sorted_e]
+    keep = pos_in_e < C                                   # capacity drop (P2)
+    safe_pos = jnp.where(keep, pos_in_e, 0).astype(jnp.int32)
+
+    xs = x[token_of_slot] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E, C, D), x.dtype).at[sorted_e, safe_pos].add(
+        xs, mode="drop")
+
+    # ---- grouped expert MLP (three einsums over the E batch dim) ----
+    h = act_fn(act)(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(x.dtype))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(x.dtype))
+
+    # ---- combine ----
+    y_slots = y_buf[sorted_e, safe_pos] * keep[:, None].astype(x.dtype)
+    inv = jnp.argsort(order)
+    y = y_slots[inv].reshape(S, top_k, D)
+    y = jnp.einsum("skd,sk->sd", y, gates.astype(x.dtype))
+
+    if "shared_wg" in p:
+        h = act_fn(act)(linear(x, p["shared_wg"])) * linear(x, p["shared_wu"])
+        y = y + linear(h, p["shared_wd"])
+    return y
+
+
+def moe_mlp_ep(x: jax.Array, p: dict, *, top_k: int, n_devices: int,
+               axis_name: str = "model", act: str = "silu",
+               capacity_factor: float = 1.25) -> jax.Array:
+    """Expert-parallel MoE (hillclimb variant, EXPERIMENTS §Perf).
+
+    Call inside shard_map with tokens sharded over (dp, model) and the
+    routed expert stacks sharded over 'model' on E (full hidden F per
+    expert). Tokens travel to their experts' owners via all_to_all and
+    back — O(S_local * k * D) wire bytes instead of replicating the
+    (E, C, D) dispatch buffers across the model axis.
+
+    p: router (D,E) + wg/wu/wd (E_local, D, F) + optional shared_* dense
+    (replicated). Returns (S_local, D), complete (no psum needed).
+    """
+    S, D = x.shape
+    E_local = p["wg"].shape[0]
+    E = E_local * n_devices
+    C = max(int(S * top_k / E * capacity_factor), 1)
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, top_k)              # (S, k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    token_of_slot = order // top_k
+    counts = jax.ops.segment_sum(jnp.ones_like(sorted_e), sorted_e,
+                                 num_segments=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(S * top_k) - starts[sorted_e]
+    keep = pos_in_e < C
+    safe_pos = jnp.where(keep, pos_in_e, 0).astype(jnp.int32)
+    owner = (sorted_e // E_local).astype(jnp.int32)
+    local_e = (sorted_e % E_local).astype(jnp.int32)
+
+    xs = x[token_of_slot] * keep[:, None].astype(x.dtype)
+    send = jnp.zeros((n_devices, E_local, C, D), x.dtype)
+    send = send.at[owner, local_e, safe_pos].add(xs, mode="drop")
+
+    # ship token slots to their expert owners (dim 0 = destination)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0,
+                              concat_axis=0, tiled=True)
+    # recv[s, e, c] = sender s's slots for my local expert e
+    buf = recv.swapaxes(0, 1).reshape(E_local, n_devices * C, D)
+
+    h = act_fn(act)(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(x.dtype))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(x.dtype))
+
+    back = jax.lax.all_to_all(
+        y_buf.reshape(E_local, n_devices, C, D).swapaxes(0, 1),
+        axis_name, split_axis=0, concat_axis=0, tiled=True)
+    # back[d, e, c] = processed slot originally sent to device d's buffer
+    y_slots = back[owner, local_e, safe_pos] * keep[:, None].astype(x.dtype)
+    inv = jnp.argsort(order)
+    y = y_slots[inv].reshape(S, top_k, D)
+    y = jnp.einsum("skd,sk->sd", y, gates.astype(x.dtype))
+
+    if "shared_wg" in p:
+        h = act_fn(act)(linear(x, p["shared_wg"])) * linear(x, p["shared_wu"])
+        y = y + linear(h, p["shared_wd"])
+    return y
+
+
+def aux_load_balance_loss(logits_f32: jax.Array, eidx: jax.Array,
+                          n_experts: int, top_k: int) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (for training runs)."""
+    probs = jax.nn.softmax(logits_f32, axis=-1)
+    me = probs.mean(0)
+    one_hot = jax.nn.one_hot(eidx, n_experts).sum(1)  # (S, E)
+    ce = one_hot.mean(0) / top_k
+    return n_experts * jnp.sum(me * ce)

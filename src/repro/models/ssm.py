@@ -1,0 +1,286 @@
+"""SSM blocks: Mamba2 (SSD chunked) and RWKV6 (Finch) time/channel mix.
+
+Both are built on the same diagonal-decay recurrence the Pallas
+``linear_scan`` kernel implements:
+
+    S_t = diag(decay_t) S_{t-1} + k_t^T v_t ;  y_t = r_t S_t
+
+Mamba2 trains with the **chunked SSD algorithm** (quadratic within a
+chunk via MXU matmuls, sequential only across chunks) — the TPU-native
+reading of the paper's P1 trade-off: the chunk is the unroll unit that
+keeps the working set in VMEM/registers while bounding code (HLO) size.
+RWKV6's per-channel data-dependent decay uses a lax.scan on the XLA path
+(kernels/linear_scan.py is the TPU hot-path equivalent).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn, group_norm_heads, linear, rms_norm
+
+
+# ============================================================== Mamba2 ======
+
+def ssd_chunked(a: jax.Array, u: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                s0: Optional[jax.Array] = None, chunk: int = 128):
+    """Chunked scan for S_t = a_t S_{t-1} + B_t u_t ; y_t = C_t S_t.
+
+    a (B,T,H) in (0,1];  u (B,T,H,P);  Bm/Cm (B,T,N) (shared over heads).
+    Returns y (B,T,H,P), S_final (B,H,N,P).
+    """
+    B_, T, H = a.shape
+    P, N = u.shape[-1], Bm.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0
+    nc = T // c
+    a_ = a.reshape(B_, nc, c, H)
+    u_ = u.reshape(B_, nc, c, H, P)
+    Bc = Bm.reshape(B_, nc, c, N)
+    Cc = Cm.reshape(B_, nc, c, N)
+
+    la = jnp.log(jnp.clip(a_.astype(jnp.float32), 1e-20))
+    cum = jnp.cumsum(la, axis=2)                       # (B,nc,c,H) inclusive
+
+    # intra-chunk: y_t += sum_{j<=t} (C_t.B_j) exp(cum_t - cum_j) u_j
+    scores = jnp.einsum("bgin,bgjn->bgij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    Lm = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    Lm = jnp.where(tri[None, None, :, :, None], Lm, 0.0)
+    y_intra = jnp.einsum("bgij,bgijh,bgjhp->bgihp",
+                         scores, Lm, u_.astype(jnp.float32))
+
+    # inter-chunk: chunk summary states, then a short scan across chunks
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # (B,nc,c,H)
+    cstate = jnp.einsum("bgjn,bgjh,bgjhp->bghnp", Bc.astype(jnp.float32),
+                        decay_to_end, u_.astype(jnp.float32))
+    cdecay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    s_init = (jnp.zeros((B_, H, N, P), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+
+    def step(S, inp):
+        cd, cs = inp                                   # (B,H), (B,H,N,P)
+        S_new = cd[:, :, None, None] * S + cs
+        return S_new, S                                # emit state *before*
+
+    (S_final, S_prevs) = jax.lax.scan(
+        step, s_init, (jnp.moveaxis(cdecay, 1, 0), jnp.moveaxis(cstate, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)              # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bgin,bgih,bghnp->bgihp",
+                         Cc.astype(jnp.float32), jnp.exp(cum), S_prevs)
+    y = (y_intra + y_inter).reshape(B_, T, H, P)
+    return y.astype(u.dtype), S_final
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv; x (B,T,C), w (K,C). Returns (y, new_state)
+    where state caches the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        hist = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(hist[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = hist[:, hist.shape[1] - (K - 1):]
+    return y + b[None, None], new_state
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array    # (B, H, N, P) f32
+    conv: jax.Array   # (B, K-1, d_inner)
+
+
+def mamba2_mix(x: jax.Array, p: dict, *, ssm_state: int, head_dim: int,
+               chunk: int = 128, state: Optional[MambaState] = None,
+               ) -> Tuple[jax.Array, MambaState]:
+    """Mamba2 mixer. x (B,T,D). Single-step decode when T == 1 and state
+    is given (pure recurrence, no chunking)."""
+    B_, T, D = x.shape
+    d_inner = p["w_in"].shape[1] // 2
+    H = d_inner // head_dim
+    N = ssm_state
+
+    xz = linear(x, p["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state.conv
+    xi, new_conv = causal_conv1d(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    Bm = linear(xi, p["w_B"])                      # (B,T,N)
+    Cm = linear(xi, p["w_C"])                      # (B,T,N)
+    dt = jax.nn.softplus(linear(xi, p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])           # (B,T,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))         # (B,T,H) in (0,1)
+    xh = xi.reshape(B_, T, H, head_dim)
+    u = xh.astype(jnp.float32) * dt[..., None]     # discretized input
+
+    if T == 1 and state is not None:
+        S = state.ssm
+        S = a[:, 0, :, None, None] * S + jnp.einsum(
+            "bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32), u[:, 0])
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S)
+        y = y[:, None]
+        S_final = S
+    else:
+        s0 = None if state is None else state.ssm
+        y, S_final = ssd_chunked(a, u, Bm, Cm, s0=s0, chunk=chunk)
+
+    y = y + xh.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(B_, T, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear(y, p["w_out"])
+    return out, MambaState(ssm=S_final, conv=new_conv)
+
+
+def init_mamba2(key, D: int, *, ssm_state: int, head_dim: int,
+                conv_kernel: int = 4, dtype=jnp.bfloat16) -> dict:
+    d_inner = 2 * D
+    H = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    sc = lambda k, sh, fan: (jax.random.normal(k, sh, jnp.float32)
+                             * fan ** -0.5).astype(dtype)
+    return {
+        "w_in": sc(ks[0], (D, 2 * d_inner), D),
+        "conv_w": sc(ks[1], (conv_kernel, d_inner), conv_kernel).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "w_B": sc(ks[2], (d_inner, ssm_state), d_inner),
+        "w_C": sc(ks[3], (d_inner, ssm_state), d_inner),
+        "w_dt": sc(ks[4], (d_inner, H), d_inner),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[5], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "w_out": sc(ks[0], (d_inner, D), d_inner),
+    }
+
+
+# ============================================================== RWKV6 =======
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # (B, H, N, N) f32
+    prev_tm: jax.Array  # (B, D) last token seen by time-mix
+    prev_cm: jax.Array  # (B, D) last token seen by channel-mix
+
+
+def _token_shift(x, prev):
+    """Shift by one token; ``prev`` is the last token of the previous
+    segment (zeros at sequence start)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(x, p, *, head_dim: int,
+                   state: Optional[RWKVState] = None,
+                   constraint=None, chunk: int = 64):
+    """RWKV6 'Finch' time mix with data-dependent per-channel decay.
+
+    The recurrence runs as a scan-of-chunks with the chunk body
+    rematerialized (jax.checkpoint): the differentiated outer scan stores
+    one (B,H,N,N) state per *chunk* instead of per step — O(T/chunk)
+    instead of O(T) residuals. ``constraint`` shards the head dim."""
+    B_, T, D = x.shape
+    N = head_dim
+    H = D // N
+    prev = (jnp.zeros((B_, D), x.dtype) if state is None
+            else state.prev_tm.astype(x.dtype))
+    xx = _token_shift(x, prev)
+
+    def lerp(mu):
+        return x + (xx - x) * mu.astype(x.dtype)
+
+    xr, xk, xv, xw, xg = (lerp(p[f"mu_{c}"]) for c in "rkvwg")
+    r = linear(xr, p["w_r"]).reshape(B_, T, H, N)
+    k = linear(xk, p["w_k"]).reshape(B_, T, H, N)
+    v = linear(xv, p["w_v"]).reshape(B_, T, H, N)
+    g = jax.nn.silu(linear(xg, p["w_g"]))
+    # data-dependent decay (low-rank): w = exp(-exp(w0 + tanh(xw A) B))
+    dd = jnp.einsum("btr,rd->btd", jnp.tanh(linear(xw, p["w_dec_A"])),
+                    p["w_dec_B"].astype(x.dtype))
+    logw = p["w_dec0"].astype(jnp.float32) + dd.astype(jnp.float32)
+    decay = jnp.exp(-jnp.exp(logw)).reshape(B_, T, H, N)   # (0,1)
+    u = p["u_bonus"].reshape(H, N).astype(jnp.float32)
+
+    if constraint is not None:  # shard heads over 'model'
+        r, k, v = constraint(r), constraint(k), constraint(v)
+        decay = constraint(decay)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+    s0 = (jnp.zeros((B_, H, N, N), jnp.float32) if state is None
+          else state.wkv)
+
+    def step(S, inp):
+        rt, kt, vt, dt = inp  # (B,H,N) x3, (B,H,N)
+        kv = kt[..., None] * vt[..., None, :]              # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + u[None, :, :, None] * kv)
+        S = dt[..., None] * S + kv
+        return S, y
+
+    c = chunk
+    while T % c:
+        c //= 2
+    nc = T // c
+
+    def chunk_body(S, inp):
+        return jax.lax.scan(step, S, inp)
+
+    if nc > 1:
+        chunk_body = jax.checkpoint(chunk_body)
+
+    def chunked(arr):  # (B,T,H,N) -> (nc, c, B, H, N)
+        return jnp.moveaxis(arr, 1, 0).reshape(nc, c, B_, H, N)
+
+    S_final, y = jax.lax.scan(
+        chunk_body, s0, (chunked(rf), chunked(kf), chunked(vf),
+                         chunked(decay)))
+    y = jnp.moveaxis(y.reshape(T, B_, H, N), 0, 1)         # (B,T,H,N)
+    y = group_norm_heads(y, p["ln_x"].reshape(H, N)[None, None])
+    y = (y.reshape(B_, T, D).astype(x.dtype)) * g
+    out = linear(y, p["w_o"])
+    new_prev = x[:, -1]
+    return out, S_final, new_prev
+
+
+def rwkv6_channel_mix(x, p, state_prev=None):
+    B_, T, D = x.shape
+    prev = (jnp.zeros((B_, D), x.dtype) if state_prev is None
+            else state_prev.astype(x.dtype))
+    xx = _token_shift(x, prev)
+    xk = x + (xx - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_cr"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(xk, p["w_ck"])))
+    kv = linear(k, p["w_cv"])
+    out = jax.nn.sigmoid(linear(xr, p["w_cr"])) * kv
+    return out, x[:, -1]
+
+
+def init_rwkv6(key, D: int, d_ff: int, *, head_dim: int, dec_rank: int = 64,
+               dtype=jnp.bfloat16) -> dict:
+    N = head_dim
+    H = D // N
+    ks = jax.random.split(key, 12)
+    sc = lambda k, sh, fan: (jax.random.normal(k, sh, jnp.float32)
+                             * fan ** -0.5).astype(dtype)
+    p = {f"mu_{c}": jnp.full((D,), 0.5, jnp.float32) for c in "rkvwg"}
+    p.update({
+        "w_r": sc(ks[0], (D, D), D), "w_k": sc(ks[1], (D, D), D),
+        "w_v": sc(ks[2], (D, D), D), "w_g": sc(ks[3], (D, D), D),
+        "w_o": sc(ks[4], (D, D), D),
+        "w_dec_A": sc(ks[5], (D, dec_rank), D),
+        "w_dec_B": sc(ks[6], (dec_rank, D), dec_rank),
+        "w_dec0": jnp.full((D,), -1.0, jnp.float32),
+        "u_bonus": jnp.zeros((D,), jnp.float32),
+        "ln_x": jnp.ones((D,), jnp.float32),
+        "mu_ck": jnp.full((D,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((D,), 0.5, jnp.float32),
+        "w_ck": sc(ks[7], (D, d_ff), D),
+        "w_cv": sc(ks[8], (d_ff, D), d_ff),
+        "w_cr": sc(ks[9], (D, D), D),
+    })
+    return p

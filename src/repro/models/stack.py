@@ -1,0 +1,386 @@
+"""Composable decoder/encoder stack.
+
+The layer pattern (config.pattern, e.g. ``"LLLLLG"`` → gemma3) defines a
+repeating *group*; parameters are stacked over groups and the stack is
+``lax.scan``-ned (LoopPolicy = no-unroll, paper P1) or Python-unrolled
+(``scan_layers=False``). 'S' blocks use one *shared* parameter set
+(Zamba2) captured as a scan constant — weight sharing as a compile-time
+structural constant is the purest P3 exploit in the pool.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention_vjp import flash_mha, local_mha
+from .config import ModelConfig
+from .layers import (
+    decode_attention_jax,
+    gated_mlp,
+    layer_norm,
+    linear,
+    mrope,
+    rms_norm,
+    rope,
+)
+from .moe import moe_mlp
+from .ssm import (
+    MambaState,
+    RWKVState,
+    init_mamba2,
+    init_rwkv6,
+    mamba2_mix,
+    rwkv6_channel_mix,
+    rwkv6_time_mix,
+)
+
+
+class Par:
+    """Parallelism context. The default is a single-device no-op; the
+    distribution layer overrides hooks to add sharding constraints and a
+    shard_map'd MoE. Model code never imports mesh machinery."""
+
+    def constraint(self, x, kind: str):
+        return x
+
+    def moe(self, x, p, cfg: ModelConfig):
+        B, T, D = x.shape
+        y = moe_mlp(x.reshape(B * T, D), p, top_k=cfg.top_k, act=cfg.act,
+                    capacity_factor=cfg.capacity_factor)
+        return y.reshape(B, T, D)
+
+
+DEFAULT_PAR = Par()
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ================================================================= init =====
+
+def _sc(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            * fan_in ** -0.5).astype(dtype)
+
+
+def init_attn(key, cfg: ModelConfig) -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "wq": _sc(ks[0], (D, H * Dh), D, dt),
+        "wk": _sc(ks[1], (D, Hkv * Dh), D, dt),
+        "wv": _sc(ks[2], (D, Hkv * Dh), D, dt),
+        "wo": _sc(ks[3], (H * Dh, D), H * Dh, dt),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((H * Dh,), jnp.float32),
+                 bk=jnp.zeros((Hkv * Dh,), jnp.float32),
+                 bv=jnp.zeros((Hkv * Dh,), jnp.float32))
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    p = {"wg": _sc(ks[0], (D, F), D, dt),
+         "wd": _sc(ks[2], (F, D), F, dt)}
+    if cfg.mlp_gated:
+        p["wu"] = _sc(ks[1], (D, F), D, dt)
+    return p
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    D, E = cfg.d_model, cfg.n_experts
+    Fe = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 7)
+    dt = _dtype(cfg)
+    p = {
+        "router": _sc(ks[0], (D, E), D, jnp.float32),
+        "wg": _sc(ks[1], (E, D, Fe), D, dt),
+        "wu": _sc(ks[2], (E, D, Fe), D, dt),
+        "wd": _sc(ks[3], (E, Fe, D), Fe, dt),
+    }
+    if cfg.n_shared_experts:
+        Fs = Fe * cfg.n_shared_experts
+        p.update(shared_wg=_sc(ks[4], (D, Fs), D, dt),
+                 shared_wu=_sc(ks[5], (D, Fs), D, dt),
+                 shared_wd=_sc(ks[6], (Fs, D), Fs, dt))
+    return p
+
+
+def init_block(key, kind: str, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("A", "L", "S"):
+        p = {"ln1": jnp.zeros((D,), jnp.float32),
+             "ln2": jnp.zeros((D,), jnp.float32),
+             "attn": init_attn(ks[0], cfg)}
+        p["mlp"] = (init_moe(ks[1], cfg)
+                    if cfg.n_experts and kind != "S" else init_mlp(ks[1], cfg))
+        return p
+    if kind == "M":
+        return {"ln1": jnp.zeros((D,), jnp.float32),
+                "mamba": init_mamba2(ks[0], D, ssm_state=cfg.ssm_state,
+                                     head_dim=cfg.ssm_head_dim,
+                                     conv_kernel=cfg.conv_kernel,
+                                     dtype=_dtype(cfg))}
+    if kind == "R":
+        return {"ln1": jnp.ones((D,), jnp.float32),
+                "ln1b": jnp.zeros((D,), jnp.float32),
+                "ln2": jnp.ones((D,), jnp.float32),
+                "ln2b": jnp.zeros((D,), jnp.float32),
+                "rwkv": init_rwkv6(ks[0], D, cfg.d_ff,
+                                   head_dim=cfg.ssm_head_dim,
+                                   dtype=_dtype(cfg))}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key=None) -> dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k_embed, k_groups, k_shared, k_head = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    params: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        params["embed"] = _sc(k_embed, (cfg.vocab_size, cfg.d_model),
+                              cfg.d_model, dt)
+    if cfg.prologue:
+        pro_keys = jax.random.split(jax.random.fold_in(k_groups, 1),
+                                    len(cfg.prologue))
+        params["prologue"] = [
+            {} if kind == "S" else init_block(pro_keys[i], kind, cfg)
+            for i, kind in enumerate(cfg.prologue)]
+    # per-position stacks over groups
+    group_params: List[dict] = []
+    pos_keys = jax.random.split(k_groups, len(cfg.pattern))
+    for pos, kind in enumerate(cfg.pattern):
+        if kind == "S":
+            group_params.append({})  # shared weights live outside the stack
+            continue
+        gkeys = jax.random.split(pos_keys[pos], cfg.n_groups)
+        group_params.append(
+            jax.vmap(lambda k: init_block(k, kind, cfg))(gkeys))
+    params["groups"] = group_params
+    if "S" in cfg.pattern:
+        params["shared"] = init_block(k_shared, "S", cfg)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["head"] = _sc(k_head, (cfg.d_model, cfg.vocab_size),
+                             cfg.d_model, dt)
+    return params
+
+
+# ================================================================ caches =====
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode caches: {'pro': one per prologue block (unstacked),
+    'grp': one per pattern position, stacked over groups}."""
+    return {
+        "pro": [jax.tree.map(lambda a: a[0], _position_cache(
+            cfg, k, batch, max_len, 1)) for k in cfg.prologue],
+        "grp": [_position_cache(cfg, k, batch, max_len, cfg.n_groups)
+                for k in cfg.pattern],
+    }
+
+
+def _position_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    ng: int):
+    dt = _dtype(cfg)
+    if kind in ("A", "S", "L", "M", "R"):
+        if kind in ("A", "S"):
+            S = max_len
+            return {
+                "k": jnp.zeros((ng, batch, S, cfg.n_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((ng, batch, S, cfg.n_kv_heads, cfg.head_dim), dt),
+            }
+        elif kind == "L":
+            S = min(cfg.window, max_len)
+            return {
+                "k": jnp.zeros((ng, batch, S, cfg.n_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((ng, batch, S, cfg.n_kv_heads, cfg.head_dim), dt),
+            }
+        elif kind == "M":
+            d_inner = 2 * cfg.d_model
+            H = d_inner // cfg.ssm_head_dim
+            return MambaState(
+                ssm=jnp.zeros((ng, batch, H, cfg.ssm_state,
+                               cfg.ssm_head_dim), jnp.float32),
+                conv=jnp.zeros((ng, batch, cfg.conv_kernel - 1, d_inner), dt))
+        elif kind == "R":
+            N = cfg.ssm_head_dim
+            H = cfg.d_model // N
+            return RWKVState(
+                wkv=jnp.zeros((ng, batch, H, N, N), jnp.float32),
+                prev_tm=jnp.zeros((ng, batch, cfg.d_model), dt),
+                prev_cm=jnp.zeros((ng, batch, cfg.d_model), dt))
+    raise ValueError(kind)
+
+
+# =============================================================== blocks =====
+
+def _apply_rope(cfg, q, k, positions, pos3):
+    if cfg.mrope_sections is not None and pos3 is not None:
+        return (mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta),
+                mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta))
+    return (rope(q, positions, cfg.rope_theta, cfg.rope_dim),
+            rope(k, positions, cfg.rope_theta, cfg.rope_dim))
+
+
+def attention_block(x, p, cfg: ModelConfig, par: Par, kind: str, *,
+                    positions, cache=None, pos=None, pos3=None):
+    """Returns (y, new_cache). Handles train (no cache), prefill (cache
+    write), and decode (T==1, cache read+write)."""
+    B, T, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cache is None and getattr(par, "ulysses_ok", lambda *_: False)(cfg, T):
+        return par.ulysses_attention(x, p, cfg, kind, positions), None
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, T, H, Dh)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, T, Hkv, Dh)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, T, Hkv, Dh)
+    q, k = _apply_rope(cfg, q, k, positions, pos3)
+    q = par.constraint(q, "heads")
+    k = par.constraint(k, "kv_heads")
+    v = par.constraint(v, "kv_heads")
+
+    new_cache = cache
+    if cache is not None and T == 1:
+        S = cache["k"].shape[1]
+        ring = kind == "L" and cfg.window is not None
+        slot = jnp.mod(pos, S) if ring else pos
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        window = cfg.window if kind == "L" else None
+        o = decode_attention_jax(q, kc, vc, pos, window=window, ring=ring)
+    else:
+        if cache is not None:  # prefill: populate the cache
+            S = cache["k"].shape[1]
+            if S >= T:
+                kc = jax.lax.dynamic_update_slice(
+                    cache["k"], k, (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    cache["v"], v, (0, 0, 0, 0))
+            else:  # ring cache smaller than prompt: keep last S, rotated
+                kc = jnp.roll(k[:, -S:], T % S, axis=1)
+                vc = jnp.roll(v[:, -S:], T % S, axis=1)
+            new_cache = {"k": kc, "v": vc}
+        import os as _os
+        bq = int(_os.environ.get("NNCG_FLASH_BQ", 512))
+        bk = int(_os.environ.get("NNCG_FLASH_BK", 512))
+        if kind == "L" and cfg.window is not None:
+            o = local_mha(q, k, v, cfg.window, None, min(bq, 256))
+        else:
+            o = flash_mha(q, k, v, cfg.causal, None, None, bq, bk)
+    o = par.constraint(o, "heads")
+    y = linear(o.reshape(B, T, H * Dh), p["wo"])
+    return y, new_cache
+
+
+def mlp_block(x, p, cfg: ModelConfig, par: Par, kind: str):
+    if cfg.n_experts and kind != "S":
+        y = par.moe(x, p, cfg)  # (B,T,D); flattened inside the shard_map
+    else:
+        y = gated_mlp(x, p, cfg.act)
+    return y
+
+
+def apply_block(x, kind: str, p, cfg: ModelConfig, par: Par, *,
+                positions, cache=None, pos=None, pos3=None):
+    if kind in ("A", "L", "S"):
+        h, new_cache = attention_block(
+            rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, par, kind,
+            positions=positions, cache=cache, pos=pos, pos3=pos3)
+        x = x + h
+        x = x + mlp_block(rms_norm(x, p["ln2"], cfg.norm_eps),
+                          p["mlp"], cfg, par, kind)
+        return x, new_cache
+    if kind == "M":
+        h, new_state = mamba2_mix(
+            rms_norm(x, p["ln1"], cfg.norm_eps), p["mamba"],
+            ssm_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim, state=cache)
+        return x + h, new_state
+    if kind == "R":
+        h, wkv, prev_tm = rwkv6_time_mix(
+            layer_norm(x, p["ln1"], p["ln1b"]), p["rwkv"],
+            head_dim=cfg.ssm_head_dim, state=cache,
+            constraint=lambda t: par.constraint(t, "ssm_heads"))
+        x = x + h
+        h, prev_cm = rwkv6_channel_mix(
+            layer_norm(x, p["ln2"], p["ln2b"]), p["rwkv"],
+            None if cache is None else cache.prev_cm)
+        x = x + h
+        return x, RWKVState(wkv=wkv, prev_tm=prev_tm, prev_cm=prev_cm)
+    raise ValueError(kind)
+
+
+# ================================================================ stack =====
+
+def apply_stack(x, params, cfg: ModelConfig, par: Par, *,
+                positions, caches=None, pos=None, pos3=None):
+    """Run the full layer stack. Returns (x, new_caches)."""
+    shared_p = params.get("shared")
+    have_cache = caches is not None
+
+    def one_block(x, kind, p, c):
+        x = par.constraint(x, "activations")
+        return apply_block(x, kind, p, cfg, par, positions=positions,
+                           cache=c, pos=pos, pos3=pos3)
+
+    if cfg.remat == "full":
+        # per-BLOCK remat: backward replays one block at a time, so the
+        # live residual set is O(one block), not O(group) — critical for
+        # long repeating groups (gemma3: 17/31 blocks per group).
+        one_block = jax.checkpoint(one_block, static_argnums=(1,))
+
+    def group_body(x, group_slice, cache_slice):
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            p = shared_p if kind == "S" else group_slice[i]
+            c = cache_slice[i] if have_cache else None
+            x, nc = one_block(x, kind, p, c)
+            new_caches.append(nc)
+        return x, new_caches
+
+    # prologue: unscanned blocks with their own (unstacked) params/caches
+    new_pro = []
+    for i, kind in enumerate(cfg.prologue):
+        p = shared_p if kind == "S" else params["prologue"][i]
+        c = caches["pro"][i] if have_cache else None
+        x, nc = one_block(x, kind, p, c)
+        new_pro.append(nc)
+
+    grp_caches = caches["grp"] if have_cache else None
+    if cfg.scan_layers:
+        if have_cache:
+            def scan_fn(carry, xs):
+                gp, cs = xs
+                return group_body(carry, gp, cs)
+            x, new_grp = jax.lax.scan(scan_fn, x,
+                                      (params["groups"], grp_caches))
+        else:
+            def scan_fn(carry, xs):
+                y, _ = group_body(carry, xs, [None] * len(cfg.pattern))
+                return y, ()
+            x, _ = jax.lax.scan(scan_fn, x, params["groups"])
+            return x, None
+    else:
+        # unrolled (P1 level-0 analogue)
+        acc = [[] for _ in cfg.pattern]
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            cs = (jax.tree.map(lambda a: a[g], grp_caches) if have_cache
+                  else [None] * len(cfg.pattern))
+            x, ncs = group_body(x, gp, cs)
+            if have_cache:
+                for i, nc in enumerate(ncs):
+                    acc[i].append(nc)
+        if not have_cache:
+            return x, None
+        new_grp = [jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+                   for ncs in acc]
+    return x, {"pro": new_pro, "grp": new_grp}

@@ -1,0 +1,1 @@
+from .adamw import AdamW, AdamWState, global_norm, warmup_cosine

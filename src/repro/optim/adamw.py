@@ -1,0 +1,80 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule.
+
+Self-contained (no optax). Moments are f32 regardless of param dtype —
+the standard mixed-precision recipe; with FSDP-sharded params the
+moments inherit the same sharding (they are elementwise pytrees).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: any
+    nu: any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale), grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g),
+            state.nu, grads)
+        t = step.astype(jnp.float32)
+        mu_hat_c = 1.0 / (1 - self.b1 ** t)
+        nu_hat_c = 1.0 / (1 - self.b2 ** t)
+        lr = (self.learning_rate(step)
+              if callable(self.learning_rate) else self.learning_rate)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr * (m * mu_hat_c
+                                   / (jnp.sqrt(v * nu_hat_c) + self.eps)
+                                   + self.weight_decay
+                                   * p.astype(jnp.float32)),
+            mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,36 @@
+"""P4 head-dim alignment is function-preserving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lm_archs import ARCHS
+from repro.models import forward, init_params
+from repro.models.align import pad_head_dim
+
+
+def test_pad_head_dim_exact():
+    # danube-like smoke with a non-aligned head_dim (12 -> pad to 16)
+    cfg = dataclasses.replace(
+        ARCHS["h2o-danube-3-4b"].smoke(), head_dim=12, n_heads=4,
+        n_kv_heads=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    padded, cfg_p = pad_head_dim(params, cfg, 16)
+    assert cfg_p.head_dim == 16
+    batch = {"tokens": jnp.arange(2 * 24).reshape(2, 24) % cfg.vocab_size}
+    y0, _ = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    y1, _ = jax.jit(lambda p, b: forward(p, cfg_p, b))(padded, batch)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pad_head_dim_with_bias():
+    cfg = dataclasses.replace(ARCHS["qwen1.5-110b"].smoke(), head_dim=12)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    padded, cfg_p = pad_head_dim(params, cfg, 16)
+    batch = {"tokens": jnp.arange(2 * 16).reshape(2, 16) % cfg.vocab_size}
+    y0, _ = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    y1, _ = jax.jit(lambda p, b: forward(p, cfg_p, b))(padded, batch)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,169 @@
+"""Tests for the NNCG core: graph IR, passes, C code generation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.cnn_paper import PAPER_CNNS, ball_classifier
+from repro.core import cgen, jax_exec, passes, runtime
+from repro.core.graph import (
+    BatchNorm, CNNGraph, Conv2D, Dropout, Input, LeakyReLU, MaxPool, ReLU,
+    Softmax,
+)
+
+RTOL, ATOL = 1e-3, 1e-5
+
+
+def _rand_conv(rng, kh, kw, ci, co, **kw_args):
+    w = rng.normal(0, 0.5, (kh, kw, ci, co)).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Conv2D(weights=w, bias=b, **kw_args)
+
+
+# ---------------------------------------------------------------- shapes ----
+
+def test_paper_shapes():
+    """Tables I-III: output shapes match the hand-derived values."""
+    assert PAPER_CNNS["ball"]().output_shape == (1, 1, 2)
+    assert PAPER_CNNS["pedestrian"]().output_shape == (1, 1, 2)
+    assert PAPER_CNNS["robot"]().output_shape == (15, 20, 20)
+
+
+def test_same_padding_matches_jax():
+    rng = np.random.default_rng(0)
+    g = CNNGraph([Input(shape=(7, 9, 3)),
+                  _rand_conv(rng, 3, 3, 3, 4, strides=(2, 2), padding="same")])
+    assert g.output_shape == (4, 5, 4)
+
+
+# ---------------------------------------------------------------- passes ----
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_bn_fold_equivalence(ci, co, seed):
+    """Paper §II-B.4: bn(conv(x)) == conv'(x) after weight folding."""
+    rng = np.random.default_rng(seed)
+    g = CNNGraph([
+        Input(shape=(5, 5, ci)),
+        _rand_conv(rng, 3, 3, ci, co, padding="same"),
+        BatchNorm(mean=rng.normal(0, 1, co), var=rng.uniform(0.1, 2, co),
+                  gamma=rng.uniform(0.5, 1.5, co), beta=rng.normal(0, 1, co)),
+    ])
+    folded = passes.fold_batchnorm(g)
+    assert not any(isinstance(l, BatchNorm) for l in folded.layers)
+    x = rng.normal(0, 1, (5, 5, ci)).astype(np.float32)
+    np.testing.assert_allclose(jax_exec.predict(g, x),
+                               jax_exec.predict(folded, x),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 7), st.integers(1, 7),
+       st.integers(0, 2 ** 31 - 1))
+def test_align_channels_equivalence(ci, co1, co2, seed):
+    """P4 zero-filter padding never changes visible outputs."""
+    rng = np.random.default_rng(seed)
+    g = CNNGraph([
+        Input(shape=(8, 8, ci)),
+        _rand_conv(rng, 3, 3, ci, co1, padding="same"),
+        LeakyReLU(alpha=0.1),
+        MaxPool(size=(2, 2)),
+        _rand_conv(rng, 3, 3, co1, co2, padding="valid"),
+        Softmax(),
+    ])
+    ga = passes.align_channels(g, multiple=4)
+    convs = [l for l in ga.layers if isinstance(l, Conv2D)]
+    assert convs[0].c_out % 4 == 0
+    assert convs[-1].c_out == co2  # last conv is never padded
+    x = rng.normal(0, 1, (8, 8, ci)).astype(np.float32)
+    np.testing.assert_allclose(jax_exec.predict(g, x),
+                               jax_exec.predict(ga, x), rtol=1e-4, atol=1e-5)
+
+
+def test_full_pipeline_equivalence():
+    for name, builder in PAPER_CNNS.items():
+        g = builder()
+        go = passes.optimize(g, simd_multiple=4)
+        assert not any(isinstance(l, (Dropout, BatchNorm, ReLU, LeakyReLU))
+                       for l in go.layers), name
+        x = np.random.default_rng(3).normal(size=g.input_shape).astype(np.float32)
+        np.testing.assert_allclose(jax_exec.predict(g, x),
+                                   jax_exec.predict(go, x),
+                                   rtol=1e-3, atol=1e-5)
+
+
+# ------------------------------------------------------------------ cgen ----
+
+@pytest.mark.parametrize("simd", ["generic", "structured", "sse", "avx"])
+@pytest.mark.parametrize("level", [0, 1, 2, None])
+def test_cgen_small_net_all_modes(simd, level):
+    """Every (simd x unroll level) combination is numerically exact."""
+    if simd == "sse" and not runtime.host_supports_ssse3():
+        pytest.skip("host lacks SSSE3")
+    if simd == "avx" and not runtime.host_supports_avx2():
+        pytest.skip("host lacks AVX2/FMA")
+    rng = np.random.default_rng(7)
+    g = CNNGraph([
+        Input(shape=(9, 7, 2)),
+        _rand_conv(rng, 3, 3, 2, 8, strides=(2, 2), padding="same"),
+        LeakyReLU(alpha=0.1),
+        MaxPool(size=(2, 2)),
+        _rand_conv(rng, 2, 2, 8, 3, padding="valid"),
+        Softmax(),
+    ])
+    g = passes.fuse_activations(g)
+    net = runtime.build(g, cgen.CodegenOptions(simd=simd, unroll=level))
+    x = rng.normal(0, 1, g.input_shape).astype(np.float32)
+    ref = jax_exec.predict(g, x)
+    np.testing.assert_allclose(net(x).reshape(ref.shape), ref,
+                               rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("simd", ["sse", "avx"])
+@pytest.mark.parametrize("name", list(PAPER_CNNS))
+def test_cgen_paper_nets(name, simd):
+    if simd == "avx" and not runtime.host_supports_avx2():
+        pytest.skip("host lacks AVX2/FMA")
+    width = cgen.ISAS[simd].width
+    g = passes.optimize(PAPER_CNNS[name](), simd_multiple=width)
+    opts = cgen.CodegenOptions(simd=simd, unroll=cgen.choose_levels(g, 20_000))
+    net = runtime.build(g, opts)
+    x = np.random.default_rng(11).normal(size=g.input_shape).astype(np.float32)
+    ref = jax_exec.predict(g, x)
+    np.testing.assert_allclose(net(x).reshape(ref.shape), ref,
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_cgen_dependencies_are_ansi_only():
+    """Paper claim: no includes beyond math.h (+ SSE intrinsics)."""
+    g = passes.optimize(ball_classifier())
+    src = cgen.generate_c(g, cgen.CodegenOptions(simd="generic"))
+    includes = [l for l in src.splitlines() if l.startswith("#include")]
+    assert includes == ["#include <math.h>"]
+    src_sse = cgen.generate_c(g, cgen.CodegenOptions(simd="sse"))
+    includes = [l for l in src_sse.splitlines() if l.startswith("#include")]
+    assert set(includes) == {"#include <math.h>", "#include <emmintrin.h>"}
+
+
+def test_cgen_no_if_branches():
+    """P2: generated compute code uses ternaries, never `if` statements."""
+    g = passes.optimize(ball_classifier())
+    src = cgen.generate_c(g, cgen.CodegenOptions(simd="generic", unroll=0))
+    assert " if " not in src and "\nif" not in src
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.integers(1, 5), st.sampled_from([1, 2]),
+       st.sampled_from(["same", "valid"]), st.integers(0, 2 ** 31 - 1))
+def test_cgen_property_conv(ci, co, stride, padding, seed):
+    """Property: any small conv net's C output == JAX oracle."""
+    rng = np.random.default_rng(seed)
+    g = CNNGraph([
+        Input(shape=(6, 6, ci)),
+        _rand_conv(rng, 3, 3, ci, co, strides=(stride, stride),
+                   padding=padding, activation="leaky_relu"),
+    ])
+    net = runtime.build(g, cgen.CodegenOptions(simd="generic", unroll=None))
+    x = rng.normal(0, 1, g.input_shape).astype(np.float32)
+    ref = jax_exec.predict(g, x)
+    np.testing.assert_allclose(net(x).reshape(ref.shape), ref,
+                               rtol=RTOL, atol=ATOL)

@@ -1,0 +1,58 @@
+"""int8 gradient compression: quantization error, error feedback, and
+psum correctness on a multi-device pod axis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compress import (compress_allreduce, dequantize_int8,
+                                  quantize_int8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_error_bound(seed, scale):
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, scale, (64,)),
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-6  # half-ULP of the int8 grid
+
+
+def test_error_feedback_converges():
+    """With error feedback, the *running sum* of compressed gradients
+    tracks the true sum (bias does not accumulate)."""
+    rng = np.random.default_rng(0)
+    true_sum = jnp.zeros(32)
+    comp_sum = jnp.zeros(32)
+    residual = None
+    for step in range(50):
+        g = {"w": jnp.asarray(rng.normal(0, 1, (32,)), jnp.float32)}
+        out, residual = compress_allreduce(g, residual)
+        true_sum = true_sum + g["w"]
+        comp_sum = comp_sum + out["w"]
+    # relative drift of the accumulated update stays at the quant grid
+    drift = float(jnp.abs(true_sum - comp_sum).max())
+    assert drift < 0.1, drift
+
+
+def test_psum_over_pod_axis():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    if jax.device_count() < 2:
+        import pytest
+        pytest.skip("needs >1 device")
+    mesh = jax.make_mesh((jax.device_count(),), ("pod",))
+
+    def f(g):
+        out, _ = compress_allreduce({"w": g}, axis_name="pod")
+        return out["w"]
+
+    g_global = jnp.arange(jax.device_count() * 8, dtype=jnp.float32
+                          ).reshape(jax.device_count(), 8) / 10.0
+    with mesh:
+        y = shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                      out_specs=P("pod", None))(g_global)
+    want = g_global.mean(axis=0)
+    got = np.asarray(y)[0]
+    np.testing.assert_allclose(got, np.asarray(want), atol=0.02)

@@ -1,0 +1,81 @@
+"""Dry-run integration tests (subprocess: needs its own XLA device count).
+
+The production 16x16 / 2x16x16 sweeps live in results/dryrun (see
+EXPERIMENTS.md); these tests prove the machinery end-to-end on a small
+placeholder mesh so the suite stays fast.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape, mesh, tmp, extra=()):
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+           "NNCG_DRYRUN_DEVICES": "8"}
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", str(tmp), *extra]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       cwd=REPO, timeout=540)
+    assert r.returncode == 0, r.stderr[-3000:]
+    tag = "probe" if "--probe" in extra else (
+        "multipod" if "--multipod" in extra else "pod")
+    with open(os.path.join(str(tmp), f"{arch}__{shape}__{tag}.json")) as f:
+        d = json.load(f)
+    assert d["ok"], d.get("error")
+    return d
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("h2o-danube-3-4b", "train_4k"),      # dense SWA train
+    ("deepseek-moe-16b", "decode_32k"),   # MoE decode w/ caches
+    ("zamba2-2.7b", "long_500k"),         # hybrid 500k decode
+    ("hubert-xlarge", "prefill_32k"),     # encoder forward
+])
+def test_dryrun_cells_debug_mesh(arch, shape, tmp_path):
+    d = _run(arch, shape, "2,4", tmp_path)
+    key = "full"
+    assert d[key]["flops"] > 0
+    assert d[key]["memory"]["argument_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_axis(tmp_path):
+    """3-axis (pod,data,model) debug mesh lowers and compiles."""
+    d = _run("gemma3-4b", "train_4k", "2,2,2", tmp_path,
+             extra=("--multipod",))
+    assert d["axes"] == ["pod", "data", "model"]
+    assert d["full"]["collectives"]["total_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_probe_extrapolation(tmp_path):
+    """g2 costs strictly exceed g1 (one extra group of layers)."""
+    d = _run("rwkv6-7b", "train_4k", "2,4", tmp_path, extra=("--probe",))
+    assert d["g2"]["flops"] > d["g1"]["flops"] > 0
+
+
+def test_production_sweep_results_complete():
+    """The committed production sweep covers all 34 cells x 3 tags, all ok
+    (this is the actual deliverable; regenerate with dryrun --all)."""
+    from repro.configs.lm_archs import all_cells
+    res = os.path.join(REPO, "results", "dryrun")
+    if not os.path.isdir(res):
+        pytest.skip("production sweep not present")
+    missing, failed = [], []
+    for arch, shape in all_cells():
+        for tag in ("pod", "probe", "multipod"):
+            p = os.path.join(res, f"{arch}__{shape}__{tag}.json")
+            if not os.path.exists(p):
+                missing.append((arch, shape, tag))
+                continue
+            with open(p) as f:
+                if not json.load(f).get("ok"):
+                    failed.append((arch, shape, tag))
+    assert not missing, f"missing cells: {missing[:8]}"
+    assert not failed, f"failed cells: {failed[:8]}"
