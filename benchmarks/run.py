@@ -1,12 +1,14 @@
-"""Paper-table benchmarks (one function per table).
+"""Paper-table benchmarks (one function per table), on the engine API.
 
 Reproduces the NNCG evaluation on the container CPU:
   * Tables IV/V/VI — per-image inference latency of the generated C
     (compiled with the host cc, the paper's deployment path) vs. the XLA
     baseline (jax.jit == today's TF-XLA stack, the paper's main rival).
+    The C build is *autotuned*: the engine benchmarks every per-layer
+    codegen variant and keeps the fastest (paper Table VII selection),
+    caching the result on disk so reruns compile nothing.
   * Table VII — feature ablation: generic scalar C -> SSE layout ->
-    SSE + full unroll (+ an autotuned per-layer variant, the paper's
-    "benchmark every code version per layer" selection).
+    SSE + full unroll -> autotuned per-layer selection.
 
 Prints ``name,us_per_call,derived`` CSV rows; ``derived`` is the
 speed-up over the XLA baseline (Tables IV-VI) or over the generic build
@@ -16,57 +18,44 @@ from __future__ import annotations
 
 import os
 import sys
-import time
 
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
 from repro.configs.cnn_paper import PAPER_CNNS  # noqa: E402
-from repro.core import cgen, jax_exec, passes, runtime  # noqa: E402
+from repro.core import runtime  # noqa: E402
+from repro.engine import InferenceSession  # noqa: E402
 
 ITERS = {"ball": 20000, "pedestrian": 3000, "robot": 800}
 
 
-def _xla_us(graph, x, iters) -> float:
-    f = jax_exec.make_jit_forward(graph)
-    xb = jnp.asarray(x[None])
-    f(xb).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        f(xb).block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
-
-
-def _nncg_net(graph, simd="sse", unroll="auto", budget=20000):
-    opts = cgen.CodegenOptions(
-        simd=simd,
-        unroll=cgen.choose_levels(graph, budget) if unroll == "auto"
-        else unroll)
-    return runtime.build(graph, opts)
-
-
 def _bench_cnn(name: str):
     simd = runtime.best_isa()
-    width = cgen.ISAS[simd].width if simd in cgen.ISAS else 4
-    g = passes.optimize(PAPER_CNNS[name](), simd_multiple=width)
-    x = np.random.default_rng(0).normal(size=g.input_shape).astype(np.float32)
     iters = ITERS[name]
-    # paper §II-B.1: per-layer variant selection by benchmarking
-    levels, _ = autotune_levels(g, simd, x, iters=max(200, iters // 20))
-    net = runtime.build(g, cgen.CodegenOptions(simd=simd, unroll=levels))
+    tune_iters = max(200, iters // 20)
+    g = PAPER_CNNS[name]()
+    x = np.random.default_rng(0).normal(
+        size=g.input_shape).astype(np.float32)
+
+    tuned = InferenceSession(g, backend="c", autotune=True, simd=simd,
+                             tune_iters=tune_iters)
+    untuned = InferenceSession(g, backend="c", simd=simd)
+    xla = InferenceSession(g, backend="xla")
+
     # correctness gate before timing
-    ref = jax_exec.predict(g, x)
-    np.testing.assert_allclose(net(x).reshape(ref.shape), ref,
-                               rtol=1e-3, atol=1e-5)
-    t_c = net.time_per_call_us(x, iters=iters)
-    t_x = _xla_us(g, x, max(iters // 10, 100))
-    print(f"table_{name}_nncg_c,{t_c:.2f},speedup_vs_xla={t_x / t_c:.2f}")
+    ref = xla.predict(x)
+    np.testing.assert_allclose(tuned.predict(x), ref, rtol=1e-3, atol=1e-5)
+
+    t_c = tuned.benchmark(x, iters=iters)
+    t_u = untuned.benchmark(x, iters=iters)
+    t_x = xla.benchmark(x, iters=max(iters // 10, 100))
+    print(f"table_{name}_nncg_c_autotuned,{t_c:.2f},"
+          f"speedup_vs_xla={t_x / t_c:.2f}")
+    print(f"table_{name}_nncg_c_untuned,{t_u:.2f},"
+          f"autotune_gain={t_u / t_c:.2f}")
     print(f"table_{name}_xla_jit,{t_x:.2f},baseline=1.0")
-    return t_c, t_x
+    return t_c, t_u, t_x
 
 
 def bench_table4_ball():
@@ -81,57 +70,31 @@ def bench_table6_robot():
     return _bench_cnn("robot")
 
 
-def autotune_levels(graph, simd: str, x, iters=3000):
-    """The paper's per-layer variant selection: benchmark every unroll
-    level per layer (greedy coordinate descent) and keep the fastest."""
-    from repro.core.graph import Conv2D, MaxPool
-    levels = cgen.choose_levels(graph, 20000)
-    best = runtime.build(graph, cgen.CodegenOptions(
-        simd=simd, unroll=dict(levels))).time_per_call_us(x, iters=iters)
-    shape = graph.input_shape
-    shapes = {}
-    cur = shape
-    for layer in graph.layers:
-        shapes[layer.name] = cur
-        cur = layer.out_shape(cur)
-    for layer in graph.layers:
-        if not isinstance(layer, (Conv2D, MaxPool)):
-            continue
-        for lvl in (0, 1, 2, None):
-            if levels.get(layer.name) == lvl:
-                continue
-            if cgen.estimate_terms(layer, shapes[layer.name],
-                                   lvl) > 200_000:
-                continue
-            trial = dict(levels)
-            trial[layer.name] = lvl
-            t = runtime.build(graph, cgen.CodegenOptions(
-                simd=simd, unroll=trial)).time_per_call_us(x, iters=iters)
-            if t < best:
-                best, levels = t, trial
-    return levels, best
-
-
 def bench_table7_features():
-    g4 = passes.optimize(PAPER_CNNS["ball"](), simd_multiple=4)
-    x = np.random.default_rng(0).normal(size=g4.input_shape).astype(np.float32)
-    iters = ITERS["ball"]
+    name = "ball"
+    iters = ITERS[name]
+    g = PAPER_CNNS[name]()
+    x = np.random.default_rng(0).normal(
+        size=g.input_shape).astype(np.float32)
     sse = "sse" if runtime.host_supports_ssse3() else "structured"
 
-    t_gen = _nncg_net(g4, simd="generic", unroll=None).time_per_call_us(
-        x, iters=iters)
-    t_sse = _nncg_net(g4, simd=sse, unroll=None).time_per_call_us(
-        x, iters=iters)
-    t_full = _nncg_net(g4, simd=sse, unroll="auto").time_per_call_us(
-        x, iters=iters)
-    _, t_tuned = autotune_levels(g4, sse, x)
+    t_gen = InferenceSession(g, backend="c", simd="generic",
+                             unroll=None).benchmark(x, iters=iters)
+    t_sse = InferenceSession(g, backend="c", simd=sse,
+                             unroll=None).benchmark(x, iters=iters)
+    t_full = InferenceSession(g, backend="c", simd=sse,
+                              unroll="auto").benchmark(x, iters=iters)
+    tuned = InferenceSession(g, backend="c", simd=sse, autotune=True,
+                             tune_iters=max(200, iters // 20))
+    t_tuned = tuned.benchmark(x, iters=iters)
     print(f"table7_general,{t_gen:.2f},speedup=1.0")
     print(f"table7_simd,{t_sse:.2f},speedup={t_gen / t_sse:.2f}")
     print(f"table7_simd_full_unroll,{t_full:.2f},speedup={t_gen / t_full:.2f}")
     print(f"table7_simd_autotuned,{t_tuned:.2f},speedup={t_gen / t_tuned:.2f}")
     if runtime.host_supports_avx2():  # the paper's named future work
-        g8 = passes.optimize(PAPER_CNNS["ball"](), simd_multiple=8)
-        _, t_avx = autotune_levels(g8, "avx", x)
+        avx = InferenceSession(g, backend="c", simd="avx", autotune=True,
+                               tune_iters=max(200, iters // 20))
+        t_avx = avx.benchmark(x, iters=iters)
         print(f"table7_avx_fma_autotuned,{t_avx:.2f},"
               f"speedup={t_gen / t_avx:.2f}")
 

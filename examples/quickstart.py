@@ -1,18 +1,16 @@
 """Quickstart: the full NNCG flow on the paper's ball classifier.
 
   1. Build the Table-I CNN and *train* it on the synthetic ball dataset.
-  2. Run the NNCG optimization passes (dropout removal, BN fold,
-     activation fusion, P4 channel alignment).
-  3. Generate the single ANSI C file, compile it with the host cc, and
-     validate it against the JAX oracle.
-  4. Measure latency: generated C vs XLA(jit) — the paper's Table IV row
-     for this machine.
+  2. Hand it to the inference engine: ``InferenceSession`` runs the NNCG
+     passes, autotunes the per-layer codegen variants, compiles the C,
+     and serves single images or batches.
+  3. Validate against the XLA oracle and measure latency — the paper's
+     Table IV row for this machine.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -21,8 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.cnn_paper import ball_classifier
-from repro.core import cgen, jax_exec, passes, runtime
+from repro.core import jax_exec, runtime
 from repro.data.pipeline import ball_image_batch
+from repro.engine import InferenceSession
 from repro.optim import AdamW
 
 # ---------------------------------------------------------------- 1. train
@@ -63,32 +62,30 @@ print(f"accuracy on held-out synthetic set: {acc:.4f} "
 
 trained = jax_exec.insert_params(graph, params)
 
-# ------------------------------------------------------------- 2. optimize
-optimized = passes.optimize(trained, simd_multiple=4)
-
-# ------------------------------------------------- 3. generate + validate C
+# ------------------------- 2-3. engine: optimize + autotune + compile C
+# InferenceSession runs the NNCG passes, benchmarks every per-layer
+# codegen variant (paper Table VII selection, cached on disk), compiles
+# the winner with the host cc, and serves batches.
 simd = "sse" if runtime.host_supports_ssse3() else "structured"
-opts = cgen.CodegenOptions(simd=simd,
-                           unroll=cgen.choose_levels(optimized, 20000))
-source = cgen.generate_c(optimized, opts)
-net = runtime.build(optimized, opts)
-print(f"generated {len(source)/1e3:.0f} KB of C "
-      f"({source.count(chr(10))} lines), compiled to {net.so_path}")
+sess = InferenceSession(trained, backend="c", autotune=True, simd=simd,
+                        tune_iters=500)
+info = sess.info
+print(f"generated {info['c_source_bytes']/1e3:.0f} KB of C, "
+      f"compiled to {info['so_path']}")
+print(f"autotuned per-layer unroll levels: {info['levels']} "
+      f"(from_cache={info['tuned_from_cache']})")
 
+oracle = InferenceSession(trained, backend="xla", simd=simd)
 x = xs[0]
-ref = jax_exec.predict(optimized, x)
-got = net(x).reshape(ref.shape)
-np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-5)
-print("C output == JAX oracle (allclose)")
+ref = oracle.predict(x)
+np.testing.assert_allclose(sess.predict(x), ref, rtol=1e-3, atol=1e-5)
+# batched serving path: one C call for the whole batch
+np.testing.assert_allclose(sess.predict(xs[:16]),
+                           oracle.predict(xs[:16]), rtol=1e-3, atol=1e-5)
+print("C output == JAX oracle (allclose, single image and batch)")
 
 # ------------------------------------------------------------- 4. latency
-t_c = net.time_per_call_us(x, iters=20000)
-f = jax_exec.make_jit_forward(optimized)
-xb = jnp.asarray(x[None])
-f(xb).block_until_ready()
-t0 = time.perf_counter()
-for _ in range(2000):
-    f(xb).block_until_ready()
-t_xla = (time.perf_counter() - t0) / 2000 * 1e6
+t_c = sess.benchmark(x, iters=20000)
+t_xla = oracle.benchmark(x, iters=2000)
 print(f"latency: NNCG C {t_c:.2f}us | XLA jit {t_xla:.2f}us | "
       f"speed-up {t_xla/t_c:.2f}x (paper: 11.81x vs TF-XLA on i7)")

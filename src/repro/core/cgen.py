@@ -50,6 +50,10 @@ from .graph import (
 
 Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
 
+# bump whenever the emitted C changes for the same (graph, options) —
+# cached artifacts measured on older generated code must not be reused
+CODEGEN_VERSION = 2
+
 
 @dataclass(frozen=True)
 class ISA:
@@ -109,10 +113,16 @@ class CodegenOptions:
     func_name: str = "nncg_net"
     term_budget: int = 60_000    # max emitted FMA terms per layer before
                                  # the level is demoted (icache trade-off)
+    emit_batch: bool = True      # also emit `<func>_batch(x, out, n)` —
+                                 # a loop-over-images serving entry point
 
     @property
     def isa(self) -> Optional[ISA]:
         return ISAS.get(self.simd)
+
+    @property
+    def batch_func_name(self) -> str:
+        return self.func_name + "_batch"
 
     def level_for(self, layer_name: str) -> Level:
         if isinstance(self.unroll, dict):
@@ -165,22 +175,36 @@ def estimate_terms(layer, in_shape, level: Level) -> int:
     return 0
 
 
+def enumerate_variants(layer, in_shape, term_cap: int = 200_000) -> List[Level]:
+    """Candidate unroll levels for one layer, deepest (level 0) first.
+
+    This is the variant space the paper benchmarks per layer ("we
+    independently benchmark every code version and select the one with
+    the best runtime performance").  Levels whose emitted-term count
+    exceeds ``term_cap`` are dropped — they would blow the icache (and
+    the compile time) before they could win; ``None`` (rolled loops) is
+    always feasible.  Returns ``[]`` for layers with no codegen variants.
+    """
+    if not isinstance(layer, (Conv2D, MaxPool)):
+        return []
+    return [lvl for lvl in (0, 1, 2, None)
+            if lvl is None or estimate_terms(layer, in_shape, lvl) <= term_cap]
+
+
 def choose_levels(graph: CNNGraph, budget: int = 60_000) -> Dict[str, Level]:
     """Pick, per layer, the deepest unroll level within the term budget.
 
     This is the static analogue of the paper's per-layer variant
-    benchmarking ("we independently benchmark every code version and
-    select the one with the best runtime performance") — the benchmark
-    harness can still override per layer.
+    benchmarking — the :mod:`repro.engine.autotune` tuner explores the
+    same :func:`enumerate_variants` space dynamically and can override
+    any choice made here.
     """
     levels: Dict[str, Level] = {}
     shape = graph.input_shape
     for layer in graph.layers:
-        if isinstance(layer, (Conv2D, MaxPool)):
-            for lvl in (0, 1, 2, None):
-                if lvl is None or estimate_terms(layer, shape, lvl) <= budget:
-                    levels[layer.name] = lvl
-                    break
+        for lvl in enumerate_variants(layer, shape, term_cap=budget):
+            levels[layer.name] = lvl
+            break
         shape = layer.out_shape(shape)
     return levels
 
@@ -702,6 +726,20 @@ class CGenerator:
                 raise TypeError(f"cgen: unhandled layer {type(layer).__name__}")
             src = dst
         self.w.close()
+
+        if opts.emit_batch:
+            # serving entry point: N images through the single-image
+            # function (the static scratch buffers make it sequential)
+            in_n = int(np.prod(g.input_shape))
+            out_n = int(np.prod(g.output_shape))
+            self.w("")
+            self.w.open(f"void {opts.batch_func_name}("
+                        f"const float *restrict x, float *restrict out, "
+                        f"int n)")
+            self.w(f"for (int b = 0; b < n; ++b) "
+                   f"{opts.func_name}(x + (long)b * {in_n}, "
+                   f"out + (long)b * {out_n});")
+            self.w.close()
 
         hdr = _W()
         hdr("/* Generated by NNCG-JAX (repro of Urbann et al., 2020).")

@@ -110,6 +110,18 @@ def make_jit_forward(graph: CNNGraph):
     return f
 
 
+def make_vmap_forward(graph: CNNGraph):
+    """Batched oracle: ``vmap`` of the single-image forward, jitted.
+
+    The serving-side counterpart of the generated C batch entry point —
+    one trace of the per-image program mapped over the batch axis."""
+
+    def single(xi):
+        return forward(graph, xi[None])[0]
+
+    return jax.jit(jax.vmap(single))
+
+
 def forward_pallas(graph: CNNGraph, x: jnp.ndarray) -> jnp.ndarray:
     """Run the CNN through the Pallas TPU kernels (conv2d fused with
     bias+activation, maxpool) — the TPU-native deployment path of the

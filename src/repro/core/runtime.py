@@ -24,19 +24,52 @@ from .graph import CNNGraph
 
 _CACHE_DIR = os.path.join(tempfile.gettempdir(), "nncg_cache")
 
+# observability for the engine's caching tests/telemetry: how often the
+# C compiler actually ran vs. the content-hash .so cache answering
+COMPILE_STATS = {"cc_invocations": 0, "so_cache_hits": 0}
+
 
 def _cc() -> str:
     return os.environ.get("CC", "cc")
 
 
+_CC_FINGERPRINTS: dict = {}
+
+
+def cc_fingerprint() -> str:
+    """First line of ``$CC --version``, cached per resolved compiler.
+
+    Part of every content-cache key (.so cache here, tuning cache in
+    the engine): a compiler change must invalidate measured artifacts.
+    """
+    cc = _cc()
+    if cc not in _CC_FINGERPRINTS:
+        try:
+            out = subprocess.run([cc, "--version"], capture_output=True,
+                                 text=True, timeout=10).stdout
+            _CC_FINGERPRINTS[cc] = (out.splitlines()[0].strip()
+                                    if out else cc)
+        except (OSError, subprocess.TimeoutExpired):  # pragma: no cover
+            _CC_FINGERPRINTS[cc] = cc
+    return _CC_FINGERPRINTS[cc]
+
+
 def compile_c(source: str, *, simd: str = "sse",
               extra_flags: Sequence[str] = ()) -> str:
-    """Compile C source to a shared object; returns the .so path."""
+    """Compile C source to a shared object; returns the .so path.
+
+    The output is cached by content hash over (source, simd, flags,
+    compiler), so an identical build never re-invokes the compiler and
+    a toolchain change never serves a stale binary.
+    """
     os.makedirs(_CACHE_DIR, exist_ok=True)
     key = hashlib.sha256(
-        (source + repr(extra_flags)).encode()).hexdigest()[:16]
+        (source + repr(simd) + repr(tuple(extra_flags))
+         + cc_fingerprint()).encode()
+    ).hexdigest()[:16]
     so_path = os.path.join(_CACHE_DIR, f"nncg_{key}.so")
     if os.path.exists(so_path):
+        COMPILE_STATS["so_cache_hits"] += 1
         return so_path
     c_path = os.path.join(_CACHE_DIR, f"nncg_{key}.c")
     with open(c_path, "w") as f:
@@ -47,6 +80,7 @@ def compile_c(source: str, *, simd: str = "sse",
         flags.extend(ISAS[simd].cc_flags)
     cmd = [_cc(), *flags, *extra_flags, c_path, "-o", so_path, "-lm"]
     t0 = time.time()
+    COMPILE_STATS["cc_invocations"] += 1
     proc = subprocess.run(cmd, capture_output=True, text=True)
     if proc.returncode != 0:
         raise RuntimeError(
@@ -66,6 +100,7 @@ class CompiledNet:
     in_size: int
     out_size: int
     c_source_bytes: int
+    batch_func_name: Optional[str] = None
 
     def __post_init__(self):
         lib = ctypes.CDLL(self.so_path)
@@ -73,6 +108,19 @@ class CompiledNet:
         self._fn.restype = None
         self._fn.argtypes = [ctypes.POINTER(ctypes.c_float),
                              ctypes.POINTER(ctypes.c_float)]
+        self._batch_fn = None
+        if self.batch_func_name:
+            try:
+                self._batch_fn = getattr(lib, self.batch_func_name)
+            except AttributeError:  # older .so without the batch entry
+                pass
+            else:
+                self._batch_fn.restype = None
+                self._batch_fn.argtypes = [
+                    ctypes.POINTER(ctypes.c_float),
+                    ctypes.POINTER(ctypes.c_float),
+                    ctypes.c_int,
+                ]
 
     def __call__(self, x: np.ndarray) -> np.ndarray:
         x = np.ascontiguousarray(x, dtype=np.float32)
@@ -81,6 +129,25 @@ class CompiledNet:
         self._fn(x.ctypes.data_as(ctypes.POINTER(ctypes.c_float)),
                  out.ctypes.data_as(ctypes.POINTER(ctypes.c_float)))
         return out
+
+    def predict_batch(self, x: np.ndarray) -> np.ndarray:
+        """Run N images through the C batch entry point; returns
+        ``(N, out_size)``. Falls back to a Python loop when the .so was
+        generated without the batch wrapper."""
+        x = np.ascontiguousarray(x, dtype=np.float32)
+        assert x.size % self.in_size == 0, (x.size, self.in_size)
+        n = x.size // self.in_size
+        out = np.empty(n * self.out_size, dtype=np.float32)
+        if self._batch_fn is not None:
+            self._batch_fn(
+                x.ctypes.data_as(ctypes.POINTER(ctypes.c_float)),
+                out.ctypes.data_as(ctypes.POINTER(ctypes.c_float)),
+                ctypes.c_int(n))
+        else:
+            flat = x.reshape(n, self.in_size)
+            for b in range(n):
+                out[b * self.out_size:(b + 1) * self.out_size] = self(flat[b])
+        return out.reshape(n, self.out_size)
 
     def time_per_call_us(self, x: np.ndarray, iters: int = 2000,
                          warmup: int = 50) -> float:
@@ -109,6 +176,7 @@ def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
         in_size=int(np.prod(graph.input_shape)),
         out_size=int(np.prod(graph.output_shape)),
         c_source_bytes=len(src),
+        batch_func_name=opts.batch_func_name if opts.emit_batch else None,
     )
 
 

@@ -1,0 +1,21 @@
+"""Unified multi-backend inference engine (paper §III deployment +
+Table VII per-layer variant selection, as a library)."""
+from .autotune import (Autotuner, TuneResult, TuningCache, cc_fingerprint,
+                       graph_fingerprint, tune_best_simd)
+from .backends import (Backend, available_backends, get_backend,
+                       register_backend)
+from .session import InferenceSession
+
+__all__ = [
+    "Autotuner",
+    "Backend",
+    "InferenceSession",
+    "TuneResult",
+    "TuningCache",
+    "available_backends",
+    "cc_fingerprint",
+    "get_backend",
+    "graph_fingerprint",
+    "register_backend",
+    "tune_best_simd",
+]

@@ -1,0 +1,209 @@
+"""Per-layer codegen-variant autotuner with an on-disk tuning cache.
+
+The paper's headline speed-ups come from *measuring* every generated
+code version per layer and keeping the fastest ("we independently
+benchmark every code version and select the one with the best runtime
+performance", Table VII).  This module makes that selection a reusable,
+cached engine component:
+
+* :class:`Autotuner` — greedy coordinate descent over the per-layer
+  unroll-level space from :func:`repro.core.cgen.enumerate_variants`,
+  timing each fully-compiled candidate net on the host.
+* :class:`TuningCache` — JSON records keyed by
+  ``(graph fingerprint, ISA, compiler fingerprint)`` so a repeat build
+  of the same trained model on the same toolchain compiles nothing.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import cgen, runtime
+from repro.core.graph import CNNGraph
+from repro.core.runtime import cc_fingerprint  # part of the cache key
+
+DEFAULT_CACHE_DIR = os.path.join(tempfile.gettempdir(), "nncg_cache",
+                                 "tuning")
+
+
+def graph_fingerprint(graph: CNNGraph) -> str:
+    """Content hash of a trained graph: layer names, structure, weights.
+
+    Two graphs with the same fingerprint generate byte-identical C for
+    any codegen options, so tuning results transfer exactly. Layer
+    names participate because cached unroll selections are keyed by
+    layer name (``CodegenOptions.level_for``).
+    """
+    h = hashlib.sha256()
+    for layer in graph.layers:
+        h.update(type(layer).__name__.encode())
+        h.update(f"name={layer.name!r};".encode())
+        for attr in ("shape", "strides", "padding", "activation", "alpha",
+                     "size", "eps", "rate"):
+            if hasattr(layer, attr):
+                h.update(f"{attr}={getattr(layer, attr)!r};".encode())
+        for attr in ("weights", "bias", "mean", "var", "gamma", "beta"):
+            v = getattr(layer, attr, None)
+            if v is not None:
+                h.update(np.ascontiguousarray(v, np.float32).tobytes())
+    return h.hexdigest()
+
+
+class TuningCache:
+    """One JSON file per (graph, ISA, compiler) key under ``path``."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = str(path) if path is not None else DEFAULT_CACHE_DIR
+
+    def key(self, graph: CNNGraph, simd: str, extra: str = "") -> str:
+        """Cache key over everything the measurement depends on: the
+        trained graph, SIMD mode, compiler, codegen version, and (via
+        ``extra``) the tuner's own search/measurement parameters."""
+        raw = (f"{graph_fingerprint(graph)}:{simd}:{cc_fingerprint()}"
+               f":v{cgen.CODEGEN_VERSION}:{extra}")
+        return hashlib.sha256(raw.encode()).hexdigest()[:24]
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.json")
+
+    def get(self, key: str) -> Optional[dict]:
+        try:
+            with open(self._file(key)) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+
+    def put(self, key: str, record: dict) -> None:
+        os.makedirs(self.path, exist_ok=True)
+        tmp = self._file(key) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(record, f, indent=1)
+        os.replace(tmp, self._file(key))
+
+
+@dataclass
+class TuneResult:
+    levels: Dict[str, cgen.Level]  # per-layer unroll selection
+    us_per_call: float             # measured latency of the winner
+    from_cache: bool               # True if no benchmarking happened
+    term_cap: int = 200_000        # emission budget the levels assume —
+                                   # the final build must use the same
+
+
+class Autotuner:
+    """Greedy per-layer variant selection for the C backend.
+
+    Starts from the static :func:`cgen.choose_levels` heuristic, then
+    for each Conv2D/MaxPool layer tries every feasible unroll level
+    (holding the others fixed) and keeps any strict improvement —
+    exactly the paper's per-layer benchmark-and-select, with results
+    persisted through :class:`TuningCache`.
+    """
+
+    def __init__(self, simd: str, *, start_budget: int = 20_000,
+                 term_cap: int = 200_000, iters: int = 300,
+                 repeats: int = 3, cache: Optional[TuningCache] = None):
+        self.simd = simd
+        self.start_budget = start_budget
+        self.term_cap = term_cap
+        self.iters = iters
+        self.repeats = max(1, repeats)
+        self.cache = cache
+
+    def _params_key(self) -> str:
+        return (f"b{self.start_budget}:t{self.term_cap}:i{self.iters}"
+                f":r{self.repeats}")
+
+    def _time(self, graph: CNNGraph, levels: Dict[str, cgen.Level],
+              x: np.ndarray) -> float:
+        # term_budget = term_cap so every explored level is actually
+        # emitted as requested (the default budget would silently
+        # demote deep levels and make distinct trials identical code)
+        net = runtime.build(graph, cgen.CodegenOptions(
+            simd=self.simd, unroll=dict(levels),
+            term_budget=self.term_cap))
+        # min over repeats: robust to scheduler noise, which would
+        # otherwise persist a wrong selection into the tuning cache
+        return min(
+            net.time_per_call_us(x, iters=self.iters,
+                                 warmup=max(10, self.iters // 10))
+            for _ in range(self.repeats))
+
+    def tune(self, graph: CNNGraph,
+             x: Optional[np.ndarray] = None) -> TuneResult:
+        if self.cache is not None:
+            key = self.cache.key(graph, self.simd, self._params_key())
+            rec = self.cache.get(key)
+            if rec is not None:
+                return TuneResult(levels=dict(rec["levels"]),
+                                  us_per_call=float(rec["us_per_call"]),
+                                  from_cache=True,
+                                  term_cap=self.term_cap)
+        if x is None:
+            x = np.random.default_rng(0).normal(
+                size=graph.input_shape).astype(np.float32)
+
+        shapes: Dict[str, tuple] = {}
+        cur = graph.input_shape
+        for layer in graph.layers:
+            shapes[layer.name] = cur
+            cur = layer.out_shape(cur)
+
+        levels = cgen.choose_levels(graph, self.start_budget)
+        best = self._time(graph, levels, x)
+        for layer in graph.layers:
+            for lvl in cgen.enumerate_variants(layer, shapes[layer.name],
+                                               term_cap=self.term_cap):
+                if levels.get(layer.name) == lvl:
+                    continue
+                trial = dict(levels)
+                trial[layer.name] = lvl
+                t = self._time(graph, trial, x)
+                if t < best:
+                    best, levels = t, trial
+
+        if self.cache is not None:
+            self.cache.put(key, {
+                "levels": levels,
+                "us_per_call": best,
+                "simd": self.simd,
+                "cc": cc_fingerprint(),
+                "graph": graph_fingerprint(graph),
+            })
+        return TuneResult(levels=levels, us_per_call=best, from_cache=False,
+                          term_cap=self.term_cap)
+
+
+def tune_best_simd(graph: CNNGraph, simds, *,
+                   x: Optional[np.ndarray] = None,
+                   cache: Optional[TuningCache] = None,
+                   **tuner_kw):
+    """Second variant axis: run the per-layer tuner under each SIMD mode
+    and keep the overall fastest. Returns ``(simd, TuneResult)``.
+
+    Cached candidates are re-*timed* (never re-tuned, and with the .so
+    content cache no recompile happens) so the cross-mode comparison
+    uses measurements taken under the same machine conditions — a
+    cached number from an earlier, differently-loaded run must not
+    decide the selection.
+    """
+    if x is None:
+        x = np.random.default_rng(0).normal(
+            size=graph.input_shape).astype(np.float32)
+    best_simd, best_res, best_us = None, None, None
+    for simd in simds:
+        tuner = Autotuner(simd, cache=cache, **tuner_kw)
+        res = tuner.tune(graph, x)
+        us = (tuner._time(graph, res.levels, x) if res.from_cache
+              else res.us_per_call)
+        if best_us is None or us < best_us:
+            best_simd, best_res, best_us = simd, res, us
+    if best_simd is None:
+        raise ValueError("tune_best_simd: empty simd candidate list")
+    return best_simd, best_res

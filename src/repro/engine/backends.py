@@ -1,0 +1,160 @@
+"""Backend registry for the unified inference engine.
+
+One trained :class:`~repro.core.graph.CNNGraph`, three execution
+substrates — the paper's deployment artifact plus its two baselines:
+
+* ``"c"``      — NNCG-generated ANSI C, compiled with the host ``cc``
+  and loaded via ctypes (the paper's shipped path).
+* ``"xla"``    — ``jax.jit`` of the reference forward (the modern
+  equivalent of the paper's TF-XLA rival); batches go through a
+  ``vmap``'d single-image oracle.
+* ``"pallas"`` — the Pallas TPU kernels (interpret mode on CPU,
+  Mosaic on TPU).
+
+New substrates register with :func:`register_backend` — the engine and
+every caller dispatch purely by name.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Type
+
+import numpy as np
+
+from repro.core import cgen, jax_exec, runtime
+from repro.core.graph import CNNGraph
+
+_REGISTRY: Dict[str, Type["Backend"]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make a backend constructible by name."""
+
+    def deco(cls: Type["Backend"]) -> Type["Backend"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> Type["Backend"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+class Backend:
+    """One execution substrate. Constructed with an *optimized* graph
+    (passes already applied); ``predict_batch`` maps ``(N, *in_shape)``
+    float32 to ``(N, *out_shape)`` float32."""
+
+    name = "?"
+
+    def __init__(self, graph: CNNGraph):
+        self.graph = graph
+        self.out_shape = graph.output_shape
+
+    def predict_batch(self, x: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def time_per_call_us(self, x: np.ndarray, iters: int = 500,
+                         warmup: int = 20) -> float:
+        """Single-image latency, mean over ``iters`` calls, in µs."""
+        xb = np.ascontiguousarray(x[None], dtype=np.float32)
+        for _ in range(warmup):
+            self.predict_batch(xb)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            self.predict_batch(xb)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+
+@register_backend("c")
+class CBackend(Backend):
+    """NNCG: graph -> C -> cc -> ctypes. Batches run through the
+    generated ``<func>_batch`` loop wrapper."""
+
+    def __init__(self, graph: CNNGraph, *, simd: str = "sse",
+                 unroll=0, func_name: str = "nncg_net",
+                 term_budget: Optional[int] = None):
+        super().__init__(graph)
+        kw = {} if term_budget is None else {"term_budget": term_budget}
+        self.opts = cgen.CodegenOptions(simd=simd, unroll=unroll,
+                                        func_name=func_name, **kw)
+        self.net = runtime.build(graph, self.opts)
+
+    def predict_batch(self, x: np.ndarray) -> np.ndarray:
+        n = x.shape[0]
+        out = self.net.predict_batch(x)
+        return out.reshape((n,) + self.out_shape)
+
+    def time_per_call_us(self, x: np.ndarray, iters: int = 500,
+                         warmup: int = 20) -> float:
+        # ctypes-level loop: excludes Python dispatch, like the paper's
+        # in-process measurement. One image only — a batch here would
+        # silently time just its first image.
+        assert x.size == self.net.in_size, (
+            f"time_per_call_us expects one image of {self.graph.input_shape}, "
+            f"got {x.shape}")
+        return self.net.time_per_call_us(x, iters=iters, warmup=warmup)
+
+
+class _JaxBackend(Backend):
+    """Shared plumbing for the jit-compiled substrates."""
+
+    def _make_fn(self, graph: CNNGraph):
+        raise NotImplementedError
+
+    def __init__(self, graph: CNNGraph):
+        super().__init__(graph)
+        self._fn = self._make_fn(graph)
+
+    def predict_batch(self, x: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+        y = self._fn(jnp.asarray(x, jnp.float32))
+        n = x.shape[0]
+        return np.asarray(y, np.float32).reshape((n,) + self.out_shape)
+
+    def time_per_call_us(self, x: np.ndarray, iters: int = 500,
+                         warmup: int = 20) -> float:
+        import jax.numpy as jnp
+        xb = jnp.asarray(x[None], jnp.float32)
+        self._fn(xb).block_until_ready()
+        for _ in range(warmup):
+            self._fn(xb).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            self._fn(xb).block_until_ready()
+        return (time.perf_counter() - t0) / iters * 1e6
+
+
+@register_backend("xla")
+class XLABackend(_JaxBackend):
+    """The paper's rival compiler stack: one XLA program per batch via a
+    vmap'd single-image oracle."""
+
+    def _make_fn(self, graph: CNNGraph):
+        return jax_exec.make_vmap_forward(graph)
+
+
+@register_backend("pallas")
+class PallasBackend(_JaxBackend):
+    """TPU-native deployment path (interpret mode off-TPU). Requires an
+    optimized graph — BN folded, activations fused, no Dense/Flatten."""
+
+    def _make_fn(self, graph: CNNGraph):
+        import jax
+
+        @jax.jit
+        def f(x):
+            return jax_exec.forward_pallas(graph, x)
+
+        return f

@@ -1,0 +1,144 @@
+"""The unified inference entry point: one session, three substrates.
+
+    sess = InferenceSession(graph, backend="c", autotune=True)
+    probs = sess.predict(batch)          # (N, *out_shape)
+
+The session owns the whole deployment pipeline the repo previously
+scattered across benchmarks/examples: the NNCG optimization passes,
+ISA selection, per-layer variant autotuning (with the on-disk tuning
+cache), codegen + compile, and batched execution.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import cgen, passes, runtime
+from repro.core.graph import CNNGraph
+
+from .autotune import Autotuner, TuneResult, TuningCache, tune_best_simd
+from .backends import Backend, CBackend, get_backend
+
+
+class InferenceSession:
+    """Build once, predict many — over any registered backend.
+
+    Parameters
+    ----------
+    graph:    trained :class:`CNNGraph` (raw; passes run here unless
+              ``optimize=False``).
+    backend:  ``"c"`` | ``"xla"`` | ``"pallas"`` (see
+              :func:`repro.engine.backends.available_backends`).
+    autotune: C backend only — benchmark every per-layer codegen variant
+              and keep the fastest, consulting the on-disk tuning cache.
+    simd:     C codegen mode (``'generic'|'structured'|'sse'|'avx'``);
+              defaults to the widest ISA the host supports.
+    simd_search: with ``autotune``, a list of simd modes to tune under —
+              the engine keeps the fastest (mode, per-layer levels) pair.
+    unroll:   C backend without autotune — ``"auto"`` (static heuristic),
+              a single level, or a per-layer dict.
+    tune_cache: directory (or :class:`TuningCache`) for persisted tuning
+              results; ``None`` uses the default cache dir.
+    tune_iters: timing iterations per candidate during autotuning.
+    """
+
+    def __init__(self, graph: CNNGraph, backend: str = "c", *,
+                 autotune: bool = False,
+                 simd: Optional[str] = None,
+                 simd_search: Optional[Sequence[str]] = None,
+                 unroll: Union[str, int, None, Dict] = "auto",
+                 optimize: bool = True,
+                 tune_cache: Union[None, str, TuningCache] = None,
+                 tune_iters: int = 300,
+                 func_name: str = "nncg_net"):
+        self.backend_name = backend
+        self.simd = simd or runtime.best_isa()
+        candidates = list(simd_search) if (simd_search and autotune
+                                           and backend == "c") else None
+        widths = [cgen.ISAS[s].width if s in cgen.ISAS else 4
+                  for s in (candidates or [self.simd])]
+        self.graph = (passes.optimize(graph, simd_multiple=max(widths))
+                      if optimize else graph)
+        self.tuned: Optional[TuneResult] = None
+
+        if backend == "c":
+            if autotune:
+                cache = (tune_cache if isinstance(tune_cache, TuningCache)
+                         else TuningCache(tune_cache))
+                if candidates:
+                    self.simd, self.tuned = tune_best_simd(
+                        self.graph, candidates, cache=cache,
+                        iters=tune_iters)
+                else:
+                    tuner = Autotuner(self.simd, iters=tune_iters,
+                                      cache=cache)
+                    self.tuned = tuner.tune(self.graph)
+                unroll_cfg = self.tuned.levels
+            elif unroll == "auto":
+                unroll_cfg = cgen.choose_levels(self.graph, 20_000)
+            else:
+                unroll_cfg = unroll
+            # tuned levels were measured at the tuner's emission budget;
+            # the deployed build must emit the same code
+            term_budget = (self.tuned.term_cap if self.tuned is not None
+                           else None)
+            self._backend: Backend = CBackend(
+                self.graph, simd=self.simd, unroll=unroll_cfg,
+                func_name=func_name, term_budget=term_budget)
+        else:
+            self._backend = get_backend(backend)(self.graph)
+
+    # -- shapes --------------------------------------------------------------
+
+    @property
+    def input_shape(self):
+        return self.graph.input_shape
+
+    @property
+    def output_shape(self):
+        return self.graph.output_shape
+
+    # -- execution -----------------------------------------------------------
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Single image ``(*in_shape)`` -> ``(*out_shape)``, or batch
+        ``(N, *in_shape)`` -> ``(N, *out_shape)``."""
+        x = np.asarray(x, dtype=np.float32)
+        in_shape = tuple(self.input_shape)
+        if x.shape == in_shape:
+            return self._backend.predict_batch(x[None])[0]
+        if x.shape[1:] == in_shape:
+            return self._backend.predict_batch(x)
+        raise ValueError(
+            f"predict: expected {in_shape} or (N,)+{in_shape}, "
+            f"got {x.shape}")
+
+    def benchmark(self, x: Optional[np.ndarray] = None, *,
+                  iters: int = 500, warmup: int = 20) -> float:
+        """Single-image latency of this session's backend in µs/call."""
+        if x is None:
+            x = np.random.default_rng(0).normal(
+                size=self.input_shape).astype(np.float32)
+        x = np.asarray(x, np.float32)
+        if x.shape != tuple(self.input_shape):
+            raise ValueError(
+                f"benchmark times one image of {tuple(self.input_shape)}, "
+                f"got {x.shape} — pass batch[i], not the batch")
+        return self._backend.time_per_call_us(x, iters=iters, warmup=warmup)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def info(self) -> dict:
+        d = {"backend": self.backend_name, "simd": self.simd,
+             "input_shape": tuple(self.input_shape),
+             "output_shape": tuple(self.output_shape)}
+        if self.tuned is not None:
+            d.update(levels=self.tuned.levels,
+                     tuned_us_per_call=self.tuned.us_per_call,
+                     tuned_from_cache=self.tuned.from_cache)
+        if isinstance(self._backend, CBackend):
+            d["c_source_bytes"] = self._backend.net.c_source_bytes
+            d["so_path"] = self._backend.net.so_path
+        return d

@@ -152,6 +152,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 t_done = time.time()
                 mem = compiled.memory_analysis()
                 cost = compiled.cost_analysis()
+                # cost_analysis() returns a per-device list of dicts on
+                # some jax versions and a bare dict on others
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0] if cost else {}
                 hlo = compiled.as_text()
             coll = parse_collectives(hlo)
             result[tag] = {

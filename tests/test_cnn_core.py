@@ -1,7 +1,10 @@
 """Tests for the NNCG core: graph IR, passes, C code generation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -e '.[dev]'")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.cnn_paper import PAPER_CNNS, ball_classifier
 from repro.core import cgen, jax_exec, passes, runtime

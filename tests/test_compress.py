@@ -3,7 +3,11 @@ psum correctness on a multi-device pod axis."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -e '.[dev]'")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.optim.compress import (compress_allreduce, dequantize_int8,
                                   quantize_int8)

@@ -1,0 +1,166 @@
+"""InferenceSession engine: cross-backend agreement, tuning-cache
+round-trip, and batched-vs-looped equivalence."""
+import numpy as np
+import pytest
+
+from repro.configs.cnn_paper import PAPER_CNNS
+from repro.core import runtime
+from repro.core.graph import CNNGraph, Conv2D, Input, MaxPool, Softmax
+from repro.engine import (InferenceSession, TuningCache, available_backends,
+                          get_backend, graph_fingerprint)
+
+RTOL, ATOL = 1e-3, 1e-5
+
+
+def _tiny_cnn(seed=0) -> CNNGraph:
+    """A small but multi-layer net so autotune tests stay fast."""
+    r = np.random.default_rng(seed)
+    w1 = r.normal(0, 0.5, (3, 3, 1, 4)).astype(np.float32)
+    w2 = r.normal(0, 0.5, (2, 2, 4, 2)).astype(np.float32)
+    return CNNGraph([
+        Input(shape=(8, 8, 1)),
+        Conv2D(weights=w1, bias=r.normal(0, 0.1, (4,)).astype(np.float32),
+               padding="same", activation="relu"),
+        MaxPool(size=(2, 2)),
+        Conv2D(weights=w2, bias=r.normal(0, 0.1, (2,)).astype(np.float32),
+               padding="valid"),
+        Softmax(),
+    ])
+
+
+def _batch(shape, n=3, seed=1):
+    return np.random.default_rng(seed).normal(
+        size=(n,) + tuple(shape)).astype(np.float32)
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_registry_lists_all_three_backends():
+    assert {"c", "xla", "pallas"} <= set(available_backends())
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("tpu-asic")
+
+
+# -- cross-backend agreement ------------------------------------------------
+
+@pytest.mark.parametrize("name", ["ball", "pedestrian"])
+def test_cross_backend_agreement(name):
+    g = PAPER_CNNS[name]()
+    x = _batch(g.input_shape)
+    ref = InferenceSession(g, backend="xla", simd="sse").predict(x)
+    got_c = InferenceSession(g, backend="c", simd="sse").predict(x)
+    got_p = InferenceSession(g, backend="pallas", simd="sse").predict(x)
+    assert ref.shape == got_c.shape == got_p.shape
+    np.testing.assert_allclose(got_c, ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(got_p, ref, rtol=1e-4, atol=ATOL)
+
+
+@pytest.mark.slow
+def test_cross_backend_agreement_robot():
+    g = PAPER_CNNS["robot"]()
+    x = _batch(g.input_shape, n=2)
+    ref = InferenceSession(g, backend="xla", simd="sse").predict(x)
+    got_c = InferenceSession(g, backend="c", simd="sse").predict(x)
+    np.testing.assert_allclose(got_c, ref, rtol=RTOL, atol=1e-4)
+
+
+# -- autotuning + cache -----------------------------------------------------
+
+def test_tuning_cache_round_trip(tmp_path):
+    g = _tiny_cnn()
+    s1 = InferenceSession(g, backend="c", autotune=True, simd="structured",
+                          tune_cache=str(tmp_path), tune_iters=30)
+    assert s1.tuned is not None and not s1.tuned.from_cache
+    assert s1.tuned.levels, "autotuner selected no per-layer levels"
+
+    cc_before = runtime.COMPILE_STATS["cc_invocations"]
+    s2 = InferenceSession(_tiny_cnn(), backend="c", autotune=True,
+                          simd="structured", tune_cache=str(tmp_path),
+                          tune_iters=30)
+    # second build answers from the tuning cache and the .so content
+    # cache: the C compiler must not run at all
+    assert s2.tuned.from_cache
+    assert s2.tuned.levels == s1.tuned.levels
+    assert runtime.COMPILE_STATS["cc_invocations"] == cc_before
+
+    x = _batch(s1.input_shape)
+    np.testing.assert_array_equal(s1.predict(x), s2.predict(x))
+
+
+def test_simd_search_picks_a_candidate(tmp_path):
+    g = _tiny_cnn()
+    sess = InferenceSession(
+        g, backend="c", autotune=True,
+        simd_search=("generic", "structured"),
+        tune_cache=str(tmp_path), tune_iters=30)
+    assert sess.simd in ("generic", "structured")
+    x = _batch(sess.input_shape)
+    ref = InferenceSession(g, backend="xla").predict(x)
+    np.testing.assert_allclose(sess.predict(x), ref, rtol=RTOL, atol=ATOL)
+
+
+def test_tuning_cache_keys_differ_by_graph_and_simd(tmp_path):
+    cache = TuningCache(str(tmp_path))
+    g1, g2 = _tiny_cnn(seed=0), _tiny_cnn(seed=7)
+    assert graph_fingerprint(g1) != graph_fingerprint(g2)
+    assert cache.key(g1, "sse") != cache.key(g2, "sse")
+    assert cache.key(g1, "sse") != cache.key(g1, "generic")
+
+
+def test_graph_fingerprint_sensitive_to_layer_names():
+    # cached unroll levels are keyed by layer name, so a rename must
+    # miss the cache even with identical weights
+    g1, g2 = _tiny_cnn(seed=0), _tiny_cnn(seed=0)
+    assert graph_fingerprint(g1) == graph_fingerprint(g2)
+    g2.layers[1].name = "stem"
+    assert graph_fingerprint(g1) != graph_fingerprint(g2)
+
+
+# -- batched execution ------------------------------------------------------
+
+def test_batched_matches_looped_c():
+    g = _tiny_cnn()
+    sess = InferenceSession(g, backend="c", simd="structured")
+    x = _batch(sess.input_shape, n=5)
+    batched = sess.predict(x)
+    looped = np.stack([sess.predict(x[i]) for i in range(5)])
+    # same compiled code runs either way -> bit-identical
+    np.testing.assert_array_equal(batched, looped)
+    assert batched.shape == (5,) + tuple(sess.output_shape)
+
+
+def test_compiled_net_batch_entry_matches_single_calls():
+    g = _tiny_cnn()
+    sess = InferenceSession(g, backend="c", simd="structured")
+    net = sess._backend.net
+    assert net._batch_fn is not None, "batch wrapper missing from .so"
+    x = _batch(sess.input_shape, n=4)
+    got = net.predict_batch(x)
+    want = np.stack([net(x[i]) for i in range(4)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_predict_rejects_wrong_shape():
+    sess = InferenceSession(_tiny_cnn(), backend="c", simd="structured")
+    with pytest.raises(ValueError, match="predict"):
+        sess.predict(np.zeros((3, 3), np.float32))
+
+
+def test_benchmark_rejects_batch_input():
+    # a batch would silently time only its first image on the C backend
+    sess = InferenceSession(_tiny_cnn(), backend="c", simd="structured")
+    with pytest.raises(ValueError, match="one image"):
+        sess.benchmark(_batch(sess.input_shape, n=4))
+
+
+def test_tuning_cache_keys_differ_by_tuner_params(tmp_path):
+    # a record measured with 30 timing iterations must not answer a
+    # session that asked for 3000
+    g = _tiny_cnn()
+    s1 = InferenceSession(g, backend="c", autotune=True, simd="structured",
+                          tune_cache=str(tmp_path), tune_iters=30)
+    s2 = InferenceSession(_tiny_cnn(), backend="c", autotune=True,
+                          simd="structured", tune_cache=str(tmp_path),
+                          tune_iters=31)
+    assert not s1.tuned.from_cache
+    assert not s2.tuned.from_cache  # different iters -> different key

@@ -1,0 +1,44 @@
+"""runtime.compile_c: content-hash .so caching and compiler-failure
+reporting."""
+import pytest
+
+from repro.core import runtime
+
+SRC = """
+void addone(const float *restrict x, float *restrict out)
+{
+    out[0] = x[0] + 1.0f;
+}
+"""
+
+
+def test_identical_source_hits_cache_with_same_path():
+    p1 = runtime.compile_c(SRC, simd="generic")
+    cc_before = runtime.COMPILE_STATS["cc_invocations"]
+    hits_before = runtime.COMPILE_STATS["so_cache_hits"]
+    p2 = runtime.compile_c(SRC, simd="generic")
+    assert p2 == p1
+    assert runtime.COMPILE_STATS["cc_invocations"] == cc_before
+    assert runtime.COMPILE_STATS["so_cache_hits"] == hits_before + 1
+
+
+def test_flag_change_produces_fresh_path():
+    p1 = runtime.compile_c(SRC, simd="generic")
+    p2 = runtime.compile_c(SRC, simd="generic", extra_flags=("-DNNCG_X=1",))
+    assert p2 != p1
+
+
+def test_simd_mode_is_part_of_the_cache_key():
+    # same source, different cc flags (-mssse3) -> must not share a .so
+    p_gen = runtime.compile_c(SRC, simd="generic")
+    p_sse = runtime.compile_c(SRC, simd="sse")
+    assert p_gen != p_sse
+
+
+def test_compiler_failure_surfaces_stderr():
+    bad = "void broken(const float *x float *out) { out[0] = ; }"
+    with pytest.raises(RuntimeError) as exc:
+        runtime.compile_c(bad, simd="generic")
+    msg = str(exc.value)
+    assert "cc failed" in msg
+    assert "error" in msg.lower()  # compiler diagnostics included

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -e '.[dev]'")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.checkpoint.checkpoint import all_steps, latest_step, restore, save
 from repro.data.pipeline import (TokenStreamConfig, ball_image_batch,
