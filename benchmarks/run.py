@@ -7,34 +7,47 @@ Reproduces the NNCG evaluation on the container CPU:
     The C build is *autotuned*: the engine benchmarks every per-layer
     codegen variant and keeps the fastest (paper Table VII selection),
     caching the result on disk so reruns compile nothing.
+  * residual — the DAG workload (depthwise + residual Add + Concat),
+    same comparison; unrepresentable before the graph IR.
   * Table VII — feature ablation: generic scalar C -> SSE layout ->
     SSE + full unroll -> autotuned per-layer selection.
 
-Prints ``name,us_per_call,derived`` CSV rows; ``derived`` is the
-speed-up over the XLA baseline (Tables IV-VI) or over the generic build
-(Table VII).
+Prints ``name,us_per_call,derived,arena_bytes`` CSV rows; ``derived``
+is the speed-up over the XLA baseline (Tables IV-VI) or over the
+generic build (Table VII); ``arena_bytes`` is the liveness-planned
+workspace of the C build (empty for non-C rows).
+
+Results are also persisted to ``BENCH_engine.json`` at the repo root so
+the perf/memory trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 import sys
 
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs.cnn_paper import PAPER_CNNS  # noqa: E402
+from repro.configs.cnn_paper import EXTRA_CNNS, PAPER_CNNS  # noqa: E402
 from repro.core import runtime  # noqa: E402
 from repro.engine import InferenceSession  # noqa: E402
 
-ITERS = {"ball": 20000, "pedestrian": 3000, "robot": 800}
+ITERS = {"ball": 20000, "pedestrian": 3000, "robot": 800, "residual": 5000}
+ALL_CNNS = {**PAPER_CNNS, **EXTRA_CNNS}
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_engine.json")
+
+RESULTS: dict = {"cnns": {}, "ablation": {}}
 
 
 def _bench_cnn(name: str):
     simd = runtime.best_isa()
     iters = ITERS[name]
     tune_iters = max(200, iters // 20)
-    g = PAPER_CNNS[name]()
+    g = ALL_CNNS[name]()
     x = np.random.default_rng(0).normal(
         size=g.input_shape).astype(np.float32)
 
@@ -50,11 +63,22 @@ def _bench_cnn(name: str):
     t_c = tuned.benchmark(x, iters=iters)
     t_u = untuned.benchmark(x, iters=iters)
     t_x = xla.benchmark(x, iters=max(iters // 10, 100))
+    arena = tuned.info["arena_bytes"]
     print(f"table_{name}_nncg_c_autotuned,{t_c:.2f},"
-          f"speedup_vs_xla={t_x / t_c:.2f}")
+          f"speedup_vs_xla={t_x / t_c:.2f},{arena}")
     print(f"table_{name}_nncg_c_untuned,{t_u:.2f},"
-          f"autotune_gain={t_u / t_c:.2f}")
-    print(f"table_{name}_xla_jit,{t_x:.2f},baseline=1.0")
+          f"autotune_gain={t_u / t_c:.2f},{untuned.info['arena_bytes']}")
+    print(f"table_{name}_xla_jit,{t_x:.2f},baseline=1.0,")
+    RESULTS["cnns"][name] = {
+        "c_autotuned_us": round(t_c, 3),
+        "c_untuned_us": round(t_u, 3),
+        "xla_us": round(t_x, 3),
+        "speedup_vs_xla": round(t_x / t_c, 3),
+        "arena_bytes": arena,
+        "arena_buffer_sum_bytes": tuned.info["arena_buffer_sum_bytes"],
+        "peak_live_bytes": tuned.info["peak_live_bytes"],
+        "simd": simd,
+    }
     return t_c, t_u, t_x
 
 
@@ -70,6 +94,12 @@ def bench_table6_robot():
     return _bench_cnn("robot")
 
 
+def bench_residual_dag():
+    """The DAG workload — depthwise separable block, residual Add,
+    Concat — through the same autotuned C vs. XLA comparison."""
+    return _bench_cnn("residual")
+
+
 def bench_table7_features():
     name = "ball"
     iters = ITERS[name]
@@ -78,33 +108,54 @@ def bench_table7_features():
         size=g.input_shape).astype(np.float32)
     sse = "sse" if runtime.host_supports_ssse3() else "structured"
 
-    t_gen = InferenceSession(g, backend="c", simd="generic",
-                             unroll=None).benchmark(x, iters=iters)
-    t_sse = InferenceSession(g, backend="c", simd=sse,
-                             unroll=None).benchmark(x, iters=iters)
-    t_full = InferenceSession(g, backend="c", simd=sse,
-                              unroll="auto").benchmark(x, iters=iters)
-    tuned = InferenceSession(g, backend="c", simd=sse, autotune=True,
-                             tune_iters=max(200, iters // 20))
-    t_tuned = tuned.benchmark(x, iters=iters)
-    print(f"table7_general,{t_gen:.2f},speedup=1.0")
-    print(f"table7_simd,{t_sse:.2f},speedup={t_gen / t_sse:.2f}")
-    print(f"table7_simd_full_unroll,{t_full:.2f},speedup={t_gen / t_full:.2f}")
-    print(f"table7_simd_autotuned,{t_tuned:.2f},speedup={t_gen / t_tuned:.2f}")
+    sessions = {
+        "general": InferenceSession(g, backend="c", simd="generic",
+                                    unroll=None),
+        "simd": InferenceSession(g, backend="c", simd=sse, unroll=None),
+        "simd_full_unroll": InferenceSession(g, backend="c", simd=sse,
+                                             unroll="auto"),
+        "simd_autotuned": InferenceSession(
+            g, backend="c", simd=sse, autotune=True,
+            tune_iters=max(200, iters // 20)),
+    }
     if runtime.host_supports_avx2():  # the paper's named future work
-        avx = InferenceSession(g, backend="c", simd="avx", autotune=True,
-                               tune_iters=max(200, iters // 20))
-        t_avx = avx.benchmark(x, iters=iters)
-        print(f"table7_avx_fma_autotuned,{t_avx:.2f},"
-              f"speedup={t_gen / t_avx:.2f}")
+        sessions["avx_fma_autotuned"] = InferenceSession(
+            g, backend="c", simd="avx", autotune=True,
+            tune_iters=max(200, iters // 20))
+
+    rows = {}
+    t_gen = None
+    for label, sess in sessions.items():
+        t = sess.benchmark(x, iters=iters)
+        t_gen = t_gen if t_gen is not None else t
+        arena = sess.info["arena_bytes"]  # each build plans its own arena
+        print(f"table7_{label},{t:.2f},speedup={t_gen / t:.2f},{arena}")
+        rows[f"{label}_us"] = round(t, 3)
+        rows[f"{label}_arena_bytes"] = arena
+    RESULTS["ablation"] = rows
+
+
+def _persist() -> None:
+    RESULTS["meta"] = {
+        "cc": runtime.cc_fingerprint(),
+        "isa": runtime.best_isa(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(RESULTS, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(BENCH_JSON)}")
 
 
 def main() -> None:
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,arena_bytes")
     bench_table4_ball()
     bench_table5_pedestrian()
     bench_table6_robot()
+    bench_residual_dag()
     bench_table7_features()
+    _persist()
 
 
 if __name__ == "__main__":

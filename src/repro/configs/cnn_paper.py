@@ -10,10 +10,15 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.graph import (
+    Add,
+    AvgPool,
     BatchNorm,
     CNNGraph,
+    Concat,
     Conv2D,
+    DepthwiseConv2D,
     Dropout,
+    GlobalAvgPool,
     Input,
     LeakyReLU,
     MaxPool,
@@ -91,8 +96,52 @@ def robot_detector(seed: int = 0) -> CNNGraph:
     return CNNGraph(layers)
 
 
+def _dwconv(rng, kh, kw, c, mult, **kw_args) -> DepthwiseConv2D:
+    fan_in = kh * kw
+    w = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=(kh, kw, c, mult))
+    b = rng.normal(0.0, 0.01, size=(c * mult,))
+    return DepthwiseConv2D(weights=w.astype(np.float32),
+                           bias=b.astype(np.float32), **kw_args)
+
+
+def residual_cnn(seed: int = 0) -> CNNGraph:
+    """A small ResNet/MobileNet-style DAG (not from the paper): a
+    depthwise-separable block with a residual Add, a two-branch Concat,
+    and a global-average-pool head.  Exercises every non-sequential
+    construct the DAG IR supports, end-to-end through codegen."""
+    r = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(16, 16, 3), name="in"),
+        _conv(r, 3, 3, 3, 8, padding="same", name="stem"),
+        ReLU(name="stem_relu"),
+        # depthwise-separable residual block on the stem features
+        _dwconv(r, 3, 3, 8, 1, padding="same", name="dw",
+                inputs=["stem_relu"]),
+        ReLU(name="dw_relu"),
+        _conv(r, 1, 1, 8, 8, padding="valid", name="pw", inputs=["dw_relu"]),
+        Add(name="res_add", inputs=["pw", "stem_relu"]),
+        ReLU(name="res_relu"),
+        # two-branch feature mix, channel-concatenated
+        _conv(r, 1, 1, 8, 4, padding="valid", name="branch_1x1",
+              inputs=["res_relu"]),
+        _conv(r, 3, 3, 8, 4, padding="same", name="branch_3x3",
+              inputs=["res_relu"]),
+        Concat(name="mix", inputs=["branch_1x1", "branch_3x3"]),
+        AvgPool(size=(2, 2), name="pool"),
+        GlobalAvgPool(name="gap"),
+        _conv(r, 1, 1, 8, 4, padding="valid", name="head"),
+        Softmax(name="probs"),
+    ])
+
+
 PAPER_CNNS = {
     "ball": ball_classifier,
     "pedestrian": pedestrian_classifier,
     "robot": robot_detector,
+}
+
+# non-paper workloads the engine also serves; kept out of PAPER_CNNS so
+# paper-table parametrizations stay exactly the paper's three nets
+EXTRA_CNNS = {
+    "residual": residual_cnn,
 }

@@ -1,8 +1,13 @@
 """NNCG — the ANSI C code generator (paper §II).
 
-Generates, from a trained :class:`CNNGraph`, one plain C file exposing
+Generates, from a trained :class:`CNNGraph` (a DAG — residual Adds,
+Concats, depthwise convs and pooling all supported), one plain C file
+exposing:
 
-    void <func>(const float *restrict x, float *restrict out);
+    void <func>_ws(const float *x, float *out, float *workspace);
+    void <func>(const float *x, float *out);          /* static arena */
+    void <func>_batch(const float *x, float *out, int n);
+    long <func>_workspace_floats(void);
 
 implementing the four design principles:
 
@@ -23,24 +28,42 @@ implementing the four design principles:
   and ``sse`` (explicit SSSE3/SSE intrinsics over groups of 4 output
   channels, the paper's shipped mode).
 
-The only dependencies of the generated file are ``math.h`` (softmax) and,
-in ``sse`` mode, ``emmintrin.h`` — exactly the paper's dependency set.
+**Memory**: instead of one never-reused ``static float`` buffer per
+layer, a liveness-based **arena planner** (:func:`plan_arena`) computes
+tensor lifetimes over the topological order and packs all intermediate
+buffers — including zero-padding scratch — into one workspace via
+interval-interference best-fit.  ``<func>_ws`` takes the workspace from
+the caller, making the generated code **reentrant** (thread-parallel
+batch serving); ``<func>`` binds the planned static arena for the
+paper's single-image embedded deployment.
+
+The emitted file is strict ANSI C89 (declarations first, no ``//``
+comments, ``restrict`` behind a feature macro), so ``gcc -std=c89
+-Wall -Wextra -Werror -pedantic-errors`` accepts it — the paper's
+"plain C compilable by any ANSI compiler" claim, enforced in CI.  The
+only dependencies are ``math.h`` (softmax) and, in ``sse``/``avx``
+mode, the intrinsics header — exactly the paper's dependency set.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from .graph import (
+    Add,
+    AvgPool,
     BatchNorm,
     CNNGraph,
+    Concat,
     Conv2D,
     Dense,
+    DepthwiseConv2D,
     Dropout,
     Flatten,
+    GlobalAvgPool,
     Input,
     LeakyReLU,
     MaxPool,
@@ -52,7 +75,15 @@ Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
 
 # bump whenever the emitted C changes for the same (graph, options) —
 # cached artifacts measured on older generated code must not be reused
-CODEGEN_VERSION = 2
+CODEGEN_VERSION = 3
+
+# the single source of truth for the unroll/icache emission budget
+# (both CodegenOptions.term_budget and choose_levels read it)
+TERM_BUDGET_DEFAULT = 60_000
+
+# layers that emit no code: Input is the function argument, Dropout is
+# identity at inference, Flatten is a no-op on flat NHWC memory
+IDENTITY_LAYERS = (Input, Dropout, Flatten)
 
 
 @dataclass(frozen=True)
@@ -111,8 +142,9 @@ class CodegenOptions:
     simd: str = "sse"            # 'generic' | 'structured' | 'sse' | 'avx'
     unroll: Union[Level, Dict[str, Level]] = 0
     func_name: str = "nncg_net"
-    term_budget: int = 60_000    # max emitted FMA terms per layer before
-                                 # the level is demoted (icache trade-off)
+    term_budget: int = TERM_BUDGET_DEFAULT
+    # max emitted FMA terms per layer before the level is demoted
+    # (icache trade-off)
     emit_batch: bool = True      # also emit `<func>_batch(x, out, n)` —
                                  # a loop-over-images serving entry point
 
@@ -123,6 +155,15 @@ class CodegenOptions:
     @property
     def batch_func_name(self) -> str:
         return self.func_name + "_batch"
+
+    @property
+    def ws_func_name(self) -> str:
+        """The reentrant entry point taking a caller-provided workspace."""
+        return self.func_name + "_ws"
+
+    @property
+    def ws_size_func_name(self) -> str:
+        return self.func_name + "_workspace_floats"
 
     def level_for(self, layer_name: str) -> Level:
         if isinstance(self.unroll, dict):
@@ -136,6 +177,14 @@ def _flit(v: float) -> str:
     return f"{s}f"
 
 
+def _cfor(var: str, bound, body: str, start: int = 0, step: int = 1) -> str:
+    """A one-line C89 counted loop: the index is declared in its own
+    block so the statement is legal anywhere."""
+    inc = f"++{var}" if step == 1 else f"{var} += {step}"
+    return (f"{{ int {var}; for ({var} = {start}; {var} < {bound}; {inc}) "
+            f"{body} }}")
+
+
 class _W:
     """Tiny indented writer."""
 
@@ -147,7 +196,7 @@ class _W:
         self.lines.append("    " * self._ind + line if line else "")
 
     def open(self, line: str) -> None:
-        self(line + " {")
+        self(line + " {" if line else "{")
         self._ind += 1
 
     def close(self) -> None:
@@ -175,6 +224,18 @@ def estimate_terms(layer, in_shape, level: Level) -> int:
     return 0
 
 
+def effective_level(layer, in_shape, opts: "CodegenOptions") -> Level:
+    """The unroll level actually emitted: the configured level, demoted
+    until the emitted-term count fits the budget (icache trade-off, P1).
+    The arena planner calls this too, so scratch planning and emission
+    can never disagree."""
+    level = opts.level_for(layer.name)
+    while level is not None and \
+            estimate_terms(layer, in_shape, level) > opts.term_budget:
+        level = {0: 1, 1: 2, 2: None}[level]
+    return level
+
+
 def enumerate_variants(layer, in_shape, term_cap: int = 200_000) -> List[Level]:
     """Candidate unroll levels for one layer, deepest (level 0) first.
 
@@ -191,27 +252,177 @@ def enumerate_variants(layer, in_shape, term_cap: int = 200_000) -> List[Level]:
             if lvl is None or estimate_terms(layer, in_shape, lvl) <= term_cap]
 
 
-def choose_levels(graph: CNNGraph, budget: int = 60_000) -> Dict[str, Level]:
+def choose_levels(graph: CNNGraph,
+                  budget: int = TERM_BUDGET_DEFAULT) -> Dict[str, Level]:
     """Pick, per layer, the deepest unroll level within the term budget.
 
     This is the static analogue of the paper's per-layer variant
     benchmarking — the :mod:`repro.engine.autotune` tuner explores the
     same :func:`enumerate_variants` space dynamically and can override
-    any choice made here.
+    any choice made here.  Walks the DAG via edges, so branch layers get
+    their true input shapes.
     """
     levels: Dict[str, Level] = {}
-    shape = graph.input_shape
+    smap = graph.shape_map()
     for layer in graph.layers:
-        for lvl in enumerate_variants(layer, shape, term_cap=budget):
+        ish = smap[layer.inputs[0]] if layer.inputs else None
+        for lvl in enumerate_variants(layer, ish, term_cap=budget):
             levels[layer.name] = lvl
             break
-        shape = layer.out_shape(shape)
     return levels
+
+
+# ---------------------------------------------------------------------------
+# arena planning (liveness over the topological order)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ArenaInterval:
+    """One planned allocation: a value live over ``[start, end]`` layer
+    steps, placed at ``offset`` floats into the arena."""
+
+    value: str
+    start: int
+    end: int
+    size: int
+    offset: int = -1
+
+
+@dataclass
+class ArenaPlan:
+    """The packed workspace: byte offsets for every intermediate tensor
+    (and padding scratch), sized by interval interference."""
+
+    total_floats: int
+    offsets: Dict[str, int] = field(default_factory=dict)
+    intervals: List[ArenaInterval] = field(default_factory=list)
+    per_layer_live: Dict[str, int] = field(default_factory=dict)
+    buffer_sum_floats: int = 0  # what one-static-buffer-per-tensor costs
+
+    @property
+    def total_bytes(self) -> int:
+        return self.total_floats * 4
+
+    @property
+    def buffer_sum_bytes(self) -> int:
+        return self.buffer_sum_floats * 4
+
+    @property
+    def peak_live_floats(self) -> int:
+        return max(self.per_layer_live.values(), default=0)
+
+
+def _value_map(graph: CNNGraph) -> Dict[str, str]:
+    """Layer name -> the value (buffer) holding its output. Identity
+    layers alias their producer; Input aliases the ``x`` argument."""
+    val: Dict[str, str] = {}
+    for l in graph.layers:
+        if isinstance(l, Input):
+            val[l.name] = "x"
+        elif isinstance(l, (Dropout, Flatten)):
+            val[l.name] = val[l.inputs[0]]
+        else:
+            val[l.name] = l.name
+    return val
+
+
+def _pad_scratch_floats(layer, in_shape, opts: CodegenOptions) -> int:
+    """Floats of zero-padding scratch the emitter will request for this
+    layer (0 when padding is statically elided or absent)."""
+    if not isinstance(layer, (Conv2D, DepthwiseConv2D)):
+        return 0
+    pads = layer.pad_amounts(in_shape)
+    if not any(pads):
+        return 0
+    if isinstance(layer, Conv2D) and \
+            effective_level(layer, in_shape, opts) == 0:
+        return 0  # level 0 elides out-of-bounds taps statically
+    h, w, c = in_shape
+    pt, pb, pl, pr = pads
+    return (h + pt + pb) * (w + pl + pr) * c
+
+
+def plan_arena(graph: CNNGraph,
+               opts: Optional[CodegenOptions] = None) -> ArenaPlan:
+    """Liveness-planned packing of every intermediate tensor.
+
+    A value is live from the step of its defining layer to the step of
+    its last consumer (interval interference over the topological
+    order); padding scratch is live only during its own layer.  The
+    network input (``x``) and output (``out``) are caller memory and
+    never enter the arena.  Placement is first-fit at the lowest byte
+    offset not overlapping any time-overlapping interval — for chains
+    this degenerates to ping-pong double buffering, for DAGs the skip
+    edges extend lifetimes exactly as long as needed.
+    """
+    opts = opts or CodegenOptions()
+    smap = graph.shape_map()
+    val = _value_map(graph)
+    out_value = val[graph.sink.name]
+
+    defs: Dict[str, int] = {}
+    last: Dict[str, int] = {}
+    sizes: Dict[str, int] = {}
+    ivals: List[ArenaInterval] = []
+    for i, layer in enumerate(graph.layers):
+        if not isinstance(layer, IDENTITY_LAYERS):
+            v = val[layer.name]
+            if v == layer.name:  # defines a fresh value
+                defs[v] = i
+                sizes[v] = int(np.prod(smap[layer.name]))
+            scratch = _pad_scratch_floats(
+                layer, smap[layer.inputs[0]], opts)
+            if scratch:
+                ivals.append(ArenaInterval(
+                    value=layer.name + "__pad", start=i, end=i,
+                    size=scratch))
+        for src in layer.inputs:
+            sv = val[src]
+            if sv != "x":
+                last[sv] = i
+    for v, d in defs.items():
+        if v == out_value:
+            continue  # written straight to the caller's `out`
+        ivals.append(ArenaInterval(value=v, start=d,
+                                   end=last.get(v, d), size=sizes[v]))
+
+    # first-fit placement over interfering intervals
+    ivals.sort(key=lambda iv: (iv.start, -iv.size, iv.value))
+    placed: List[ArenaInterval] = []
+    for iv in ivals:
+        overlap = [p for p in placed
+                   if not (iv.end < p.start or p.end < iv.start)]
+        for cand in sorted({0} | {p.offset + p.size for p in overlap}):
+            if all(cand + iv.size <= p.offset or p.offset + p.size <= cand
+                   for p in overlap):
+                iv.offset = cand
+                break
+        placed.append(iv)
+
+    total = max((iv.offset + iv.size for iv in placed), default=0)
+    per_layer_live = {
+        layer.name: sum(iv.size for iv in placed
+                        if iv.start <= i <= iv.end)
+        for i, layer in enumerate(graph.layers)
+    }
+    return ArenaPlan(
+        total_floats=total,
+        offsets={iv.value: iv.offset for iv in placed},
+        intervals=placed,
+        per_layer_live=per_layer_live,
+        buffer_sum_floats=sum(iv.size for iv in placed),
+    )
 
 
 # ---------------------------------------------------------------------------
 # code generation
 # ---------------------------------------------------------------------------
+
+
+def _cname(value: str) -> str:
+    """Sanitize a value name into a C identifier."""
+    return "t_" + re.sub(r"[^0-9A-Za-z_]", "_", value)
 
 
 class CGenerator:
@@ -221,6 +432,7 @@ class CGenerator:
         self.w = _W()
         self.decls = _W()
         self._uid = 0
+        self.plan: Optional[ArenaPlan] = None  # filled by generate()
 
     # -- helpers ------------------------------------------------------------
 
@@ -233,9 +445,19 @@ class CGenerator:
         self.decls(f"static const float {name}[{arr.size}] = {{{vals}}};")
         return name
 
-    def buffer(self, name: str, size: int) -> str:
-        self.decls(f"static float {name}[{size}];")
-        return name
+    def floop(self, var: str, bound, step: int = 1) -> None:
+        """Open a counted loop with a C89-scoped index; pair with
+        :meth:`fclose`."""
+        w = self.w
+        w.open("")
+        w(f"int {var};")
+        inc = f"++{var}" if step == 1 else f"{var} += {step}"
+        w.open(f"for ({var} = 0; {var} < {bound}; {inc})")
+
+    def fclose(self, n: int = 1) -> None:
+        for _ in range(n):
+            self.w.close()
+            self.w.close()
 
     # -- activation epilogues (P2: ternary, never a branch) ------------------
 
@@ -257,38 +479,36 @@ class CGenerator:
 
     # -- padding ------------------------------------------------------------
 
-    def emit_padded_copy(self, src: str, in_shape, pads) -> Tuple[str, Tuple[int, int, int]]:
-        """Materialize a zero-padded copy (paper Eq. 1) for the looped modes
-        where tap bounds are not static."""
+    def emit_padded_copy(self, src: str, in_shape, pads,
+                         buf: str) -> Tuple[str, Tuple[int, int, int]]:
+        """Materialize a zero-padded copy (paper Eq. 1) into the planned
+        arena scratch ``buf``, for the looped modes where tap bounds are
+        not static."""
         h, wdt, c = in_shape
         pt, pb, pl, pr = pads
         ph, pw = h + pt + pb, wdt + pl + pr
-        name = f"pad{self.uid()}"
-        self.buffer(name, ph * pw * c)
         w = self.w
         w(f"/* zero-pad {src}: ({h}x{wdt}x{c}) -> ({ph}x{pw}x{c}) */")
-        w(f"for (int z = 0; z < {ph * pw * c}; ++z) {name}[z] = 0.0f;")
-        w.open(f"for (int i = 0; i < {h}; ++i)")
-        w(f"for (int z = 0; z < {wdt * c}; ++z) "
-          f"{name}[((i + {pt}) * {pw} + {pl}) * {c} + z] = "
-          f"{src}[i * {wdt * c} + z];")
-        w.close()
-        return name, (ph, pw, c)
+        w(_cfor("z", ph * pw * c, f"{buf}[z] = 0.0f;"))
+        self.floop("i", h)
+        w(_cfor("z", wdt * c,
+                f"{buf}[((i + {pt}) * {pw} + {pl}) * {c} + z] = "
+                f"{src}[i * {wdt * c} + z];"))
+        self.fclose()
+        return buf, (ph, pw, c)
 
     # -- conv ---------------------------------------------------------------
 
-    def emit_conv(self, layer: Conv2D, in_shape, src: str, dst: str) -> None:
+    def emit_conv(self, layer: Conv2D, in_shape, src: str, dst: str,
+                  pad_buf: Optional[str] = None) -> None:
         opts, w = self.opts, self.w
-        level = opts.level_for(layer.name)
+        level = effective_level(layer, in_shape, opts)
         oh, ow, co = layer.out_shape(in_shape)
         sh, sw = layer.strides
         pads = layer.pad_amounts(in_shape)
         kh, kw_, ci = layer.kh, layer.kw, layer.c_in
         W_ = layer.weights  # HWIO
         B_ = layer.bias
-        # demote level if over budget (icache trade-off, P1)
-        while level is not None and estimate_terms(layer, in_shape, level) > opts.term_budget:
-            level = {0: 1, 1: 2, 2: None}[level]
 
         w(f"/* Conv2D {layer.name}: {in_shape}->{(oh, ow, co)} "
           f"k={kh}x{kw_} s={sh}x{sw} pad={layer.padding} "
@@ -296,7 +516,8 @@ class CGenerator:
 
         use_pad_buf = any(pads) and level != 0
         if use_pad_buf:
-            src, in_shape = self.emit_padded_copy(src, in_shape, pads)
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy(src, in_shape, pads, pad_buf)
             pads = (0, 0, 0, 0)
         h, wdt, _ = in_shape
         pt, _pb, pl, _pr = pads
@@ -338,10 +559,6 @@ class CGenerator:
                 self._conv_body_sse(layer, W_, B_, wname, bname, literals,
                                     i, j, static_ij, x_index, out_index,
                                     in_bounds, dst, src)
-            elif opts.simd == "structured":
-                self._conv_body_structured(layer, W_, B_, wname, bname, literals,
-                                           i, j, static_ij, x_index, out_index,
-                                           in_bounds, dst, src)
             else:
                 self._conv_body_generic(layer, W_, B_, wname, bname, literals,
                                         i, j, static_ij, x_index, out_index,
@@ -352,23 +569,21 @@ class CGenerator:
                 for j in range(ow):
                     emit_body(i, j)
         elif level == 1:
-            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            self.floop("i", oh)
             for j in range(ow):
                 emit_body("i", j)
-            w.close()
+            self.fclose()
         elif level == 2:
-            w.open(f"for (int i = 0; i < {oh}; ++i)")
-            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            self.floop("i", oh)
+            self.floop("j", ow)
             emit_body("i", "j")
-            w.close()
-            w.close()
+            self.fclose(2)
         else:
-            w.open(f"for (int i = 0; i < {oh}; ++i)")
-            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            self.floop("i", oh)
+            self.floop("j", ow)
             self._conv_loops_rolled(layer, wname, bname, in_shape,
                                     (oh, ow, co), dst, src, pads)
-            w.close()
-            w.close()
+            self.fclose(2)
 
         if layer.activation == "softmax":
             self.emit_softmax((oh, ow, co), dst)
@@ -383,66 +598,69 @@ class CGenerator:
         sh, sw = layer.strides
         pt, _, pl, _ = pads
         assert pt == 0 and pl == 0, "rolled mode uses padded buffers"
+        act = layer.activation if layer.activation != "softmax" else None
         if self.opts.isa is not None:
             isa = self.opts.isa
             co4 = co - co % isa.width
-            w.open(f"for (int k = 0; k < {co4}; k += {isa.width})")
-            w(f"{isa.reg} acc = {isa.load(f'{bname}[k]')};")
-            w.open(f"for (int n = 0; n < {kh}; ++n)")
-            w.open(f"for (int m = 0; m < {kw_}; ++m)")
-            w.open(f"for (int o = 0; o < {ci}; ++o)")
-            xv = f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o]"
-            wv = f"{wname}[((n * {kw_} + m) * {ci} + o) * {co} + k]"
-            w(f"acc = {isa.fmadd(isa.set1(xv), isa.load(wv), 'acc')};")
-            w.close(); w.close(); w.close()
-            for ln in self.act_sse("acc", layer.activation
-                                   if layer.activation != "softmax" else None,
-                                   layer.alpha):
-                w(ln)
-            w(isa.store(f"{dst}[(i * {ow} + j) * {co} + k]", "acc"))
-            w.close()
+            if co4:
+                self.floop("k", co4, step=isa.width)
+                w(f"{isa.reg} acc = {isa.load(f'{bname}[k]')};")
+                self.floop("n", kh)
+                self.floop("m", kw_)
+                self.floop("o", ci)
+                xv = f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o]"
+                wv = f"{wname}[((n * {kw_} + m) * {ci} + o) * {co} + k]"
+                w(f"acc = {isa.fmadd(isa.set1(xv), isa.load(wv), 'acc')};")
+                self.fclose(3)
+                for ln in self.act_sse("acc", act, layer.alpha):
+                    w(ln)
+                w(isa.store(f"{dst}[(i * {ow} + j) * {co} + k]", "acc"))
+                self.fclose()
             ks = range(co4, co)
         elif self.opts.simd == "structured":
             # channel loop innermost over contiguous memory -> auto-vec
+            w.open("")
             w(f"float acc[{co}];")
-            w(f"for (int k = 0; k < {co}; ++k) acc[k] = {bname}[k];")
-            w.open(f"for (int n = 0; n < {kh}; ++n)")
-            w.open(f"for (int m = 0; m < {kw_}; ++m)")
-            w.open(f"for (int o = 0; o < {ci}; ++o)")
+            w(_cfor("k", co, f"acc[k] = {bname}[k];"))
+            self.floop("n", kh)
+            self.floop("m", kw_)
+            self.floop("o", ci)
             w(f"const float xv = {src}[((i * {sh} + n) * {wdt} + "
               f"(j * {sw} + m)) * {ci} + o];")
-            w(f"for (int k = 0; k < {co}; ++k) "
-              f"acc[k] += xv * {wname}[((n * {kw_} + m) * {ci} + o) * {co} + k];")
-            w.close(); w.close(); w.close()
-            act = layer.activation if layer.activation != "softmax" else None
-            w(f"for (int k = 0; k < {co}; ++k) "
-              f"{dst}[(i * {ow} + j) * {co} + k] = "
-              f"{self.act_scalar('acc[k]', act, layer.alpha)};")
+            w(_cfor("k", co,
+                    f"acc[k] += xv * "
+                    f"{wname}[((n * {kw_} + m) * {ci} + o) * {co} + k];"))
+            self.fclose(3)
+            w(_cfor("k", co,
+                    f"{dst}[(i * {ow} + j) * {co} + k] = "
+                    f"{self.act_scalar('acc[k]', act, layer.alpha)};"))
+            w.close()
             ks = ()
         else:
-            w.open(f"for (int k = 0; k < {co}; ++k)")
+            self.floop("k", co)
             w(f"float acc = {bname}[k];")
-            w.open(f"for (int n = 0; n < {kh}; ++n)")
-            w.open(f"for (int m = 0; m < {kw_}; ++m)")
-            w.open(f"for (int o = 0; o < {ci}; ++o)")
+            self.floop("n", kh)
+            self.floop("m", kw_)
+            self.floop("o", ci)
             w(f"acc += {wname}[((n * {kw_} + m) * {ci} + o) * {co} + k] * "
               f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];")
-            w.close(); w.close(); w.close()
-            act = layer.activation if layer.activation != "softmax" else None
+            self.fclose(3)
             w(f"{dst}[(i * {ow} + j) * {co} + k] = "
               f"{self.act_scalar('acc', act, layer.alpha)};")
-            w.close()
+            self.fclose()
             ks = ()
         # scalar tail for sse mode
         for k in ks:
-            w(f"{{ float acc = {bname}[{k}];")
-            w(f"  for (int n = 0; n < {kh}; ++n) for (int m = 0; m < {kw_}; ++m) "
-              f"for (int o = 0; o < {ci}; ++o) "
-              f"acc += {wname}[((n * {kw_} + m) * {ci} + o) * {co} + {k}] * "
-              f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];")
-            act = layer.activation if layer.activation != "softmax" else None
-            w(f"  {dst}[(i * {ow} + j) * {co} + {k}] = "
-              f"{self.act_scalar('acc', act, layer.alpha)}; }}")
+            w.open("")
+            w(f"float acc = {bname}[{k}];")
+            w(_cfor("n", kh, _cfor("m", kw_, _cfor(
+                "o", ci,
+                f"acc += {wname}[((n * {kw_} + m) * {ci} + o) * {co} + {k}] * "
+                f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];"
+            ))))
+            w(f"{dst}[(i * {ow} + j) * {co} + {k}] = "
+              f"{self.act_scalar('acc', act, layer.alpha)};")
+            w.close()
 
     # unrolled bodies --------------------------------------------------------
 
@@ -475,14 +693,6 @@ class CGenerator:
               f"{self.act_scalar(f'a{k}', act, layer.alpha)};")
         w.close()
 
-    def _conv_body_structured(self, layer, W_, B_, wname, bname, literals,
-                              i, j, static_ij, x_index, out_index, in_bounds,
-                              dst, src):
-        # identical accumulators but channel-contiguous arrays
-        self._conv_body_generic(layer, W_, B_, wname, bname, literals, i, j,
-                                static_ij, x_index, out_index, in_bounds,
-                                dst, src)
-
     def _conv_body_sse(self, layer, W_, B_, wname, bname, literals,
                        i, j, static_ij, x_index, out_index, in_bounds,
                        dst, src):
@@ -514,9 +724,10 @@ class CGenerator:
             for ln in self.act_sse(f"v{kg}", act, layer.alpha):
                 w(ln)
             w(isa.store(f"{dst}[{out_index(i, j, kg)}]", f"v{kg}"))
-        # scalar tail
+        # scalar tail, each channel in its own block (C89: decls first)
         for k in range(co4, co):
             bias = _flit(B_[k]) if literals else f"{bname}[{k}]"
+            w.open("")
             w(f"float t{k} = {bias};")
             for n, m, o in self._taps(layer, i, j, static_ij, in_bounds):
                 xv = f"{src}[{x_index(i, j, n, m, o)}]"
@@ -525,9 +736,47 @@ class CGenerator:
                 w(f"t{k} += {xv} * {wv};")
             w(f"{dst}[{out_index(i, j, k)}] = "
               f"{self.act_scalar(f't{k}', act, layer.alpha)};")
+            w.close()
         w.close()
 
-    # -- pooling / elementwise / softmax / dense -----------------------------
+    # -- depthwise conv ------------------------------------------------------
+
+    def emit_depthwise(self, layer: DepthwiseConv2D, in_shape, src: str,
+                       dst: str, pad_buf: Optional[str] = None) -> None:
+        w = self.w
+        oh, ow, co = layer.out_shape(in_shape)
+        pads = layer.pad_amounts(in_shape)
+        kh, kw_, ci, mult = layer.kh, layer.kw, layer.c_in, layer.multiplier
+        sh, sw = layer.strides
+        w(f"/* DepthwiseConv2D {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} mult={mult} pad={layer.padding} "
+          f"act={layer.activation} */")
+        if any(pads):
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy(src, in_shape, pads, pad_buf)
+        h, wdt, _ = in_shape
+        wname = self.const_array(f"w{self.uid()}", layer.weights)
+        bname = self.const_array(f"b{self.uid()}", layer.bias)
+        act = layer.activation if layer.activation != "softmax" else None
+        self.floop("i", oh)
+        self.floop("j", ow)
+        self.floop("c", ci)
+        for m_ in range(mult):
+            w.open("")
+            w(f"float acc = {bname}[c * {mult} + {m_}];")
+            w(_cfor("n", kh, _cfor(
+                "m", kw_,
+                f"acc += {src}[((i * {sh} + n) * {wdt} + "
+                f"(j * {sw} + m)) * {ci} + c] * "
+                f"{wname}[((n * {kw_} + m) * {ci} + c) * {mult} + {m_}];")))
+            w(f"{dst}[(i * {ow} + j) * {co} + c * {mult} + {m_}] = "
+              f"{self.act_scalar('acc', act, layer.alpha)};")
+            w.close()
+        self.fclose(3)
+        if layer.activation == "softmax":
+            self.emit_softmax((oh, ow, co), dst)
+
+    # -- pooling / merge / elementwise / softmax / dense ---------------------
 
     def emit_maxpool(self, layer: MaxPool, in_shape, src: str, dst: str) -> None:
         w, opts = self.w, self.opts
@@ -535,45 +784,43 @@ class CGenerator:
         oh, ow, co = layer.out_shape(in_shape)
         kh, kw_ = layer.size
         sh, sw = layer.strides
-        level = opts.level_for(layer.name)
-        while level is not None and estimate_terms(layer, in_shape, level) > opts.term_budget:
-            level = {0: 1, 1: 2, 2: None}[level]
+        level = effective_level(layer, in_shape, opts)
         w(f"/* MaxPool {layer.name}: {in_shape}->{(oh, ow, co)} "
           f"k={kh}x{kw_} s={sh}x{sw} level={level} */")
 
         def body(i, j):
             isa = opts.isa
             if isa is not None and c % isa.width == 0:
-                w.open("")
                 for kg in range(0, c, isa.width):
+                    w.open("")
                     first = True
                     for n in range(kh):
                         for m in range(kw_):
                             idx = x_idx(i, j, n, m, kg)
                             if first:
-                                w(f"{isa.reg} p{kg} = "
+                                w(f"{isa.reg} p = "
                                   f"{isa.load(f'{src}[{idx}]')};")
                                 first = False
                             else:
-                                w(f"p{kg} = {isa.vmax(f'p{kg}', isa.load(f'{src}[{idx}]'))};")
-                    w(isa.store(f"{dst}[{o_idx(i, j, kg)}]", f"p{kg}"))
-                w.close()
+                                w(f"p = {isa.vmax('p', isa.load(f'{src}[{idx}]'))};")
+                    w(isa.store(f"{dst}[{o_idx(i, j, kg)}]", "p"))
+                    w.close()
             else:
-                w.open("")
                 for k in range(c):
+                    w.open("")
                     first = True
                     for n in range(kh):
                         for m in range(kw_):
                             idx = x_idx(i, j, n, m, k)
                             if first:
-                                w(f"float q{k} = {src}[{idx}];")
+                                w(f"float q = {src}[{idx}];")
                                 first = False
                             else:
                                 # P2: ternary, not an if
-                                w(f"q{k} = {src}[{idx}] > q{k} ? "
-                                  f"{src}[{idx}] : q{k};")
-                    w(f"{dst}[{o_idx(i, j, k)}] = q{k};")
-                w.close()
+                                w(f"q = {src}[{idx}] > q ? "
+                                  f"{src}[{idx}] : q;")
+                    w(f"{dst}[{o_idx(i, j, k)}] = q;")
+                    w.close()
 
         def x_idx(i, j, n, m, k):
             if isinstance(i, int) and isinstance(j, int):
@@ -591,21 +838,21 @@ class CGenerator:
                 for j in range(ow):
                     body(i, j)
         elif level == 1:
-            w.open(f"for (int i = 0; i < {oh}; ++i)")
+            self.floop("i", oh)
             for j in range(ow):
                 body("i", j)
-            w.close()
+            self.fclose()
         elif level == 2:
-            w.open(f"for (int i = 0; i < {oh}; ++i)")
-            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            self.floop("i", oh)
+            self.floop("j", ow)
             body("i", "j")
-            w.close(); w.close()
+            self.fclose(2)
         else:
-            w.open(f"for (int i = 0; i < {oh}; ++i)")
-            w.open(f"for (int j = 0; j < {ow}; ++j)")
+            self.floop("i", oh)
+            self.floop("j", ow)
             if opts.isa is not None and c % opts.isa.width == 0:
                 isa = opts.isa
-                w.open(f"for (int k = 0; k < {c}; k += {isa.width})")
+                self.floop("k", c, step=isa.width)
                 w(f"{isa.reg} p = "
                   f"{isa.load(f'{src}[' + x_idx('i', 'j', 0, 0, 0) + ' + k]')};")
                 for n in range(kh):
@@ -616,9 +863,9 @@ class CGenerator:
                                       + " + k]")
                         w(f"p = {isa.vmax('p', ld)};")
                 w(isa.store(f"{dst}[(i * {ow} + j) * {co} + k]", "p"))
-                w.close()
+                self.fclose()
             else:
-                w.open(f"for (int k = 0; k < {c}; ++k)")
+                self.floop("k", c)
                 w(f"float q = {src}[{x_idx('i', 'j', 0, 0, 0)} + k];")
                 for n in range(kh):
                     for m in range(kw_):
@@ -627,8 +874,78 @@ class CGenerator:
                         w(f"q = {src}[{x_idx('i', 'j', n, m, 0)} + k] > q ? "
                           f"{src}[{x_idx('i', 'j', n, m, 0)} + k] : q;")
                 w(f"{dst}[(i * {ow} + j) * {co} + k] = q;")
-                w.close()
-            w.close(); w.close()
+                self.fclose()
+            self.fclose(2)
+
+    def emit_avgpool(self, layer: AvgPool, in_shape, src: str,
+                     dst: str) -> None:
+        w = self.w
+        h, wdt, c = in_shape
+        oh, ow, co = layer.out_shape(in_shape)
+        kh, kw_ = layer.size
+        sh, sw = layer.strides
+        inv = _flit(1.0 / (kh * kw_))
+        w(f"/* AvgPool {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} */")
+        self.floop("i", oh)
+        self.floop("j", ow)
+        self.floop("k", c)
+        w("float s = 0.0f;")
+        w(_cfor("n", kh, _cfor(
+            "m", kw_,
+            f"s += {src}[((i * {sh} + n) * {wdt} + "
+            f"(j * {sw} + m)) * {c} + k];")))
+        w(f"{dst}[(i * {ow} + j) * {co} + k] = s * {inv};")
+        self.fclose(3)
+
+    def emit_global_avgpool(self, layer: GlobalAvgPool, in_shape,
+                            src: str, dst: str) -> None:
+        w = self.w
+        h, wdt, c = in_shape
+        inv = _flit(1.0 / (h * wdt))
+        w(f"/* GlobalAvgPool {layer.name}: {in_shape}->(1, 1, {c}) */")
+        self.floop("k", c)
+        w("float s = 0.0f;")
+        w(_cfor("p", h * wdt, f"s += {src}[p * {c} + k];"))
+        w(f"{dst}[k] = s * {inv};")
+        self.fclose()
+
+    def emit_add(self, layer: Add, shape, srcs: List[str], dst: str) -> None:
+        w = self.w
+        n = int(np.prod(shape))
+        isa = self.opts.isa
+        act = layer.activation if layer.activation != "softmax" else None
+        w(f"/* Add {layer.name}: {len(srcs)} inputs, {shape}, "
+          f"act={layer.activation} */")
+        if isa is not None and n % isa.width == 0 and len(srcs) >= 2:
+            self.floop("z", n, step=isa.width)
+            w(f"{isa.reg} v = {isa.load(f'{srcs[0]}[z]')};")
+            for s in srcs[1:]:
+                w(f"v = {isa.add('v', isa.load(f'{s}[z]'))};")
+            for ln in self.act_sse("v", act, layer.alpha):
+                w(ln)
+            w(isa.store(f"{dst}[z]", "v"))
+            self.fclose()
+        else:
+            expr = " + ".join(f"{s}[z]" for s in srcs)
+            w(_cfor("z", n,
+                    f"{dst}[z] = {self.act_scalar(expr, act, layer.alpha)};"))
+
+    def emit_concat(self, layer: Concat, in_shapes, srcs: List[str],
+                    dst: str) -> None:
+        w = self.w
+        h, wdt, _ = in_shapes[0]
+        co = int(sum(s[2] for s in in_shapes))
+        w(f"/* Concat {layer.name}: {[tuple(s) for s in in_shapes]} -> "
+          f"({h}, {wdt}, {co}) */")
+        self.floop("p", h * wdt)
+        off = 0
+        for s, ish in zip(srcs, in_shapes):
+            ck = int(ish[2])
+            w(_cfor("z", ck,
+                    f"{dst}[p * {co} + {off} + z] = {s}[p * {ck} + z];"))
+            off += ck
+        self.fclose()
 
     def emit_elementwise(self, in_shape, src, dst, act, alpha) -> None:
         w = self.w
@@ -636,15 +953,15 @@ class CGenerator:
         isa = self.opts.isa
         if isa is not None and n % isa.width == 0 and act in (
                 "relu", "leaky_relu"):
-            w.open(f"for (int z = 0; z < {n}; z += {isa.width})")
+            self.floop("z", n, step=isa.width)
             w(f"{isa.reg} v = {isa.load(f'{src}[z]')};")
             for ln in self.act_sse("v", act, alpha):
                 w(ln)
             w(isa.store(f"{dst}[z]", "v"))
-            w.close()
+            self.fclose()
         else:
-            w(f"for (int z = 0; z < {n}; ++z) {dst}[z] = "
-              f"{self.act_scalar(f'{src}[z]', act, alpha)};")
+            w(_cfor("z", n,
+                    f"{dst}[z] = {self.act_scalar(f'{src}[z]', act, alpha)};"))
 
     def emit_batchnorm(self, layer: BatchNorm, in_shape, src, dst) -> None:
         w = self.w
@@ -653,23 +970,25 @@ class CGenerator:
         sname = self.const_array(f"s{self.uid()}", scale)
         tname = self.const_array(f"t{self.uid()}", shift)
         n = int(np.prod(in_shape))
-        w(f"for (int z = 0; z < {n}; ++z) "
-          f"{dst}[z] = {src}[z] * {sname}[z % {c}] + {tname}[z % {c}];")
+        w(_cfor("z", n,
+                f"{dst}[z] = {src}[z] * {sname}[z % {c}] + "
+                f"{tname}[z % {c}];"))
 
     def emit_softmax(self, shape, buf) -> None:
         w = self.w
         h, wdt, c = shape
         w(f"/* softmax over {c} channels */")
-        w.open(f"for (int p = 0; p < {h * wdt}; ++p)")
+        self.floop("p", h * wdt)
         w(f"float mx = {buf}[p * {c}];")
-        w(f"for (int k = 1; k < {c}; ++k) "
-          f"mx = {buf}[p * {c} + k] > mx ? {buf}[p * {c} + k] : mx;")
         w("float s = 0.0f;")
-        w(f"for (int k = 0; k < {c}; ++k) "
-          f"{{ {buf}[p * {c} + k] = expf({buf}[p * {c} + k] - mx); "
-          f"s += {buf}[p * {c} + k]; }}")
-        w(f"for (int k = 0; k < {c}; ++k) {buf}[p * {c} + k] /= s;")
-        w.close()
+        w(_cfor("k", c,
+                f"mx = {buf}[p * {c} + k] > mx ? {buf}[p * {c} + k] : mx;",
+                start=1))
+        w(_cfor("k", c,
+                f"{{ {buf}[p * {c} + k] = expf({buf}[p * {c} + k] - mx); "
+                f"s += {buf}[p * {c} + k]; }}"))
+        w(_cfor("k", c, f"{buf}[p * {c} + k] /= s;"))
+        self.fclose()
 
     def emit_dense(self, layer: Dense, in_shape, src, dst) -> None:
         w = self.w
@@ -678,76 +997,126 @@ class CGenerator:
         bname = self.const_array(f"b{self.uid()}", layer.bias)
         act = layer.activation if layer.activation != "softmax" else None
         w(f"/* Dense {layer.name}: {d_in}->{d_out} */")
-        w.open(f"for (int k = 0; k < {d_out}; ++k)")
+        self.floop("k", d_out)
         w(f"float acc = {bname}[k];")
-        w(f"for (int z = 0; z < {d_in}; ++z) "
-          f"acc += {src}[z] * {wname}[z * {d_out} + k];")
+        w(_cfor("z", d_in, f"acc += {src}[z] * {wname}[z * {d_out} + k];"))
         w(f"{dst}[k] = {self.act_scalar('acc', act, layer.alpha)};")
-        w.close()
+        self.fclose()
         if layer.activation == "softmax":
             self.emit_softmax((1, 1, d_out), dst)
 
     # -- driver ---------------------------------------------------------------
 
     def generate(self) -> str:
-        g, opts = self.g, self.opts
-        shapes = g.shapes()
-        body_layers = [
-            (l, shapes[i - 1] if i > 0 else g.input_shape, shapes[i])
-            for i, l in enumerate(g.layers)
-            if not isinstance(l, (Input, Dropout, Flatten))
-        ]
-        # buffer per producing layer; last one writes to `out`
-        src = "x"
-        self.w.open(f"void {opts.func_name}(const float *restrict x, "
-                    f"float *restrict out)")
-        for idx, (layer, ish, osh) in enumerate(body_layers):
-            last = idx == len(body_layers) - 1
-            dst = "out" if last else self.buffer(
-                f"buf{self.uid()}", int(np.prod(osh)))
+        g, opts, w = self.g, self.opts, self.w
+        smap = g.shape_map()
+        plan = self.plan = plan_arena(g, opts)
+        val = _value_map(g)
+        out_value = val[g.sink.name]
+
+        def ref(v: str) -> str:
+            if v == "x":
+                return "x"
+            if v == out_value:
+                return "out"
+            return _cname(v)
+
+        w.open(f"void {opts.ws_func_name}(const float *NNCG_RESTRICT x, "
+               f"float *NNCG_RESTRICT out, float *NNCG_RESTRICT ws)")
+        # workspace carving: all pointer declarations first (C89)
+        for iv in sorted(plan.intervals, key=lambda iv: (iv.offset, iv.value)):
+            w(f"float *const {_cname(iv.value)} = ws + {iv.offset}; "
+              f"/* {iv.size} floats, live layers "
+              f"[{iv.start}, {iv.end}] */")
+        if not plan.intervals:
+            w("(void) ws;")
+        for layer in g.layers:
+            if isinstance(layer, IDENTITY_LAYERS):
+                continue
+            ishs = [smap[n] for n in layer.inputs]
+            srcs = [ref(val[n]) for n in layer.inputs]
+            v = val[layer.name]
+            dst = "out" if v == out_value else _cname(v)
+            pad_buf = (_cname(layer.name + "__pad")
+                       if layer.name + "__pad" in plan.offsets else None)
             if isinstance(layer, Conv2D):
-                self.emit_conv(layer, ish, src, dst)
+                self.emit_conv(layer, ishs[0], srcs[0], dst, pad_buf)
+            elif isinstance(layer, DepthwiseConv2D):
+                self.emit_depthwise(layer, ishs[0], srcs[0], dst, pad_buf)
             elif isinstance(layer, MaxPool):
-                self.emit_maxpool(layer, ish, src, dst)
+                self.emit_maxpool(layer, ishs[0], srcs[0], dst)
+            elif isinstance(layer, AvgPool):
+                self.emit_avgpool(layer, ishs[0], srcs[0], dst)
+            elif isinstance(layer, GlobalAvgPool):
+                self.emit_global_avgpool(layer, ishs[0], srcs[0], dst)
+            elif isinstance(layer, Add):
+                self.emit_add(layer, smap[layer.name], srcs, dst)
+            elif isinstance(layer, Concat):
+                self.emit_concat(layer, ishs, srcs, dst)
             elif isinstance(layer, ReLU):
-                self.emit_elementwise(ish, src, dst, "relu", 0.0)
+                self.emit_elementwise(ishs[0], srcs[0], dst, "relu", 0.0)
             elif isinstance(layer, LeakyReLU):
-                self.emit_elementwise(ish, src, dst, "leaky_relu", layer.alpha)
+                self.emit_elementwise(ishs[0], srcs[0], dst, "leaky_relu",
+                                      layer.alpha)
             elif isinstance(layer, Softmax):
-                if src != dst:
-                    self.w(f"for (int z = 0; z < {int(np.prod(ish))}; ++z) "
-                           f"{dst}[z] = {src}[z];")
-                self.emit_softmax(ish, dst)
+                if srcs[0] != dst:
+                    w(_cfor("z", int(np.prod(ishs[0])),
+                            f"{dst}[z] = {srcs[0]}[z];"))
+                self.emit_softmax(ishs[0], dst)
             elif isinstance(layer, BatchNorm):
-                self.emit_batchnorm(layer, ish, src, dst)
+                self.emit_batchnorm(layer, ishs[0], srcs[0], dst)
             elif isinstance(layer, Dense):
-                self.emit_dense(layer, ish, src, dst)
+                self.emit_dense(layer, ishs[0], srcs[0], dst)
             else:  # pragma: no cover
                 raise TypeError(f"cgen: unhandled layer {type(layer).__name__}")
-            src = dst
-        self.w.close()
+        if out_value == "x":  # degenerate identity graph
+            w(_cfor("z", int(np.prod(g.input_shape)), "out[z] = x[z];"))
+        w.close()
+
+        # static-arena wrapper: the paper's embedded single-image entry
+        arena = f"{opts.func_name}_arena"
+        self.decls(f"static float {arena}[{max(plan.total_floats, 1)}];")
+        w("")
+        w.open(f"void {opts.func_name}(const float *NNCG_RESTRICT x, "
+               f"float *NNCG_RESTRICT out)")
+        w(f"{opts.ws_func_name}(x, out, {arena});")
+        w.close()
+        w("")
+        w.open(f"long {opts.ws_size_func_name}(void)")
+        w(f"return {plan.total_floats}L;")
+        w.close()
 
         if opts.emit_batch:
             # serving entry point: N images through the single-image
-            # function (the static scratch buffers make it sequential)
+            # function (sequential over the static arena; thread-parallel
+            # callers drive <func>_ws with per-thread workspaces)
             in_n = int(np.prod(g.input_shape))
-            out_n = int(np.prod(g.output_shape))
-            self.w("")
-            self.w.open(f"void {opts.batch_func_name}("
-                        f"const float *restrict x, float *restrict out, "
-                        f"int n)")
-            self.w(f"for (int b = 0; b < n; ++b) "
-                   f"{opts.func_name}(x + (long)b * {in_n}, "
-                   f"out + (long)b * {out_n});")
-            self.w.close()
+            out_n = int(np.prod(smap[g.sink.name]))
+            w("")
+            w.open(f"void {opts.batch_func_name}("
+                   f"const float *NNCG_RESTRICT x, "
+                   f"float *NNCG_RESTRICT out, int n)")
+            w("int b;")
+            w(f"for (b = 0; b < n; ++b) "
+              f"{opts.func_name}(x + (long)b * {in_n}, "
+              f"out + (long)b * {out_n});")
+            w.close()
 
         hdr = _W()
         hdr("/* Generated by NNCG-JAX (repro of Urbann et al., 2020).")
-        hdr(f" * net: in {g.input_shape} -> out {g.output_shape}, "
-            f"{g.param_count()} params, simd={opts.simd} */")
+        hdr(f" * net: in {g.input_shape} -> out {smap[g.sink.name]}, "
+            f"{g.param_count()} params, simd={opts.simd},")
+        hdr(f" * arena {plan.total_bytes} B "
+            f"(one-buffer-per-layer would be {plan.buffer_sum_bytes} B) */")
         hdr("#include <math.h>")
         if opts.isa is not None:
             hdr(f"#include <{opts.isa.header}>")
+        hdr("#if defined(__STDC_VERSION__) && __STDC_VERSION__ >= 199901L")
+        hdr("#define NNCG_RESTRICT restrict")
+        hdr("#else")
+        hdr("#define NNCG_RESTRICT")
+        hdr("extern float expf(float);")
+        hdr("#endif")
         hdr("")
         return hdr.text() + self.decls.text() + "\n" + self.w.text()
 

@@ -1,7 +1,15 @@
 """Layer-graph IR for trained CNNs (the NNCG front-end).
 
 The paper compiles a *trained* Keras model; here the IR is framework-free:
-a sequential list of layers carrying trained weights as numpy arrays.
+a **DAG** of layers carrying trained weights as numpy arrays.  Every layer
+names its producers in ``inputs``; a plain sequential list still works —
+``CNNGraph`` auto-wires each layer to its predecessor when ``inputs`` is
+omitted (the list→DAG adapter), so pre-DAG callers are unchanged.
+
+The layer list itself must be a valid topological order (each layer's
+inputs appear earlier in the list); ``CNNGraph`` validates this, so every
+consumer — passes, oracles, codegen — can walk ``layers`` directly.
+
 Layout is channels-last (NHWC / HWIO) throughout — the paper's P4
 principle (vectorize over output channels) requires ``c_out`` to be the
 fastest-varying dimension.
@@ -10,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -24,14 +32,39 @@ def _pair(v) -> Tuple[int, int]:
     return int(v), int(v)
 
 
+def _conv_pads(in_shape: Shape3, kh: int, kw: int, strides: Tuple[int, int],
+               padding: str) -> Tuple[int, int, int, int]:
+    """(top, bottom, left, right) zero padding (paper Eq. 1)."""
+    if padding == "valid":
+        return (0, 0, 0, 0)
+    h, w, _ = in_shape
+    sh, sw = strides
+    out_h = -(-h // sh)  # ceil
+    out_w = -(-w // sw)
+    pad_h = max((out_h - 1) * sh + kh - h, 0)
+    pad_w = max((out_w - 1) * sw + kw - w, 0)
+    return (pad_h // 2, pad_h - pad_h // 2, pad_w // 2, pad_w - pad_w // 2)
+
+
 @dataclass
 class Layer:
-    """Base class. ``out_shape`` is filled in by ``CNNGraph.infer_shapes``."""
+    """Base class.
+
+    ``inputs`` holds the names of producer layers (DAG edges). ``None``
+    means "wire me to the previous layer in the list" — resolved by
+    :class:`CNNGraph` so sequential model definitions stay terse.
+    """
 
     name: str = field(default="", kw_only=True)
+    inputs: Optional[List[str]] = field(default=None, kw_only=True)
 
     def out_shape(self, in_shape: Shape3) -> Shape3:  # pragma: no cover
         raise NotImplementedError
+
+    def infer_shape(self, in_shapes: Sequence[Shape3]) -> Shape3:
+        """Output shape from the (ordered) producer shapes. Single-input
+        layers delegate to :meth:`out_shape`; multi-input layers override."""
+        return self.out_shape(in_shapes[0] if in_shapes else None)
 
     def param_count(self) -> int:
         return 0
@@ -91,15 +124,71 @@ class Conv2D(Layer):
 
     def pad_amounts(self, in_shape: Shape3) -> Tuple[int, int, int, int]:
         """(top, bottom, left, right) zero padding (paper Eq. 1)."""
-        if self.padding == "valid":
-            return (0, 0, 0, 0)
-        h, w, _ = in_shape
+        return _conv_pads(in_shape, self.kh, self.kw, self.strides,
+                          self.padding)
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        h, w, c = in_shape
+        assert c == self.c_in, f"{self.name}: c_in {self.c_in} != input {c}"
         sh, sw = self.strides
-        out_h = -(-h // sh)  # ceil
-        out_w = -(-w // sw)
-        pad_h = max((out_h - 1) * sh + self.kh - h, 0)
-        pad_w = max((out_w - 1) * sw + self.kw - w, 0)
-        return (pad_h // 2, pad_h - pad_h // 2, pad_w // 2, pad_w - pad_w // 2)
+        pt, pb, pl, pr = self.pad_amounts(in_shape)
+        oh = (h + pt + pb - self.kh) // sh + 1
+        ow = (w + pl + pr - self.kw) // sw + 1
+        return (oh, ow, self.c_out)
+
+    def param_count(self) -> int:
+        return int(self.weights.size + self.bias.size)
+
+
+@dataclass
+class DepthwiseConv2D(Layer):
+    """Depthwise convolution, weights HWCM ``(kh, kw, c_in, multiplier)``.
+
+    Each input channel is convolved with its own ``multiplier`` filters;
+    output channel ``c * multiplier + m`` comes from input channel ``c``
+    (group-major, matching XLA's grouped-conv channel ordering)."""
+
+    weights: np.ndarray = None
+    bias: np.ndarray = None
+    strides: Tuple[int, int] = (1, 1)
+    padding: str = "valid"
+    activation: Optional[str] = None
+    alpha: float = 0.1
+
+    def __post_init__(self):
+        self.strides = _pair(self.strides)
+        if not hasattr(self.weights, "aval"):
+            self.weights = np.asarray(self.weights, dtype=np.float32)
+        assert self.weights.ndim == 4, "DepthwiseConv2D weights must be HWCM"
+        if self.bias is None:
+            self.bias = np.zeros(self.c_in * self.multiplier, dtype=np.float32)
+        if not hasattr(self.bias, "aval"):
+            self.bias = np.asarray(self.bias, dtype=np.float32)
+        assert self.padding in ("same", "valid")
+
+    @property
+    def kh(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def kw(self) -> int:
+        return self.weights.shape[1]
+
+    @property
+    def c_in(self) -> int:
+        return self.weights.shape[2]
+
+    @property
+    def multiplier(self) -> int:
+        return self.weights.shape[3]
+
+    @property
+    def c_out(self) -> int:
+        return self.c_in * self.multiplier
+
+    def pad_amounts(self, in_shape: Shape3) -> Tuple[int, int, int, int]:
+        return _conv_pads(in_shape, self.kh, self.kw, self.strides,
+                          self.padding)
 
     def out_shape(self, in_shape: Shape3) -> Shape3:
         h, w, c = in_shape
@@ -154,6 +243,70 @@ class MaxPool(Layer):
         kh, kw = self.size
         sh, sw = self.strides
         return ((h - kh) // sh + 1, (w - kw) // sw + 1, c)
+
+
+@dataclass
+class AvgPool(Layer):
+    """Average pooling (VALID), same window semantics as :class:`MaxPool`."""
+
+    size: Tuple[int, int] = (2, 2)
+    strides: Optional[Tuple[int, int]] = None
+
+    def __post_init__(self):
+        self.size = _pair(self.size)
+        self.strides = _pair(self.strides) if self.strides is not None else self.size
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        h, w, c = in_shape
+        kh, kw = self.size
+        sh, sw = self.strides
+        return ((h - kh) // sh + 1, (w - kw) // sw + 1, c)
+
+
+@dataclass
+class GlobalAvgPool(Layer):
+    """Spatial mean over (h, w): ``(h, w, c) -> (1, 1, c)``."""
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return (1, 1, int(in_shape[2]))
+
+
+@dataclass
+class Add(Layer):
+    """Elementwise sum of ≥2 same-shape inputs (residual connection).
+
+    ``activation`` (None | 'relu' | 'leaky_relu') lets the fusion pass
+    fold the post-merge activation into the same loop."""
+
+    activation: Optional[str] = None
+    alpha: float = 0.1
+
+    def infer_shape(self, in_shapes: Sequence[Shape3]) -> Shape3:
+        assert len(in_shapes) >= 2, f"{self.name}: Add needs >=2 inputs"
+        first = tuple(in_shapes[0])
+        for s in in_shapes[1:]:
+            assert tuple(s) == first, (
+                f"{self.name}: Add shape mismatch {in_shapes}")
+        return first
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return in_shape
+
+
+@dataclass
+class Concat(Layer):
+    """Channel-axis concatenation of ≥2 inputs with equal (h, w)."""
+
+    def infer_shape(self, in_shapes: Sequence[Shape3]) -> Shape3:
+        assert len(in_shapes) >= 2, f"{self.name}: Concat needs >=2 inputs"
+        h, w, _ = in_shapes[0]
+        for s in in_shapes[1:]:
+            assert tuple(s[:2]) == (h, w), (
+                f"{self.name}: Concat spatial mismatch {in_shapes}")
+        return (h, w, int(sum(s[2] for s in in_shapes)))
+
+    def out_shape(self, in_shape: Shape3) -> Shape3:
+        return in_shape
 
 
 @dataclass
@@ -226,7 +379,10 @@ class Flatten(Layer):
 
 @dataclass
 class CNNGraph:
-    """A sequential CNN: ``layers[0]`` must be :class:`Input`."""
+    """A DAG of layers; ``layers[0]`` must be :class:`Input` and the list
+    must be topologically ordered (validated).  Layers with ``inputs=None``
+    are auto-wired to their list predecessor, so a plain sequential list
+    is still a valid graph."""
 
     layers: List[Layer]
 
@@ -235,23 +391,71 @@ class CNNGraph:
         for i, l in enumerate(self.layers):
             if not l.name:
                 l.name = f"{type(l).__name__.lower()}_{i}"
+        names = [l.name for l in self.layers]
+        assert len(set(names)) == len(names), f"duplicate layer names: {names}"
+        seen: set = set()
+        for i, l in enumerate(self.layers):
+            if isinstance(l, Input):
+                assert not l.inputs, f"{l.name}: Input takes no inputs"
+                l.inputs = []
+            elif l.inputs is None:  # list→DAG adapter: chain to predecessor
+                l.inputs = [self.layers[i - 1].name]
+            for src in l.inputs:
+                assert src in seen, (
+                    f"{l.name}: input {src!r} must precede it (topo order)")
+            seen.add(l.name)
+
+    # -- structure -----------------------------------------------------------
+
+    def layer(self, name: str) -> Layer:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def consumers(self) -> Dict[str, List[Layer]]:
+        """Map producer name -> consuming layers, in topo order."""
+        out: Dict[str, List[Layer]] = {l.name: [] for l in self.layers}
+        for l in self.layers:
+            for src in l.inputs:
+                out[src].append(l)
+        return out
+
+    @property
+    def sink(self) -> Layer:
+        """The unique output layer (consumed by nobody)."""
+        cons = self.consumers()
+        sinks = [l for l in self.layers if not cons[l.name]]
+        assert len(sinks) == 1, (
+            f"graph must have exactly one output, got "
+            f"{[s.name for s in sinks]}")
+        return sinks[0]
 
     @property
     def input_shape(self) -> Shape3:
         return self.layers[0].shape
 
-    def shapes(self) -> List[Shape3]:
-        """Per-layer output shapes (``shapes[i]`` = output of layer i)."""
-        out: List[Shape3] = []
-        cur = self.input_shape
+    def shape_map(self) -> Dict[str, Shape3]:
+        """Output shape of every layer, keyed by name (topo evaluation)."""
+        smap: Dict[str, Shape3] = {}
         for l in self.layers:
-            cur = l.out_shape(cur)
-            out.append(cur)
-        return out
+            smap[l.name] = l.infer_shape([smap[n] for n in l.inputs])
+        return smap
+
+    def in_shapes(self, layer: Layer,
+                  smap: Optional[Dict[str, Shape3]] = None) -> List[Shape3]:
+        smap = smap if smap is not None else self.shape_map()
+        return [smap[n] for n in layer.inputs]
+
+    def shapes(self) -> List[Shape3]:
+        """Per-layer output shapes in list order (``shapes[i]`` = output
+        of ``layers[i]``)."""
+        smap = self.shape_map()
+        return [smap[l.name] for l in self.layers]
 
     @property
     def output_shape(self) -> Shape3:
-        return self.shapes()[-1]
+        return self.shape_map()[self.sink.name]
 
     def param_count(self) -> int:
         return sum(l.param_count() for l in self.layers)
@@ -260,4 +464,7 @@ class CNNGraph:
         return CNNGraph(list(layers))
 
     def copy(self) -> "CNNGraph":
-        return CNNGraph([dataclasses.replace(l) for l in self.layers])
+        return CNNGraph([
+            dataclasses.replace(l, inputs=list(l.inputs))
+            for l in self.layers
+        ])

@@ -6,23 +6,33 @@ Serves two roles:
      main comparison is TensorFlow XLA; ``jax.jit`` is the same compiler
      stack, so ``jit(forward)`` is the modern equivalent of the tfcompile
      object file.
+
+Evaluation is a topological walk keyed by layer name: each layer reads
+its producers from the value environment, so branching DAGs (residual
+Adds, Concats) run through the same path as sequential nets — and the
+``vmap`` batch oracle and the Pallas kernel path inherit DAG support for
+free.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .graph import (
+    Add,
+    AvgPool,
     BatchNorm,
     CNNGraph,
+    Concat,
     Conv2D,
     Dense,
+    DepthwiseConv2D,
     Dropout,
     Flatten,
+    GlobalAvgPool,
     Input,
     LeakyReLU,
     MaxPool,
@@ -46,57 +56,92 @@ def _activation(x: jnp.ndarray, kind: Optional[str], alpha: float) -> jnp.ndarra
     raise ValueError(f"unknown activation {kind!r}")
 
 
+def _pool(x: jnp.ndarray, size, strides, op, init) -> jnp.ndarray:
+    kh, kw = size
+    sh, sw = strides
+    return jax.lax.reduce_window(
+        x, init, op,
+        window_dimensions=(1, kh, kw, 1),
+        window_strides=(1, sh, sw, 1),
+        padding="VALID",
+    )
+
+
+def _apply(layer, ins: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """One batched-NHWC layer application; ``ins`` are the producer
+    outputs in edge order."""
+    x = ins[0] if ins else None
+    if isinstance(layer, Conv2D):
+        pt, pb, pl, pr = layer.pad_amounts(x.shape[1:])
+        y = jax.lax.conv_general_dilated(
+            x, jnp.asarray(layer.weights),
+            window_strides=layer.strides,
+            padding=((pt, pb), (pl, pr)),
+            dimension_numbers=_DIMS,
+        ) + jnp.asarray(layer.bias)
+        return _activation(y, layer.activation, layer.alpha)
+    if isinstance(layer, DepthwiseConv2D):
+        pt, pb, pl, pr = layer.pad_amounts(x.shape[1:])
+        kh, kw = layer.kh, layer.kw
+        # HWCM -> HWIO with I=1, O=c*mult (group-major, matches XLA)
+        w = jnp.asarray(layer.weights).reshape(kh, kw, 1, layer.c_out)
+        y = jax.lax.conv_general_dilated(
+            x, w,
+            window_strides=layer.strides,
+            padding=((pt, pb), (pl, pr)),
+            dimension_numbers=_DIMS,
+            feature_group_count=layer.c_in,
+        ) + jnp.asarray(layer.bias)
+        return _activation(y, layer.activation, layer.alpha)
+    if isinstance(layer, Dense):
+        y = x.reshape(x.shape[0], -1) @ jnp.asarray(layer.weights)
+        y = y + jnp.asarray(layer.bias)
+        y = _activation(y, layer.activation, layer.alpha)
+        return y.reshape(y.shape[0], 1, 1, -1)
+    if isinstance(layer, MaxPool):
+        return _pool(x, layer.size, layer.strides, jax.lax.max, -jnp.inf)
+    if isinstance(layer, AvgPool):
+        s = _pool(x, layer.size, layer.strides, jax.lax.add, 0.0)
+        return s / float(layer.size[0] * layer.size[1])
+    if isinstance(layer, GlobalAvgPool):
+        return jnp.mean(x, axis=(1, 2), keepdims=True)
+    if isinstance(layer, Add):
+        y = ins[0]
+        for other in ins[1:]:
+            y = y + other
+        return _activation(y, layer.activation, layer.alpha)
+    if isinstance(layer, Concat):
+        return jnp.concatenate(list(ins), axis=-1)
+    if isinstance(layer, ReLU):
+        return jnp.maximum(x, 0.0)
+    if isinstance(layer, LeakyReLU):
+        return jnp.where(x > 0, x, layer.alpha * x)
+    if isinstance(layer, Softmax):
+        return jax.nn.softmax(x, axis=-1)
+    if isinstance(layer, BatchNorm):
+        scale, shift = layer.scale_shift()
+        return x * jnp.asarray(scale) + jnp.asarray(shift)
+    if isinstance(layer, Dropout):
+        return x  # identity at inference
+    if isinstance(layer, Flatten):
+        return x.reshape(x.shape[0], 1, 1, -1)
+    raise TypeError(f"unhandled layer {type(layer).__name__}")  # pragma: no cover
+
+
 def forward(graph: CNNGraph, x: jnp.ndarray) -> jnp.ndarray:
-    """Run the graph on a batched NHWC input ``x``."""
+    """Run the graph on a batched NHWC input ``x`` (topo-order walk)."""
     assert x.ndim == 4, "expected NHWC batch"
+    vals: Dict[str, jnp.ndarray] = {}
     for layer in graph.layers:
         if isinstance(layer, Input):
             assert x.shape[1:] == tuple(layer.shape), (
                 f"input shape {x.shape[1:]} != {layer.shape}"
             )
-        elif isinstance(layer, Conv2D):
-            pt, pb, pl, pr = layer.pad_amounts(x.shape[1:])
-            x = jax.lax.conv_general_dilated(
-                x,
-                jnp.asarray(layer.weights),
-                window_strides=layer.strides,
-                padding=((pt, pb), (pl, pr)),
-                dimension_numbers=_DIMS,
-            )
-            x = x + jnp.asarray(layer.bias)
-            x = _activation(x, layer.activation, layer.alpha)
-        elif isinstance(layer, Dense):
-            x = x.reshape(x.shape[0], -1) @ jnp.asarray(layer.weights)
-            x = x + jnp.asarray(layer.bias)
-            x = _activation(x, layer.activation, layer.alpha)
-            x = x.reshape(x.shape[0], 1, 1, -1)
-        elif isinstance(layer, MaxPool):
-            kh, kw = layer.size
-            sh, sw = layer.strides
-            x = jax.lax.reduce_window(
-                x,
-                -jnp.inf,
-                jax.lax.max,
-                window_dimensions=(1, kh, kw, 1),
-                window_strides=(1, sh, sw, 1),
-                padding="VALID",
-            )
-        elif isinstance(layer, ReLU):
-            x = jnp.maximum(x, 0.0)
-        elif isinstance(layer, LeakyReLU):
-            x = jnp.where(x > 0, x, layer.alpha * x)
-        elif isinstance(layer, Softmax):
-            x = jax.nn.softmax(x, axis=-1)
-        elif isinstance(layer, BatchNorm):
-            scale, shift = layer.scale_shift()
-            x = x * jnp.asarray(scale) + jnp.asarray(shift)
-        elif isinstance(layer, Dropout):
-            pass  # identity at inference
-        elif isinstance(layer, Flatten):
-            x = x.reshape(x.shape[0], 1, 1, -1)
-        else:  # pragma: no cover
-            raise TypeError(f"unhandled layer {type(layer).__name__}")
-    return x
+            vals[layer.name] = x
+        else:
+            vals[layer.name] = _apply(
+                layer, [vals[n] for n in layer.inputs])
+    return vals[graph.sink.name]
 
 
 def make_jit_forward(graph: CNNGraph):
@@ -126,39 +171,41 @@ def forward_pallas(graph: CNNGraph, x: jnp.ndarray) -> jnp.ndarray:
     """Run the CNN through the Pallas TPU kernels (conv2d fused with
     bias+activation, maxpool) — the TPU-native deployment path of the
     generated-C artifact. Interpret-mode on CPU; Mosaic on TPU.
-    Expects an optimized graph (BN folded, activations fused)."""
+    Expects an optimized graph (BN folded, activations fused); DAG
+    merges and the non-kernel layers fall back to jnp ops."""
     from repro.kernels import ops
     assert x.ndim == 4
+    vals: Dict[str, jnp.ndarray] = {}
     for layer in graph.layers:
         if isinstance(layer, Input):
+            vals[layer.name] = x
             continue
+        ins = [vals[n] for n in layer.inputs]
+        xi = ins[0]
         if isinstance(layer, Conv2D):
             act = layer.activation if layer.activation != "softmax" else None
-            x = ops.conv2d(x, jnp.asarray(layer.weights),
+            y = ops.conv2d(xi, jnp.asarray(layer.weights),
                            jnp.asarray(layer.bias), strides=layer.strides,
                            padding=layer.padding, act=act,
                            alpha=layer.alpha)
             if layer.activation == "softmax":
-                x = jax.nn.softmax(x, axis=-1)
+                y = jax.nn.softmax(y, axis=-1)
         elif isinstance(layer, MaxPool):
-            x = ops.maxpool2d(x, size=layer.size, strides=layer.strides)
-        elif isinstance(layer, ReLU):
-            x = jnp.maximum(x, 0.0)
-        elif isinstance(layer, LeakyReLU):
-            x = jnp.where(x > 0, x, layer.alpha * x)
-        elif isinstance(layer, Softmax):
-            x = jax.nn.softmax(x, axis=-1)
+            y = ops.maxpool2d(xi, size=layer.size, strides=layer.strides)
         elif isinstance(layer, (Dropout, BatchNorm, Dense, Flatten)):
             raise NotImplementedError(
                 f"run passes.optimize first ({type(layer).__name__})")
-    return x
+        else:
+            y = _apply(layer, ins)
+        vals[layer.name] = y
+    return vals[graph.sink.name]
 
 
 def extract_params(graph: CNNGraph) -> dict:
     """Trainable weights as a pytree keyed by layer name."""
     out = {}
     for layer in graph.layers:
-        if isinstance(layer, (Conv2D, Dense)):
+        if isinstance(layer, (Conv2D, DepthwiseConv2D, Dense)):
             out[layer.name] = {"w": jnp.asarray(layer.weights),
                                "b": jnp.asarray(layer.bias)}
     return out
@@ -184,7 +231,8 @@ def forward_with_params(graph: CNNGraph, params: dict,
     for layer in graph.layers:
         if layer.name in params:
             layer = _dc.replace(layer, weights=params[layer.name]["w"],
-                                bias=params[layer.name]["b"])
+                                bias=params[layer.name]["b"],
+                                inputs=list(layer.inputs))
         layers.append(layer)
     return forward(CNNGraph(layers), x)
 

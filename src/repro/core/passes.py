@@ -1,14 +1,17 @@
 """Graph rewrite passes (the NNCG optimization pipeline).
 
 These are the paper's compile-time rewrites, applied before code
-generation:
+generation.  All of them walk the DAG **edges** (``layer.inputs`` /
+consumer maps), never list adjacency, so branching graphs (residual
+Adds, Concats) are rewritten correctly:
 
 * ``fold_batchnorm``  — paper §II-B.4: bn(conv(x)) = Σ x·(w/σ) − μ/σ,
   generalized to learnable γ/β.
 * ``remove_dropout``  — dropout is identity at inference.
 * ``fuse_activations`` — standalone ReLU/LeakyReLU/Softmax layers are
-  folded into the preceding Conv2D/Dense so one loop nest computes both
-  (enables the P2 ternary emission in the same code line).
+  folded into the sole producing Conv2D/DepthwiseConv2D/Dense/Add so one
+  loop nest computes both (enables the P2 ternary emission in the same
+  code line).
 * ``align_channels`` — paper P4: pad conv output channels to a SIMD
   multiple (4 for SSSE3, 128 for TPU lanes) with zero filters; downstream
   layers are widened consistently so numerics are unchanged.
@@ -16,15 +19,18 @@ generation:
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
 from .graph import (
+    Add,
+    AvgPool,
     BatchNorm,
     CNNGraph,
     Conv2D,
     Dense,
+    DepthwiseConv2D,
     Dropout,
     Layer,
     LeakyReLU,
@@ -34,85 +40,141 @@ from .graph import (
 )
 
 
-def fold_batchnorm(graph: CNNGraph) -> CNNGraph:
-    """Fold each BatchNorm into the closest preceding Conv2D.
+def _copy_layers(graph: CNNGraph) -> List[Layer]:
+    return [dataclasses.replace(l, inputs=list(l.inputs))
+            for l in graph.layers]
 
-    Layers between the conv and the BN must be channel-preserving and
-    *linear in scale* for the fold to be exact; in the paper's nets BN
-    immediately follows the conv, which is the case we fold. A BN with no
-    foldable conv is kept (the executors handle it directly).
-    """
-    layers = [dataclasses.replace(l) for l in graph.layers]
-    out: List[Layer] = []
-    for layer in layers:
-        if isinstance(layer, BatchNorm) and out and isinstance(out[-1], Conv2D) \
-                and out[-1].activation is None:
-            conv = out[-1]
-            scale, shift = layer.scale_shift()
-            conv.weights = (conv.weights * scale[None, None, None, :]).astype(np.float32)
-            conv.bias = (conv.bias * scale + shift).astype(np.float32)
-        else:
-            out.append(layer)
-    return graph.replace(out)
+
+def _consumer_map(layers: List[Layer]) -> Dict[str, List[Layer]]:
+    out: Dict[str, List[Layer]] = {l.name: [] for l in layers}
+    for l in layers:
+        for src in l.inputs:
+            out[src].append(l)
+    return out
+
+
+def _splice_out(layers: List[Layer], victim: Layer) -> List[Layer]:
+    """Remove a single-input layer; its consumers read its producer."""
+    (src,) = victim.inputs
+    kept = []
+    for l in layers:
+        if l is victim:
+            continue
+        l.inputs = [src if n == victim.name else n for n in l.inputs]
+        kept.append(l)
+    return kept
 
 
 def remove_dropout(graph: CNNGraph) -> CNNGraph:
-    return graph.replace([l for l in graph.layers if not isinstance(l, Dropout)])
+    layers = _copy_layers(graph)
+    for victim in [l for l in layers if isinstance(l, Dropout)]:
+        layers = _splice_out(layers, victim)
+    return graph.replace(layers)
+
+
+def fold_batchnorm(graph: CNNGraph) -> CNNGraph:
+    """Fold each BatchNorm into its producing Conv2D.
+
+    The fold is applied when the BN's sole producer is a Conv2D with no
+    fused activation **and** that conv feeds nothing but the BN — if the
+    conv output also rode a skip edge, folding would silently rescale the
+    other branch.  A BN with no foldable conv is kept (the executors
+    handle it directly).
+    """
+    layers = _copy_layers(graph)
+    for bn in [l for l in layers if isinstance(l, BatchNorm)]:
+        (src,) = bn.inputs
+        conv = next(l for l in layers if l.name == src)
+        cons = _consumer_map(layers)
+        if not (isinstance(conv, Conv2D) and conv.activation is None
+                and cons[conv.name] == [bn]):
+            continue
+        scale, shift = bn.scale_shift()
+        conv.weights = (conv.weights * scale[None, None, None, :]).astype(np.float32)
+        conv.bias = (conv.bias * scale + shift).astype(np.float32)
+        layers = _splice_out(layers, bn)
+    return graph.replace(layers)
 
 
 def fuse_activations(graph: CNNGraph) -> CNNGraph:
-    layers = [dataclasses.replace(l) for l in graph.layers]
-    out: List[Layer] = []
-    for layer in layers:
-        prev = out[-1] if out else None
-        fusible = isinstance(prev, (Conv2D, Dense)) and prev.activation is None
-        if fusible and isinstance(layer, ReLU):
+    """Fold standalone activations into their sole producer.
+
+    Requires the producer to feed *only* the activation layer: on a
+    branching graph, fusing a ReLU into a conv whose raw output also
+    feeds a skip connection would change the skip branch."""
+    layers = _copy_layers(graph)
+    for act in [l for l in layers
+                if isinstance(l, (ReLU, LeakyReLU, Softmax))]:
+        (src,) = act.inputs
+        prev = next(l for l in layers if l.name == src)
+        cons = _consumer_map(layers)
+        fusible = (isinstance(prev, (Conv2D, DepthwiseConv2D, Dense, Add))
+                   and prev.activation is None
+                   and cons[prev.name] == [act])
+        if isinstance(prev, Add) and isinstance(act, Softmax):
+            fusible = False  # Add carries relu-family fusions only
+        if not fusible:
+            continue
+        if isinstance(act, ReLU):
             prev.activation = "relu"
-        elif fusible and isinstance(layer, LeakyReLU):
+        elif isinstance(act, LeakyReLU):
             prev.activation = "leaky_relu"
-            prev.alpha = layer.alpha
-        elif fusible and isinstance(layer, Softmax):
-            prev.activation = "softmax"
+            prev.alpha = act.alpha
         else:
-            out.append(layer)
-    return graph.replace(out)
+            prev.activation = "softmax"
+        layers = _splice_out(layers, act)
+    return graph.replace(layers)
+
+
+_CHANNEL_PRESERVING = (ReLU, LeakyReLU, MaxPool, AvgPool, BatchNorm, Dropout)
+
+
+def _pad_chain(layers: List[Layer], cons: Dict[str, List[Layer]],
+               conv: Conv2D):
+    """Follow the single-consumer chain of channel-preserving layers from
+    ``conv`` to the next Conv2D. Returns (chain, next_conv) or None when
+    anything on the way (a branch, a merge, Dense/Softmax/output, a
+    depthwise conv whose channel count is semantic) blocks padding."""
+    chain: List[Layer] = []
+    cur: Layer = conv
+    while True:
+        nxt_list = cons[cur.name]
+        if len(nxt_list) != 1:
+            return None
+        nxt = nxt_list[0]
+        if isinstance(nxt, Conv2D):
+            return chain, nxt
+        if isinstance(nxt, _CHANNEL_PRESERVING):
+            chain.append(nxt)
+            cur = nxt
+            continue
+        return None
 
 
 def align_channels(graph: CNNGraph, multiple: int = 4) -> CNNGraph:
-    """Pad every Conv2D's ``c_out`` (except the last conv) to a multiple.
-
-    Zero filters produce zero channels; ReLU/LeakyReLU/MaxPool map zero to
-    zero, and the next conv's weights gain zero-weight input channels, so
-    the visible outputs are bit-identical. Softmax is *not* scale-free, so
-    the conv feeding a softmax (or the network output) is never padded.
-    """
-    layers = [dataclasses.replace(l) for l in graph.layers]
-    conv_idx = [i for i, l in enumerate(layers) if isinstance(l, Conv2D)]
-    for pos, i in enumerate(conv_idx):
-        conv = layers[i]
+    """Pad a Conv2D's ``c_out`` to a multiple when the widening is provably
+    invisible: zero filters produce zero channels; ReLU/LeakyReLU/pooling
+    map zero to zero; the next conv's weights gain zero-weight input
+    channels.  Softmax is *not* scale-free and Add/Concat change meaning
+    with channel count, so any chain reaching one of those (or the graph
+    output) is left alone."""
+    layers = _copy_layers(graph)
+    for conv in [l for l in layers if isinstance(l, Conv2D)]:
         pad = (-conv.c_out) % multiple
         if pad == 0:
             continue
-        is_last_conv = pos == len(conv_idx) - 1
-        # anything non-channel-preserving (Dense/Flatten/Softmax) after this
-        # conv and before the next conv blocks padding
-        nxt = conv_idx[pos + 1] if not is_last_conv else len(layers)
-        between_ok = all(
-            isinstance(layers[j], (ReLU, LeakyReLU, MaxPool, BatchNorm, Dropout))
-            for j in range(i + 1, nxt)
-        )
-        if is_last_conv or not between_ok:
+        hit = _pad_chain(layers, _consumer_map(layers), conv)
+        if hit is None:
             continue
+        chain, nxt_conv = hit
         conv.weights = np.pad(conv.weights, ((0, 0),) * 3 + ((0, pad),)).astype(np.float32)
         conv.bias = np.pad(conv.bias, (0, pad)).astype(np.float32)
-        for j in range(i + 1, nxt):
-            bn = layers[j]
+        for bn in chain:
             if isinstance(bn, BatchNorm):
                 bn.mean = np.pad(bn.mean, (0, pad))
                 bn.var = np.pad(bn.var, (0, pad), constant_values=1.0)
                 bn.gamma = np.pad(bn.gamma, (0, pad))
                 bn.beta = np.pad(bn.beta, (0, pad))
-        nxt_conv = layers[conv_idx[pos + 1]]
         nxt_conv.weights = np.pad(
             nxt_conv.weights, ((0, 0), (0, 0), (0, pad), (0, 0))
         ).astype(np.float32)

@@ -19,7 +19,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .cgen import CodegenOptions, generate_c
+from .cgen import CGenerator, CodegenOptions
 from .graph import CNNGraph
 
 _CACHE_DIR = os.path.join(tempfile.gettempdir(), "nncg_cache")
@@ -93,7 +93,11 @@ def compile_c(source: str, *, simd: str = "sse",
 
 @dataclass
 class CompiledNet:
-    """A callable wrapping the generated ``void f(const float*, float*)``."""
+    """A callable wrapping the generated ``void f(const float*, float*)``.
+
+    Also binds the reentrant ``<func>_ws(x, out, workspace)`` entry point
+    when present: every call site supplies its own workspace, so the same
+    .so can run one image per thread (``predict_batch(threads=k)``)."""
 
     so_path: str
     func_name: str
@@ -101,13 +105,17 @@ class CompiledNet:
     out_size: int
     c_source_bytes: int
     batch_func_name: Optional[str] = None
+    workspace_floats: int = 0
+    arena_bytes: int = 0
+    arena_buffer_sum_bytes: int = 0
+    per_layer_live_bytes: Optional[dict] = None
 
     def __post_init__(self):
         lib = ctypes.CDLL(self.so_path)
+        FLOATP = ctypes.POINTER(ctypes.c_float)
         self._fn = getattr(lib, self.func_name)
         self._fn.restype = None
-        self._fn.argtypes = [ctypes.POINTER(ctypes.c_float),
-                             ctypes.POINTER(ctypes.c_float)]
+        self._fn.argtypes = [FLOATP, FLOATP]
         self._batch_fn = None
         if self.batch_func_name:
             try:
@@ -116,11 +124,15 @@ class CompiledNet:
                 pass
             else:
                 self._batch_fn.restype = None
-                self._batch_fn.argtypes = [
-                    ctypes.POINTER(ctypes.c_float),
-                    ctypes.POINTER(ctypes.c_float),
-                    ctypes.c_int,
-                ]
+                self._batch_fn.argtypes = [FLOATP, FLOATP, ctypes.c_int]
+        self._ws_fn = None
+        try:
+            self._ws_fn = getattr(lib, self.func_name + "_ws")
+        except AttributeError:  # pre-arena .so
+            pass
+        else:
+            self._ws_fn.restype = None
+            self._ws_fn.argtypes = [FLOATP, FLOATP, FLOATP]
 
     def __call__(self, x: np.ndarray) -> np.ndarray:
         x = np.ascontiguousarray(x, dtype=np.float32)
@@ -130,15 +142,23 @@ class CompiledNet:
                  out.ctypes.data_as(ctypes.POINTER(ctypes.c_float)))
         return out
 
-    def predict_batch(self, x: np.ndarray) -> np.ndarray:
-        """Run N images through the C batch entry point; returns
-        ``(N, out_size)``. Falls back to a Python loop when the .so was
-        generated without the batch wrapper."""
+    def predict_batch(self, x: np.ndarray,
+                      threads: Optional[int] = None) -> np.ndarray:
+        """Run N images; returns ``(N, out_size)``.
+
+        ``threads=None``/``1`` uses the generated C batch loop (one
+        foreign call).  ``threads=k`` partitions the batch over k Python
+        threads, each driving the reentrant ``<func>_ws`` entry with its
+        own workspace — ctypes releases the GIL during the call, so this
+        is true parallelism on the same .so."""
         x = np.ascontiguousarray(x, dtype=np.float32)
         assert x.size % self.in_size == 0, (x.size, self.in_size)
         n = x.size // self.in_size
         out = np.empty(n * self.out_size, dtype=np.float32)
-        if self._batch_fn is not None:
+        if threads is not None and threads > 1 and self._ws_fn is not None \
+                and n > 1:
+            self._predict_batch_threaded(x, out, n, threads)
+        elif self._batch_fn is not None:
             self._batch_fn(
                 x.ctypes.data_as(ctypes.POINTER(ctypes.c_float)),
                 out.ctypes.data_as(ctypes.POINTER(ctypes.c_float)),
@@ -148,6 +168,25 @@ class CompiledNet:
             for b in range(n):
                 out[b * self.out_size:(b + 1) * self.out_size] = self(flat[b])
         return out.reshape(n, self.out_size)
+
+    def _predict_batch_threaded(self, x: np.ndarray, out: np.ndarray,
+                                n: int, threads: int) -> None:
+        from concurrent.futures import ThreadPoolExecutor
+        FLOATP = ctypes.POINTER(ctypes.c_float)
+        k = min(threads, n)
+        xf = x.reshape(-1)
+
+        def run(t: int) -> None:
+            ws = np.empty(max(self.workspace_floats, 1), dtype=np.float32)
+            wp = ws.ctypes.data_as(FLOATP)
+            for b in range(t, n, k):
+                xi = xf[b * self.in_size:(b + 1) * self.in_size]
+                oi = out[b * self.out_size:(b + 1) * self.out_size]
+                self._ws_fn(xi.ctypes.data_as(FLOATP),
+                            oi.ctypes.data_as(FLOATP), wp)
+
+        with ThreadPoolExecutor(max_workers=k) as ex:
+            list(ex.map(run, range(k)))
 
     def time_per_call_us(self, x: np.ndarray, iters: int = 2000,
                          warmup: int = 50) -> float:
@@ -168,8 +207,10 @@ def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
           extra_flags: Sequence[str] = ()) -> CompiledNet:
     """graph -> C -> .so -> callable."""
     opts = opts or CodegenOptions()
-    src = generate_c(graph, opts)
+    gen = CGenerator(graph, opts)
+    src = gen.generate()
     so = compile_c(src, simd=opts.simd, extra_flags=extra_flags)
+    plan = gen.plan  # the exact plan the emitted code was carved from
     return CompiledNet(
         so_path=so,
         func_name=opts.func_name,
@@ -177,6 +218,11 @@ def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
         out_size=int(np.prod(graph.output_shape)),
         c_source_bytes=len(src),
         batch_func_name=opts.batch_func_name if opts.emit_batch else None,
+        workspace_floats=plan.total_floats,
+        arena_bytes=plan.total_bytes,
+        arena_buffer_sum_bytes=plan.buffer_sum_bytes,
+        per_layer_live_bytes={k: v * 4
+                              for k, v in plan.per_layer_live.items()},
     )
 
 

@@ -33,17 +33,21 @@ DEFAULT_CACHE_DIR = os.path.join(tempfile.gettempdir(), "nncg_cache",
 
 
 def graph_fingerprint(graph: CNNGraph) -> str:
-    """Content hash of a trained graph: layer names, structure, weights.
+    """Content hash of a trained graph: topology, layer names, structure,
+    weights.
 
     Two graphs with the same fingerprint generate byte-identical C for
-    any codegen options, so tuning results transfer exactly. Layer
-    names participate because cached unroll selections are keyed by
-    layer name (``CodegenOptions.level_for``).
+    any codegen options, so tuning results transfer exactly.  The DAG
+    edges (``layer.inputs``) participate — two nets with identical layer
+    stacks but different wiring (e.g. with/without a residual skip) are
+    different programs.  Layer names participate because cached unroll
+    selections are keyed by layer name (``CodegenOptions.level_for``).
     """
     h = hashlib.sha256()
     for layer in graph.layers:
         h.update(type(layer).__name__.encode())
         h.update(f"name={layer.name!r};".encode())
+        h.update(f"inputs={list(layer.inputs)!r};".encode())
         for attr in ("shape", "strides", "padding", "activation", "alpha",
                      "size", "eps", "rate"):
             if hasattr(layer, attr):
@@ -51,6 +55,9 @@ def graph_fingerprint(graph: CNNGraph) -> str:
         for attr in ("weights", "bias", "mean", "var", "gamma", "beta"):
             v = getattr(layer, attr, None)
             if v is not None:
+                # shape participates: byte-identical weights factored
+                # differently (HWIO vs HWCM splits) are different programs
+                h.update(f"{attr}{tuple(np.shape(v))};".encode())
                 h.update(np.ascontiguousarray(v, np.float32).tobytes())
     return h.hexdigest()
 
@@ -149,11 +156,13 @@ class Autotuner:
             x = np.random.default_rng(0).normal(
                 size=graph.input_shape).astype(np.float32)
 
-        shapes: Dict[str, tuple] = {}
-        cur = graph.input_shape
-        for layer in graph.layers:
-            shapes[layer.name] = cur
-            cur = layer.out_shape(cur)
+        # per-layer *input* shapes via the DAG edges (branch layers get
+        # their true producer shapes, not list-adjacent ones)
+        smap = graph.shape_map()
+        shapes: Dict[str, tuple] = {
+            layer.name: (smap[layer.inputs[0]] if layer.inputs else None)
+            for layer in graph.layers
+        }
 
         levels = cgen.choose_levels(graph, self.start_budget)
         best = self._time(graph, levels, x)

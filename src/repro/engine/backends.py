@@ -80,20 +80,24 @@ class Backend:
 @register_backend("c")
 class CBackend(Backend):
     """NNCG: graph -> C -> cc -> ctypes. Batches run through the
-    generated ``<func>_batch`` loop wrapper."""
+    generated ``<func>_batch`` loop wrapper, or — with ``threads>1`` —
+    thread-parallel over the reentrant ``<func>_ws`` workspace entry
+    (each thread owns one liveness-planned arena)."""
 
     def __init__(self, graph: CNNGraph, *, simd: str = "sse",
                  unroll=0, func_name: str = "nncg_net",
-                 term_budget: Optional[int] = None):
+                 term_budget: Optional[int] = None,
+                 threads: Optional[int] = None):
         super().__init__(graph)
         kw = {} if term_budget is None else {"term_budget": term_budget}
         self.opts = cgen.CodegenOptions(simd=simd, unroll=unroll,
                                         func_name=func_name, **kw)
+        self.threads = threads
         self.net = runtime.build(graph, self.opts)
 
     def predict_batch(self, x: np.ndarray) -> np.ndarray:
         n = x.shape[0]
-        out = self.net.predict_batch(x)
+        out = self.net.predict_batch(x, threads=self.threads)
         return out.reshape((n,) + self.out_shape)
 
     def time_per_call_us(self, x: np.ndarray, iters: int = 500,

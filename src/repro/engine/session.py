@@ -38,6 +38,10 @@ class InferenceSession:
               the engine keeps the fastest (mode, per-layer levels) pair.
     unroll:   C backend without autotune — ``"auto"`` (static heuristic),
               a single level, or a per-layer dict.
+    threads:  C backend — drive batches thread-parallel through the
+              reentrant ``<func>_ws`` entry point (one liveness-planned
+              workspace per thread); ``None``/1 keeps the sequential
+              generated batch loop.
     tune_cache: directory (or :class:`TuningCache`) for persisted tuning
               results; ``None`` uses the default cache dir.
     tune_iters: timing iterations per candidate during autotuning.
@@ -49,6 +53,7 @@ class InferenceSession:
                  simd_search: Optional[Sequence[str]] = None,
                  unroll: Union[str, int, None, Dict] = "auto",
                  optimize: bool = True,
+                 threads: Optional[int] = None,
                  tune_cache: Union[None, str, TuningCache] = None,
                  tune_iters: int = 300,
                  func_name: str = "nncg_net"):
@@ -85,7 +90,8 @@ class InferenceSession:
                            else None)
             self._backend: Backend = CBackend(
                 self.graph, simd=self.simd, unroll=unroll_cfg,
-                func_name=func_name, term_budget=term_budget)
+                func_name=func_name, term_budget=term_budget,
+                threads=threads)
         else:
             self._backend = get_backend(backend)(self.graph)
 
@@ -139,6 +145,16 @@ class InferenceSession:
                      tuned_us_per_call=self.tuned.us_per_call,
                      tuned_from_cache=self.tuned.from_cache)
         if isinstance(self._backend, CBackend):
-            d["c_source_bytes"] = self._backend.net.c_source_bytes
-            d["so_path"] = self._backend.net.so_path
+            net = self._backend.net
+            d["c_source_bytes"] = net.c_source_bytes
+            d["so_path"] = net.so_path
+            # liveness-planned memory: the one workspace all
+            # intermediates share, vs. the per-layer-static scheme it
+            # replaced, plus how many bytes are live at each layer step
+            d["arena_bytes"] = net.arena_bytes
+            d["arena_buffer_sum_bytes"] = net.arena_buffer_sum_bytes
+            d["per_layer_live_bytes"] = dict(net.per_layer_live_bytes or {})
+            d["peak_live_bytes"] = max(
+                (net.per_layer_live_bytes or {}).values(), default=0)
+            d["threads"] = self._backend.threads
         return d

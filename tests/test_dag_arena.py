@@ -1,0 +1,293 @@
+"""DAG graph IR + liveness-planned arena: planner invariants, random
+branching graphs against the XLA oracle, the residual config end-to-end,
+reentrancy of the workspace entry point, and the strict-ANSI claim."""
+import shutil
+import subprocess
+
+import numpy as np
+import pytest
+
+try:  # hypothesis widens the DAG property search; a fixed grid runs without
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.cnn_paper import PAPER_CNNS, residual_cnn
+from repro.core import cgen, jax_exec, passes, runtime
+from repro.core.graph import (
+    Add, CNNGraph, Concat, Conv2D, DepthwiseConv2D, GlobalAvgPool,
+    Input, MaxPool, ReLU, Softmax,
+)
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _conv(rng, kh, kw, ci, co, **kw_args) -> Conv2D:
+    w = rng.normal(0, 0.5, (kh, kw, ci, co)).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Conv2D(weights=w, bias=b, **kw_args)
+
+
+# ----------------------------------------------------------- graph IR ----
+
+def test_sequential_list_adapts_to_dag():
+    """The list→DAG adapter chains omitted ``inputs`` to the predecessor,
+    so every pre-DAG sequential model is a valid graph unchanged."""
+    g = PAPER_CNNS["ball"]()
+    for prev, layer in zip(g.layers, g.layers[1:]):
+        assert layer.inputs == [prev.name]
+    assert g.layers[0].inputs == []
+    assert g.sink is g.layers[-1]
+
+
+def test_topo_order_is_validated():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError, match="topo order"):
+        CNNGraph([
+            Input(shape=(4, 4, 1), name="in"),
+            _conv(rng, 1, 1, 1, 1, name="a", inputs=["b"]),  # forward ref
+            _conv(rng, 1, 1, 1, 1, name="b", inputs=["a"]),
+        ])
+
+
+def test_single_sink_enforced():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError, match="exactly one output"):
+        CNNGraph([
+            Input(shape=(4, 4, 1), name="in"),
+            _conv(rng, 1, 1, 1, 2, name="a", inputs=["in"]),
+            _conv(rng, 1, 1, 1, 2, name="b", inputs=["in"]),
+        ]).sink
+
+
+def test_fuse_respects_skip_edges():
+    """A ReLU whose producer also feeds a skip edge must NOT be fused —
+    the skip reads the pre-activation tensor."""
+    rng = np.random.default_rng(1)
+    g = CNNGraph([
+        Input(shape=(6, 6, 2), name="in"),
+        _conv(rng, 3, 3, 2, 2, padding="same", name="c1"),
+        ReLU(name="r1"),                      # c1 -> r1 AND c1 -> add
+        Add(name="add", inputs=["r1", "c1"]),
+    ])
+    fused = passes.fuse_activations(g)
+    assert any(isinstance(l, ReLU) for l in fused.layers)
+    x = rng.normal(0, 1, g.input_shape).astype(np.float32)
+    np.testing.assert_allclose(jax_exec.predict(g, x),
+                               jax_exec.predict(fused, x),
+                               rtol=RTOL, atol=ATOL)
+
+
+# ------------------------------------------------------- arena planner ----
+
+def _assert_plan_sound(plan: cgen.ArenaPlan):
+    """No two time-overlapping intervals may overlap in bytes."""
+    for a in plan.intervals:
+        assert 0 <= a.offset and a.offset + a.size <= plan.total_floats
+        for b in plan.intervals:
+            if a is b or a.end < b.start or b.end < a.start:
+                continue
+            disjoint = (a.offset + a.size <= b.offset
+                        or b.offset + b.size <= a.offset)
+            assert disjoint, f"live intervals collide: {a} vs {b}"
+
+
+@pytest.mark.parametrize("name", list(PAPER_CNNS))
+def test_arena_never_overlaps_live_intervals(name):
+    g = passes.optimize(PAPER_CNNS[name](), simd_multiple=4)
+    for unroll in (0, None):
+        _assert_plan_sound(cgen.plan_arena(
+            g, cgen.CodegenOptions(simd="generic", unroll=unroll)))
+
+
+def test_arena_planner_no_overlap_residual():
+    g = passes.optimize(residual_cnn(), simd_multiple=4)
+    plan = cgen.plan_arena(g, cgen.CodegenOptions(simd="generic",
+                                                  unroll=None))
+    _assert_plan_sound(plan)
+    # skip edges must extend lifetimes: the stem tensor stays live
+    # across the whole residual block
+    by_val = {iv.value: iv for iv in plan.intervals}
+    stem = by_val["stem"]
+    add_idx = [i for i, l in enumerate(g.layers)
+               if l.name == "res_add"][0]
+    assert stem.end >= add_idx
+
+
+@pytest.mark.parametrize("name", list(PAPER_CNNS))
+def test_arena_strictly_smaller_than_per_layer_buffers(name):
+    """Acceptance: the planned arena beats the sum of the per-layer
+    static buffers it replaces, for every paper CNN."""
+    g = passes.optimize(PAPER_CNNS[name](), simd_multiple=4)
+    plan = cgen.plan_arena(g, cgen.CodegenOptions(simd="sse", unroll=None))
+    assert plan.total_floats < plan.buffer_sum_floats, (
+        plan.total_floats, plan.buffer_sum_floats)
+    assert plan.peak_live_floats <= plan.total_floats
+
+
+# ----------------------------------------------- residual DAG end-to-end ----
+
+@pytest.mark.parametrize("simd", ["generic", "structured", "sse"])
+def test_residual_cnn_c_matches_oracle(simd):
+    """Acceptance: residual (Add) + depthwise CNN round-trips
+    optimize -> generate_c -> compile -> matches XLA within 1e-4."""
+    if simd == "sse" and not runtime.host_supports_ssse3():
+        pytest.skip("host lacks SSSE3")
+    g = passes.optimize(residual_cnn(), simd_multiple=4)
+    assert any(isinstance(l, Add) for l in g.layers)
+    assert any(isinstance(l, DepthwiseConv2D) for l in g.layers)
+    net = runtime.build(g, cgen.CodegenOptions(
+        simd=simd, unroll=cgen.choose_levels(g, 20_000)))
+    x = np.random.default_rng(3).normal(size=g.input_shape).astype(np.float32)
+    ref = jax_exec.predict(g, x)
+    np.testing.assert_allclose(net(x).reshape(ref.shape), ref,
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_residual_cnn_through_engine_backends():
+    from repro.engine import InferenceSession
+    g = residual_cnn()
+    x = np.random.default_rng(5).normal(
+        size=(3,) + g.input_shape).astype(np.float32)
+    ref = InferenceSession(g, backend="xla").predict(x)
+    got_c = InferenceSession(g, backend="c", simd="structured").predict(x)
+    got_p = InferenceSession(g, backend="pallas").predict(x)
+    np.testing.assert_allclose(got_c, ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(got_p, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_session_info_reports_arena():
+    from repro.engine import InferenceSession
+    sess = InferenceSession(residual_cnn(), backend="c", simd="structured")
+    info = sess.info
+    assert info["arena_bytes"] > 0
+    assert info["arena_bytes"] < info["arena_buffer_sum_bytes"]
+    assert 0 < info["peak_live_bytes"] <= info["arena_bytes"]
+    assert info["per_layer_live_bytes"]
+
+
+# ---------------------------------------------------------- reentrancy ----
+
+def test_workspace_entry_is_reentrant_and_thread_parallel():
+    g = passes.optimize(residual_cnn(), simd_multiple=4)
+    net = runtime.build(g, cgen.CodegenOptions(simd="structured",
+                                               unroll=None))
+    assert net._ws_fn is not None, "workspace entry missing from .so"
+    assert net.workspace_floats > 0
+    x = np.random.default_rng(9).normal(
+        size=(8,) + g.input_shape).astype(np.float32)
+    seq = net.predict_batch(x)
+    par = net.predict_batch(x, threads=4)
+    np.testing.assert_array_equal(seq, par)
+
+
+def test_threaded_session_matches_sequential():
+    from repro.engine import InferenceSession
+    g = residual_cnn()
+    x = np.random.default_rng(11).normal(
+        size=(6,) + g.input_shape).astype(np.float32)
+    seq = InferenceSession(g, backend="c", simd="structured").predict(x)
+    par = InferenceSession(g, backend="c", simd="structured",
+                           threads=3).predict(x)
+    np.testing.assert_array_equal(seq, par)
+
+
+# --------------------------------------------------- fingerprint / DAG ----
+
+def test_graph_fingerprint_hashes_topology():
+    from repro.engine import graph_fingerprint
+
+    def build(skip_from):
+        r = np.random.default_rng(2)
+        return CNNGraph([
+            Input(shape=(6, 6, 2), name="in"),
+            Conv2D(weights=r.normal(0, 0.5, (3, 3, 2, 2)).astype(np.float32),
+                   padding="same", name="c1"),
+            Conv2D(weights=r.normal(0, 0.5, (3, 3, 2, 2)).astype(np.float32),
+                   padding="same", name="c2"),
+            Add(name="add", inputs=["c2", skip_from]),
+        ])
+
+    # identical layers & weights, different wiring -> different programs
+    assert graph_fingerprint(build("c1")) != graph_fingerprint(build("in"))
+    assert graph_fingerprint(build("c1")) == graph_fingerprint(build("c1"))
+
+
+# -------------------------------------------- random DAGs vs the oracle ----
+
+def _check_branch_merge_dag(ci, co, deep_branch, merge, pool_tail, seed):
+    """Property body: a small branch->merge DAG produces C that matches
+    the XLA oracle within 1e-4."""
+    rng = np.random.default_rng(seed)
+    layers = [
+        Input(shape=(8, 8, ci), name="in"),
+        _conv(rng, 3, 3, ci, co, padding="same", activation="relu",
+              name="stem"),
+        _conv(rng, 1, 1, co, co, padding="valid", name="left",
+              inputs=["stem"]),
+    ]
+    right_src = "stem"
+    if deep_branch:
+        layers.append(DepthwiseConv2D(
+            weights=rng.normal(0, 0.5, (3, 3, co, 1)).astype(np.float32),
+            padding="same", activation="relu", name="right_dw",
+            inputs=["stem"]))
+        right_src = "right_dw"
+    if merge == "add":
+        layers.append(Add(name="merge", inputs=["left", right_src],
+                          activation="relu"))
+    else:
+        layers.append(Concat(name="merge", inputs=["left", right_src]))
+    if pool_tail:
+        layers.append(MaxPool(size=(2, 2), name="tail_pool"))
+    layers.append(GlobalAvgPool(name="gap"))
+    layers.append(Softmax(name="sm"))
+    g = CNNGraph(layers)
+
+    net = runtime.build(g, cgen.CodegenOptions(simd="generic", unroll=None))
+    _assert_plan_sound(cgen.plan_arena(
+        g, cgen.CodegenOptions(simd="generic", unroll=None)))
+    x = rng.normal(0, 1, g.input_shape).astype(np.float32)
+    ref = jax_exec.predict(g, x)
+    np.testing.assert_allclose(net(x).reshape(ref.shape), ref,
+                               rtol=RTOL, atol=ATOL)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(1, 3), st.integers(1, 4), st.booleans(),
+           st.sampled_from(["add", "concat"]), st.booleans(),
+           st.integers(0, 2 ** 31 - 1))
+    def test_random_branch_merge_dag_matches_oracle(ci, co, deep_branch,
+                                                    merge, pool_tail, seed):
+        _check_branch_merge_dag(ci, co, deep_branch, merge, pool_tail, seed)
+else:
+    @pytest.mark.parametrize("merge", ["add", "concat"])
+    @pytest.mark.parametrize("deep_branch", [False, True])
+    @pytest.mark.parametrize("seed", [0, 1234])
+    def test_random_branch_merge_dag_matches_oracle(merge, deep_branch,
+                                                    seed):
+        _check_branch_merge_dag(2, 3, deep_branch, merge,
+                                pool_tail=bool(seed), seed=seed)
+
+
+# ------------------------------------------------------- strict ANSI C ----
+
+@pytest.mark.parametrize("builder", [PAPER_CNNS["ball"], residual_cnn])
+def test_generated_c_is_strict_ansi_c89(builder, tmp_path):
+    """The paper's 'plain ANSI C' claim, enforced: the generic-mode file
+    compiles under gcc -std=c89 -Wall -Wextra -Werror -pedantic-errors."""
+    gcc = shutil.which("gcc")
+    if gcc is None:
+        pytest.skip("gcc not available")
+    g = passes.optimize(builder(), simd_multiple=1)
+    src = cgen.generate_c(g, cgen.CodegenOptions(simd="generic",
+                                                 unroll=None))
+    c_path = tmp_path / "net.c"
+    c_path.write_text(src)
+    proc = subprocess.run(
+        [gcc, "-std=c89", "-Wall", "-Wextra", "-Werror", "-pedantic-errors",
+         "-c", str(c_path), "-o", str(tmp_path / "net.o")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr[:4000]

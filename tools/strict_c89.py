@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""CI gate for the paper's "plain ANSI C" claim.
+
+Generates the C file for the paper's ball CNN and the residual DAG
+config (generic SIMD mode — the intrinsics headers are deliberately
+out of scope for ANSI), then compiles each with
+
+    gcc -std=c89 -Wall -Wextra -Werror -pedantic-errors
+
+Any warning, any C99-ism (mid-block declarations, ``//`` comments,
+``for (int ...``, bare ``restrict``) fails the build.  Exercises both
+the fully-unrolled (weights-as-literals) and rolled (const-array)
+emission paths.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.cnn_paper import ball_classifier, residual_cnn  # noqa: E402
+from repro.core import cgen, passes  # noqa: E402
+
+STRICT_FLAGS = ["-std=c89", "-Wall", "-Wextra", "-Werror",
+                "-pedantic-errors"]
+
+CASES = [
+    ("ball", ball_classifier, 0),       # paper CNN, fully unrolled
+    ("ball", ball_classifier, None),    # paper CNN, rolled loops
+    ("residual", residual_cnn, None),   # DAG config (Add/Concat/depthwise)
+]
+
+
+def main() -> int:
+    gcc = shutil.which("gcc") or shutil.which("cc")
+    if gcc is None:
+        print("strict_c89: no C compiler found", file=sys.stderr)
+        return 2
+    failures = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, builder, unroll in CASES:
+            g = passes.optimize(builder(), simd_multiple=1)
+            src = cgen.generate_c(
+                g, cgen.CodegenOptions(simd="generic", unroll=unroll))
+            c_path = os.path.join(tmp, f"{name}_{unroll}.c")
+            with open(c_path, "w") as f:
+                f.write(src)
+            cmd = [gcc, *STRICT_FLAGS, "-c", c_path,
+                   "-o", c_path + ".o"]
+            proc = subprocess.run(cmd, capture_output=True, text=True)
+            tag = f"{name} unroll={unroll}"
+            if proc.returncode == 0:
+                print(f"strict_c89: {tag}: OK ({len(src)} bytes)")
+            else:
+                failures += 1
+                print(f"strict_c89: {tag}: FAILED\n{proc.stderr[:4000]}",
+                      file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
