@@ -9,6 +9,11 @@ Reproduces the NNCG evaluation on the container CPU:
     caching the result on disk so reruns compile nothing.
   * residual — the DAG workload (depthwise + residual Add + Concat),
     same comparison; unrepresentable before the graph IR.
+  * int8 — every network also runs through the post-training-quantized
+    C build (per-channel int8 weights, int8 intermediates, int32
+    accumulators): latency vs the float C path, top-1 agreement with
+    the float oracle on the calibration set, and the byte-planned
+    arena (~4x smaller than the float arena).
   * Table VII — feature ablation: generic scalar C -> SSE layout ->
     SSE + full unroll -> autotuned per-layer selection.
 
@@ -51,29 +56,52 @@ def _bench_cnn(name: str):
     x = np.random.default_rng(0).normal(
         size=g.input_shape).astype(np.float32)
 
+    calib = np.random.default_rng(1).normal(
+        size=(32,) + tuple(g.input_shape)).astype(np.float32)
+
     tuned = InferenceSession(g, backend="c", autotune=True, simd=simd,
                              tune_iters=tune_iters)
     untuned = InferenceSession(g, backend="c", simd=simd)
+    int8 = InferenceSession(g, backend="c", precision="int8",
+                            calibration=calib, autotune=True,
+                            tune_iters=tune_iters)
     xla = InferenceSession(g, backend="xla")
 
-    # correctness gate before timing
+    # correctness gates before timing
     ref = xla.predict(x)
     np.testing.assert_allclose(tuned.predict(x), ref, rtol=1e-3, atol=1e-5)
+    # the compiled int8 build must match its bit-faithful jax reference
+    from repro.core import jax_exec
+    from repro.core.quantize import quantization_error
+    qref = np.asarray(jax_exec.forward_quantized(int8.qgraph, x[None]))[0]
+    np.testing.assert_allclose(int8.predict(x).reshape(qref.shape), qref,
+                               rtol=1e-5, atol=1e-6)
+    qstats = quantization_error(int8.qgraph, calib)
+    assert qstats["top1_agreement"] >= 0.75, qstats
 
     t_c = tuned.benchmark(x, iters=iters)
     t_u = untuned.benchmark(x, iters=iters)
+    t_q = int8.benchmark(x, iters=iters)
     t_x = xla.benchmark(x, iters=max(iters // 10, 100))
     arena = tuned.info["arena_bytes"]
     print(f"table_{name}_nncg_c_autotuned,{t_c:.2f},"
           f"speedup_vs_xla={t_x / t_c:.2f},{arena}")
     print(f"table_{name}_nncg_c_untuned,{t_u:.2f},"
           f"autotune_gain={t_u / t_c:.2f},{untuned.info['arena_bytes']}")
+    print(f"table_{name}_nncg_c_int8,{t_q:.2f},"
+          f"speedup_vs_c={t_c / t_q:.2f},{int8.info['arena_bytes']}")
     print(f"table_{name}_xla_jit,{t_x:.2f},baseline=1.0,")
     RESULTS["cnns"][name] = {
         "c_autotuned_us": round(t_c, 3),
         "c_untuned_us": round(t_u, 3),
+        "c_int8_us": round(t_q, 3),
         "xla_us": round(t_x, 3),
         "speedup_vs_xla": round(t_x / t_c, 3),
+        "int8_speedup_vs_c": round(t_c / t_q, 3),
+        "int8_simd": int8.simd,
+        "int8_arena_bytes": int8.info["arena_bytes"],
+        "int8_top1_agreement": round(qstats["top1_agreement"], 4),
+        "int8_max_abs_err": round(qstats["max_abs_err"], 6),
         "arena_bytes": arena,
         "arena_buffer_sum_bytes": tuned.info["arena_buffer_sum_bytes"],
         "peak_live_bytes": tuned.info["peak_live_bytes"],

@@ -89,3 +89,21 @@ t_c = sess.benchmark(x, iters=20000)
 t_xla = oracle.benchmark(x, iters=2000)
 print(f"latency: NNCG C {t_c:.2f}us | XLA jit {t_xla:.2f}us | "
       f"speed-up {t_xla/t_c:.2f}x (paper: 11.81x vs TF-XLA on i7)")
+
+# ------------------------------------- 5. int8 quantize-and-deploy (2 lines)
+# calibrate activation ranges on sample images, compile the int8 C
+# build: int8 weights + intermediates, int32 accumulators, ~4x smaller
+# memory arena — same float-in/float-out serving interface.
+qsess = InferenceSession(trained, backend="c", precision="int8",
+                         calibration=xs[:64])
+qpred = qsess.predict(xs[:256])
+
+qacc = float((np.argmax(qpred.reshape(256, -1), -1)
+              == np.asarray(ys[:256])).mean())
+agree = float((np.argmax(qpred.reshape(256, -1), -1)
+               == np.asarray(pred[:256])).mean())
+t_q = qsess.benchmark(x, iters=20000)
+print(f"int8: accuracy {qacc:.4f}, top-1 agreement with float "
+      f"{agree:.4f}, latency {t_q:.2f}us, arena "
+      f"{qsess.info['arena_bytes']} B (float: "
+      f"{sess.info['arena_bytes']} B)")

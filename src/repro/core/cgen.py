@@ -69,13 +69,14 @@ from .graph import (
     MaxPool,
     ReLU,
     Softmax,
+    pool_window_counts,
 )
 
 Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
 
 # bump whenever the emitted C changes for the same (graph, options) —
 # cached artifacts measured on older generated code must not be reused
-CODEGEN_VERSION = 3
+CODEGEN_VERSION = 4
 
 # the single source of truth for the unroll/icache emission budget
 # (both CodegenOptions.term_budget and choose_levels read it)
@@ -165,6 +166,11 @@ class CodegenOptions:
     def ws_size_func_name(self) -> str:
         return self.func_name + "_workspace_floats"
 
+    @property
+    def ws_bytes_func_name(self) -> str:
+        """Workspace size entry of the quantized build (int8 arena)."""
+        return self.func_name + "_workspace_bytes"
+
     def level_for(self, layer_name: str) -> Level:
         if isinstance(self.unroll, dict):
             return self.unroll.get(layer_name, None)
@@ -172,9 +178,18 @@ class CodegenOptions:
 
 
 def _flit(v: float) -> str:
-    """Format a float32 as a C literal (paper P3)."""
+    """Format a float32 as a C literal (paper P3).
+
+    ``unique=True`` guarantees the shortest decimal that parses back to
+    the exact same float32 bit pattern (property-tested)."""
     s = np.format_float_scientific(np.float32(v), unique=True, trim="0")
     return f"{s}f"
+
+
+# most-negative finite float32 — the padding fill for max pooling (C89
+# has no INFINITY); a window always covers >=1 valid tap, so the fill
+# can never be the result
+_NEG_FLT_MAX = _flit(np.finfo(np.float32).min)
 
 
 def _cfor(var: str, bound, body: str, start: int = 0, step: int = 1) -> str:
@@ -291,35 +306,42 @@ class ArenaInterval:
 
 @dataclass
 class ArenaPlan:
-    """The packed workspace: byte offsets for every intermediate tensor
-    (and padding scratch), sized by interval interference."""
+    """The packed workspace: element offsets for every intermediate
+    tensor (and padding scratch), sized by interval interference.
+
+    Elements are float32 for the float path and int8 for the quantized
+    path (``elem_bytes`` 4 vs 1) — ``total_floats`` keeps its historic
+    name but counts *elements*."""
 
     total_floats: int
     offsets: Dict[str, int] = field(default_factory=dict)
     intervals: List[ArenaInterval] = field(default_factory=list)
     per_layer_live: Dict[str, int] = field(default_factory=dict)
     buffer_sum_floats: int = 0  # what one-static-buffer-per-tensor costs
+    elem_bytes: int = 4
 
     @property
     def total_bytes(self) -> int:
-        return self.total_floats * 4
+        return self.total_floats * self.elem_bytes
 
     @property
     def buffer_sum_bytes(self) -> int:
-        return self.buffer_sum_floats * 4
+        return self.buffer_sum_floats * self.elem_bytes
 
     @property
     def peak_live_floats(self) -> int:
         return max(self.per_layer_live.values(), default=0)
 
 
-def _value_map(graph: CNNGraph) -> Dict[str, str]:
+def _value_map(graph: CNNGraph, quantized: bool = False) -> Dict[str, str]:
     """Layer name -> the value (buffer) holding its output. Identity
-    layers alias their producer; Input aliases the ``x`` argument."""
+    layers alias their producer; Input aliases the ``x`` argument — in
+    quantized mode the input is itself quantized into an arena buffer
+    (``xq``), so Input *defines* a value."""
     val: Dict[str, str] = {}
     for l in graph.layers:
         if isinstance(l, Input):
-            val[l.name] = "x"
+            val[l.name] = "xq" if quantized else "x"
         elif isinstance(l, (Dropout, Flatten)):
             val[l.name] = val[l.inputs[0]]
         else:
@@ -327,15 +349,20 @@ def _value_map(graph: CNNGraph) -> Dict[str, str]:
     return val
 
 
-def _pad_scratch_floats(layer, in_shape, opts: CodegenOptions) -> int:
-    """Floats of zero-padding scratch the emitter will request for this
-    layer (0 when padding is statically elided or absent)."""
-    if not isinstance(layer, (Conv2D, DepthwiseConv2D)):
+def _pad_scratch_elems(layer, in_shape, opts: CodegenOptions,
+                       elide_static: bool = True) -> int:
+    """Elements of padding scratch the emitter will request for this
+    layer (0 when padding is statically elided or absent).
+
+    ``elide_static=False`` is the quantized planner's view: the int8
+    emitters are rolled (no unroll levels), so padding scratch is
+    always materialized."""
+    if not isinstance(layer, (Conv2D, DepthwiseConv2D, MaxPool, AvgPool)):
         return 0
     pads = layer.pad_amounts(in_shape)
     if not any(pads):
         return 0
-    if isinstance(layer, Conv2D) and \
+    if elide_static and isinstance(layer, (Conv2D, MaxPool)) and \
             effective_level(layer, in_shape, opts) == 0:
         return 0  # level 0 elides out-of-bounds taps statically
     h, w, c = in_shape
@@ -343,22 +370,38 @@ def _pad_scratch_floats(layer, in_shape, opts: CodegenOptions) -> int:
     return (h + pt + pb) * (w + pl + pr) * c
 
 
+def _qconv_use_patch(layer, opts: CodegenOptions) -> bool:
+    """Whether the quantized conv emitter uses the im2row int16 patch:
+    the window's taps are widened into a stack-local ``short`` array
+    once per output position (amortized over all output channels), so
+    every channel runs one flat, tail-free ``_mm_madd_epi16`` dot
+    product against int16-widened weights."""
+    if not isinstance(layer, Conv2D) or opts.isa is None:
+        return False
+    taps = layer.kh * layer.kw * layer.c_in
+    return layer.kh * layer.kw > 1 and taps >= 16
+
+
 def plan_arena(graph: CNNGraph,
-               opts: Optional[CodegenOptions] = None) -> ArenaPlan:
+               opts: Optional[CodegenOptions] = None,
+               *, quantized: bool = False) -> ArenaPlan:
     """Liveness-planned packing of every intermediate tensor.
 
     A value is live from the step of its defining layer to the step of
     its last consumer (interval interference over the topological
     order); padding scratch is live only during its own layer.  The
     network input (``x``) and output (``out``) are caller memory and
-    never enter the arena.  Placement is first-fit at the lowest byte
-    offset not overlapping any time-overlapping interval — for chains
-    this degenerates to ping-pong double buffering, for DAGs the skip
-    edges extend lifetimes exactly as long as needed.
+    never enter the arena — except in quantized mode, where the int8
+    code of the input (``xq``) is itself an arena value.  Placement is
+    first-fit at the lowest offset not overlapping any time-overlapping
+    interval — for chains this degenerates to ping-pong double
+    buffering, for DAGs the skip edges extend lifetimes exactly as long
+    as needed.  Quantized plans are in int8 elements (1 byte each), the
+    ~4x memory win the int8 path exists for.
     """
     opts = opts or CodegenOptions()
     smap = graph.shape_map()
-    val = _value_map(graph)
+    val = _value_map(graph, quantized)
     out_value = val[graph.sink.name]
 
     defs: Dict[str, int] = {}
@@ -366,13 +409,16 @@ def plan_arena(graph: CNNGraph,
     sizes: Dict[str, int] = {}
     ivals: List[ArenaInterval] = []
     for i, layer in enumerate(graph.layers):
-        if not isinstance(layer, IDENTITY_LAYERS):
+        if quantized and isinstance(layer, Input):
+            defs["xq"] = i
+            sizes["xq"] = int(np.prod(smap[layer.name]))
+        elif not isinstance(layer, IDENTITY_LAYERS):
             v = val[layer.name]
             if v == layer.name:  # defines a fresh value
                 defs[v] = i
                 sizes[v] = int(np.prod(smap[layer.name]))
-            scratch = _pad_scratch_floats(
-                layer, smap[layer.inputs[0]], opts)
+            scratch = _pad_scratch_elems(layer, smap[layer.inputs[0]],
+                                         opts, elide_static=not quantized)
             if scratch:
                 ivals.append(ArenaInterval(
                     value=layer.name + "__pad", start=i, end=i,
@@ -412,6 +458,7 @@ def plan_arena(graph: CNNGraph,
         intervals=placed,
         per_layer_live=per_layer_live,
         buffer_sum_floats=sum(iv.size for iv in placed),
+        elem_bytes=1 if quantized else 4,
     )
 
 
@@ -479,17 +526,20 @@ class CGenerator:
 
     # -- padding ------------------------------------------------------------
 
-    def emit_padded_copy(self, src: str, in_shape, pads,
-                         buf: str) -> Tuple[str, Tuple[int, int, int]]:
-        """Materialize a zero-padded copy (paper Eq. 1) into the planned
+    def emit_padded_copy(self, src: str, in_shape, pads, buf: str,
+                         fill: str = "0.0f"
+                         ) -> Tuple[str, Tuple[int, int, int]]:
+        """Materialize a padded copy (paper Eq. 1) into the planned
         arena scratch ``buf``, for the looped modes where tap bounds are
-        not static."""
+        not static.  ``fill`` is the pad value — zero for conv/avg-pool
+        sums, ``-FLT_MAX`` for max pooling."""
         h, wdt, c = in_shape
         pt, pb, pl, pr = pads
         ph, pw = h + pt + pb, wdt + pl + pr
         w = self.w
-        w(f"/* zero-pad {src}: ({h}x{wdt}x{c}) -> ({ph}x{pw}x{c}) */")
-        w(_cfor("z", ph * pw * c, f"{buf}[z] = 0.0f;"))
+        w(f"/* pad {src} with {fill}: ({h}x{wdt}x{c}) -> "
+          f"({ph}x{pw}x{c}) */")
+        w(_cfor("z", ph * pw * c, f"{buf}[z] = {fill};"))
         self.floop("i", h)
         w(_cfor("z", wdt * c,
                 f"{buf}[((i + {pt}) * {pw} + {pl}) * {c} + z] = "
@@ -778,15 +828,39 @@ class CGenerator:
 
     # -- pooling / merge / elementwise / softmax / dense ---------------------
 
-    def emit_maxpool(self, layer: MaxPool, in_shape, src: str, dst: str) -> None:
+    def emit_maxpool(self, layer: MaxPool, in_shape, src: str, dst: str,
+                     pad_buf: Optional[str] = None) -> None:
         w, opts = self.w, self.opts
-        h, wdt, c = in_shape
         oh, ow, co = layer.out_shape(in_shape)
         kh, kw_ = layer.size
         sh, sw = layer.strides
+        pads = layer.pad_amounts(in_shape)
         level = effective_level(layer, in_shape, opts)
         w(f"/* MaxPool {layer.name}: {in_shape}->{(oh, ow, co)} "
-          f"k={kh}x{kw_} s={sh}x{sw} level={level} */")
+          f"k={kh}x{kw_} s={sh}x{sw} pad={layer.padding} level={level} */")
+
+        # like conv: level 0 elides out-of-bounds taps statically; any
+        # looped level materializes a -FLT_MAX-padded copy (the fill
+        # never wins — every window covers >=1 valid tap)
+        if any(pads) and level != 0:
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy(src, in_shape, pads,
+                                                  pad_buf, _NEG_FLT_MAX)
+            pads = (0, 0, 0, 0)
+        h, wdt, c = in_shape
+        pt, _pb, pl, _pr = pads
+
+        def in_bounds(i, j, n, m) -> bool:
+            r, cc = i * sh + n - pt, j * sw + m - pl
+            return 0 <= r < h and 0 <= cc < wdt
+
+        def taps(i, j):
+            static_ij = isinstance(i, int) and isinstance(j, int)
+            for n in range(kh):
+                for m in range(kw_):
+                    if static_ij and not in_bounds(i, j, n, m):
+                        continue  # P3: padding tap elided entirely
+                    yield n, m
 
         def body(i, j):
             isa = opts.isa
@@ -794,39 +868,38 @@ class CGenerator:
                 for kg in range(0, c, isa.width):
                     w.open("")
                     first = True
-                    for n in range(kh):
-                        for m in range(kw_):
-                            idx = x_idx(i, j, n, m, kg)
-                            if first:
-                                w(f"{isa.reg} p = "
-                                  f"{isa.load(f'{src}[{idx}]')};")
-                                first = False
-                            else:
-                                w(f"p = {isa.vmax('p', isa.load(f'{src}[{idx}]'))};")
+                    for n, m in taps(i, j):
+                        idx = x_idx(i, j, n, m, kg)
+                        if first:
+                            w(f"{isa.reg} p = "
+                              f"{isa.load(f'{src}[{idx}]')};")
+                            first = False
+                        else:
+                            w(f"p = {isa.vmax('p', isa.load(f'{src}[{idx}]'))};")
                     w(isa.store(f"{dst}[{o_idx(i, j, kg)}]", "p"))
                     w.close()
             else:
                 for k in range(c):
                     w.open("")
                     first = True
-                    for n in range(kh):
-                        for m in range(kw_):
-                            idx = x_idx(i, j, n, m, k)
-                            if first:
-                                w(f"float q = {src}[{idx}];")
-                                first = False
-                            else:
-                                # P2: ternary, not an if
-                                w(f"q = {src}[{idx}] > q ? "
-                                  f"{src}[{idx}] : q;")
+                    for n, m in taps(i, j):
+                        idx = x_idx(i, j, n, m, k)
+                        if first:
+                            w(f"float q = {src}[{idx}];")
+                            first = False
+                        else:
+                            # P2: ternary, not an if
+                            w(f"q = {src}[{idx}] > q ? "
+                              f"{src}[{idx}] : q;")
                     w(f"{dst}[{o_idx(i, j, k)}] = q;")
                     w.close()
 
         def x_idx(i, j, n, m, k):
             if isinstance(i, int) and isinstance(j, int):
-                return str(((i * sh + n) * wdt + (j * sw + m)) * c + k)
-            return (f"(({i} * {sh} + {n}) * {wdt} + ({j} * {sw} + {m})) "
-                    f"* {c} + {k}")
+                return str(((i * sh + n - pt) * wdt + (j * sw + m - pl))
+                           * c + k)
+            return (f"(({i} * {sh} + {n - pt}) * {wdt} + "
+                    f"({j} * {sw} + {m - pl})) * {c} + {k}")
 
         def o_idx(i, j, k):
             if isinstance(i, int) and isinstance(j, int):
@@ -877,16 +950,33 @@ class CGenerator:
                 self.fclose()
             self.fclose(2)
 
-    def emit_avgpool(self, layer: AvgPool, in_shape, src: str,
-                     dst: str) -> None:
+    def emit_avgpool(self, layer: AvgPool, in_shape, src: str, dst: str,
+                     pad_buf: Optional[str] = None) -> None:
         w = self.w
-        h, wdt, c = in_shape
         oh, ow, co = layer.out_shape(in_shape)
         kh, kw_ = layer.size
         sh, sw = layer.strides
-        inv = _flit(1.0 / (kh * kw_))
+        pads = layer.pad_amounts(in_shape)
+        counts = pool_window_counts(in_shape, layer.size, layer.strides,
+                                    pads)
         w(f"/* AvgPool {layer.name}: {in_shape}->{(oh, ow, co)} "
-          f"k={kh}x{kw_} s={sh}x{sw} */")
+          f"k={kh}x{kw_} s={sh}x{sw} pad={layer.padding} */")
+        if any(pads):
+            # zero fill keeps the window sum correct; the divisor below
+            # counts only the valid taps (edge-correct, not 1/(kh*kw))
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy(src, in_shape, pads,
+                                                  pad_buf)
+        h, wdt, c = in_shape
+        if counts.min() == counts.max():
+            inv_expr = _flit(1.0 / counts.max())
+        else:
+            # edge windows cover fewer valid taps: per-window inverse
+            # divisor table, indexed by the output position
+            invm = self.const_array(
+                f"pinv{self.uid()}",
+                (1.0 / counts.astype(np.float64)).astype(np.float32))
+            inv_expr = f"{invm}[i * {ow} + j]"
         self.floop("i", oh)
         self.floop("j", ow)
         self.floop("k", c)
@@ -895,7 +985,7 @@ class CGenerator:
             "m", kw_,
             f"s += {src}[((i * {sh} + n) * {wdt} + "
             f"(j * {sw} + m)) * {c} + k];")))
-        w(f"{dst}[(i * {ow} + j) * {co} + k] = s * {inv};")
+        w(f"{dst}[(i * {ow} + j) * {co} + k] = s * {inv_expr};")
         self.fclose(3)
 
     def emit_global_avgpool(self, layer: GlobalAvgPool, in_shape,
@@ -1044,9 +1134,9 @@ class CGenerator:
             elif isinstance(layer, DepthwiseConv2D):
                 self.emit_depthwise(layer, ishs[0], srcs[0], dst, pad_buf)
             elif isinstance(layer, MaxPool):
-                self.emit_maxpool(layer, ishs[0], srcs[0], dst)
+                self.emit_maxpool(layer, ishs[0], srcs[0], dst, pad_buf)
             elif isinstance(layer, AvgPool):
-                self.emit_avgpool(layer, ishs[0], srcs[0], dst)
+                self.emit_avgpool(layer, ishs[0], srcs[0], dst, pad_buf)
             elif isinstance(layer, GlobalAvgPool):
                 self.emit_global_avgpool(layer, ishs[0], srcs[0], dst)
             elif isinstance(layer, Add):
@@ -1124,3 +1214,692 @@ class CGenerator:
 def generate_c(graph: CNNGraph, opts: Optional[CodegenOptions] = None) -> str:
     """Generate the single ANSI C file for a trained CNN."""
     return CGenerator(graph, opts or CodegenOptions()).generate()
+
+
+# ---------------------------------------------------------------------------
+# quantized code generation (int8 weights/intermediates, int32 accumulators)
+# ---------------------------------------------------------------------------
+
+
+class QuantCGenerator(CGenerator):
+    """Int8 code generator for a calibrated
+    :class:`repro.core.quantize.QuantizedGraph`.
+
+    Same external contract as the float generator (float in, float out,
+    reentrant ``_ws`` entry, static-arena wrapper, batch loop) but every
+    weight is a ``static const signed char`` array, every intermediate
+    tensor is an int8 code in a **byte**-planned arena (~4x smaller),
+    accumulation is int32, and requantization multiplies by float32
+    constants shared bit-exactly with the jax reference
+    (:func:`repro.core.jax_exec.forward_quantized`).
+
+    ``simd='sse'``/``'avx'`` vectorizes the conv/dense inner dot product
+    with SSE2 integer intrinsics (sign-extend + ``_mm_madd_epi16``, 16
+    taps per iteration).  Integer addition is associative, so the SIMD
+    build produces *identical* results to the scalar one.  Any other
+    mode emits portable scalar code — strict ANSI C89, like the float
+    path (CI-enforced).
+    """
+
+    def __init__(self, qgraph, opts: CodegenOptions):
+        super().__init__(qgraph.graph, opts)
+        self.qg = qgraph
+
+    # -- const emitters -------------------------------------------------------
+
+    def const_i8(self, name: str, arr: np.ndarray) -> str:
+        vals = ", ".join(str(int(v))
+                         for v in np.asarray(arr, np.int8).ravel())
+        self.decls(f"static const signed char {name}[{arr.size}] = "
+                   f"{{{vals}}};")
+        return name
+
+    def const_i16(self, name: str, arr: np.ndarray) -> str:
+        """Int8 weight codes pre-widened to int16 for the SSE madd
+        path (values still fit int8; layout-only)."""
+        vals = ", ".join(str(int(v))
+                         for v in np.asarray(arr, np.int16).ravel())
+        self.decls(f"static const short {name}[{arr.size}] = {{{vals}}};")
+        return name
+
+    def const_i32(self, name: str, arr: np.ndarray) -> str:
+        vals = ", ".join(str(int(v))
+                         for v in np.asarray(arr, np.int32).ravel())
+        self.decls(f"static const int {name}[{arr.size}] = {{{vals}}};")
+        return name
+
+    # -- shared emission fragments -------------------------------------------
+
+    _REQ_DECLS = "float t; float u; int q;"
+
+    def _round_clamp(self, zp_out: int, dst_expr: str) -> None:
+        """``t`` (float, s_out units) -> int8 code at ``dst_expr``;
+        round half up (``floor(t + 0.5)``), add the zero point,
+        saturate.  The floor is truncate-then-fixup — exact for every
+        in-range value and, unlike ``floorf``, never a libm call on
+        pre-SSE4.1 targets (it was the requant hot spot).  Requires
+        ``float t; float u; int q;`` declared in the enclosing block."""
+        w = self.w
+        w("u = t + 0.5f;")
+        w("q = (int)u;")                      # trunc toward zero
+        w(f"q = (q - ((float)q > u)) + {zp_out};")  # fix-up -> floor
+        w(f"{dst_expr} = (signed char)"
+          f"(q < -128 ? -128 : (q > 127 ? 127 : q));")
+
+    def _act_float(self, act: Optional[str], alpha: float) -> None:
+        if act in ("relu", "leaky_relu"):
+            self.w(f"t = {self.act_scalar('t', act, alpha)};")
+
+    def emit_padded_copy_i8(self, src: str, in_shape, pads, buf: str,
+                            fill: str) -> Tuple[str, Tuple[int, int, int]]:
+        """Int8 padded copy — byte-identical emission to the float
+        version (element type comes from the arena declaration);
+        ``fill`` is the input zero-point code for conv/avg sums
+        (cancelled by the folded bias correction) or -128 for max
+        pooling."""
+        return self.emit_padded_copy(src, in_shape, pads, buf, fill)
+
+    def _madd16(self, x_expr: str, w_expr: str) -> None:
+        """One SSE2 iteration: 16 int8 taps x 16 int8 weights summed
+        into ``vacc`` (4 x int32) — sign-extend via unpack+srai, then
+        ``_mm_madd_epi16``.  Emits the body of a block (decls first)."""
+        w = self.w
+        w(f"__m128i xv = _mm_loadu_si128((const __m128i *)({x_expr}));")
+        w(f"__m128i wv = _mm_loadu_si128((const __m128i *)({w_expr}));")
+        w("__m128i xlo = _mm_srai_epi16(_mm_unpacklo_epi8(xv, xv), 8);")
+        w("__m128i xhi = _mm_srai_epi16(_mm_unpackhi_epi8(xv, xv), 8);")
+        w("__m128i wlo = _mm_srai_epi16(_mm_unpacklo_epi8(wv, wv), 8);")
+        w("__m128i whi = _mm_srai_epi16(_mm_unpackhi_epi8(wv, wv), 8);")
+        w("vacc = _mm_add_epi32(vacc, _mm_madd_epi16(xlo, wlo));")
+        w("vacc = _mm_add_epi32(vacc, _mm_madd_epi16(xhi, whi));")
+
+    def _dot_inner(self, src: str, wname: str, row: int, use_sse: bool,
+                   x_base: str, w_base: str) -> None:
+        """``acc += sum_z src[x_base+z] * w[w_base+z]`` over a
+        contiguous run of ``row`` taps (one window row, all channels).
+        SSE2 path: 16 int8 taps/iteration via sign-extend + madd; the
+        remainder and the scalar mode share the same exact int32 sum."""
+        w = self.w
+        w.open("")
+        w(f"const signed char *xr = {src} + {x_base};")
+        w(f"const signed char *wr = {wname} + {w_base};")
+        if use_sse:
+            w.open("")
+            w("int z;")
+            w.open(f"for (z = 0; z + 16 <= {row}; z += 16)")
+            self._madd16("xr + z", "wr + z")
+            w.close()
+            w(f"for (; z < {row}; ++z) acc += xr[z] * wr[z];")
+            w.close()
+        else:
+            w(_cfor("z", row, "acc += xr[z] * wr[z];"))
+        w.close()
+
+    def _hsum_sse(self) -> None:
+        w = self.w
+        w("vacc = _mm_add_epi32(vacc, _mm_srli_si128(vacc, 8));")
+        w("vacc = _mm_add_epi32(vacc, _mm_srli_si128(vacc, 4));")
+        w("acc += _mm_cvtsi128_si32(vacc);")
+
+    # -- weighted layers ------------------------------------------------------
+
+    def emit_qconv(self, layer: Conv2D, in_shape, src: str, dst: str,
+                   pad_buf: Optional[str], is_sink: bool) -> None:
+        qg, w = self.qg, self.w
+        oh, ow, co = layer.out_shape(in_shape)
+        sh, sw = layer.strides
+        kh, kw_, ci = layer.kh, layer.kw, layer.c_in
+        pads = layer.pad_amounts(in_shape)
+        zp_in = qg.in_qp(layer).zero_point
+        act = layer.activation
+        w(f"/* QConv2D {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} pad={layer.padding} act={act} "
+          f"int8/int32 */")
+        if any(pads):
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy_i8(
+                src, in_shape, pads, pad_buf, str(zp_in))
+        h, wdt, _ = in_shape
+        row = kw_ * ci
+        taps = kh * row
+        # taps of one output channel contiguous: (co, kh, kw, ci)
+        wt = np.transpose(qg.weights[layer.name].w_q,
+                          (3, 0, 1, 2)).reshape(co, taps)
+        use_patch = _qconv_use_patch(layer, self.opts)
+        # patch taps padded to the paired-madd granularity (2 vectors)
+        vstep16 = 16 if self.opts.simd == "avx" else 8
+        wtaps = (-(-taps // (2 * vstep16)) * (2 * vstep16)
+                 if use_patch else taps)
+        scales = (qg.dequant_scales(layer) if is_sink
+                  else qg.requant_scales(layer))
+        use_sse = self.opts.isa is not None and (use_patch or row >= 16)
+        if use_patch or taps >= 16:  # tiny-window branch uses literals
+            bname = self.const_i32(f"b{self.uid()}",
+                                   qg.effective_bias(layer))
+            mname = self.const_array(f"m{self.uid()}", scales)
+
+        def requant_one(oidx: str) -> None:
+            w(f"t = (float)acc * {mname}[k];")
+            self._act_float(act, layer.alpha)
+            if is_sink:
+                w(f"out[{oidx}] = t;")
+            else:
+                self._round_clamp(qg.out_qp(layer).zero_point,
+                                  f"{dst}[{oidx}]")
+
+        if use_patch:
+            # im2row the window into a stack-local int16 patch (C89
+            # constant size, reentrant), zero-padded to a 16-multiple;
+            # weights are the same int8 codes pre-widened to int16, so
+            # the per-channel loop is pure _mm_madd_epi16 — the widened
+            # layout changes nothing numerically (int sums are exact)
+            wname = self.const_i16(
+                f"w{self.uid()}", np.pad(wt, ((0, 0), (0, wtaps - taps))))
+            w.open("")
+            w(f"short patch[{wtaps}];")
+            if wtaps > taps:  # the constant zero tail, filled once
+                w(_cfor("z", wtaps - taps, f"patch[{taps} + z] = 0;"))
+            self.floop("i", oh)
+            self.floop("j", ow)
+            self.floop("n", kh)
+            w(_cfor("z", row,
+                    f"patch[n * {row} + z] = "
+                    f"{src}[((i * {sh} + n) * {wdt} + j * {sw}) "
+                    f"* {ci} + z];"))
+            self.fclose()
+            # vector plumbing: 256-bit integer madd on AVX2 (16 int16
+            # MACs/op), 128-bit SSE2 otherwise
+            wide = self.opts.simd == "avx"
+            vstep = vstep16
+            vreg = "__m256i" if wide else "__m128i"
+            pfx = "_mm256" if wide else "_mm"
+            cast = "(const __m256i *)" if wide else "(const __m128i *)"
+            ld = (f"{pfx}_loadu_si256" if wide else f"{pfx}_loadu_si128")
+            zero = (f"{pfx}_setzero_si256()" if wide
+                    else f"{pfx}_setzero_si128()")
+            groups = wtaps // vstep
+            cache_regs = groups <= 10  # window fits the vector file
+            if cache_regs:
+                # hoist the widened window into registers once per
+                # output position — per channel only the weight loads
+                # and madds remain (straight-line, no loop control)
+                w.open("")
+                for gi in range(groups):
+                    w(f"const {vreg} x{gi} = {ld}("
+                      f"{cast}(patch + {gi * vstep}));")
+            self.floop("k", co)
+            w.open("")
+            w(f"int acc = {bname}[k];")
+            w("float t;" if is_sink else self._REQ_DECLS)
+            w(f"{vreg} v0 = {zero};")
+            w(f"{vreg} v1 = {zero};")
+            w(f"const short *wr = {wname} + k * {wtaps};")
+            if cache_regs:
+                for gi in range(groups):
+                    acc_reg = f"v{gi % 2}"
+                    w(f"{acc_reg} = {pfx}_add_epi32({acc_reg}, "
+                      f"{pfx}_madd_epi16(x{gi}, {ld}("
+                      f"{cast}(wr + {gi * vstep}))));")
+            else:
+                w.open("")
+                w("int z;")
+                w.open(f"for (z = 0; z < {wtaps}; z += {2 * vstep})")
+                w(f"v0 = {pfx}_add_epi32(v0, {pfx}_madd_epi16(")
+                w(f"    {ld}({cast}(patch + z)),")
+                w(f"    {ld}({cast}(wr + z))));")
+                w(f"v1 = {pfx}_add_epi32(v1, {pfx}_madd_epi16(")
+                w(f"    {ld}({cast}(patch + z + {vstep})),")
+                w(f"    {ld}({cast}(wr + z + {vstep}))));")
+                w.close()
+                w.close()
+            w(f"v0 = {pfx}_add_epi32(v0, v1);")
+            if wide:
+                w("{ __m128i s = _mm_add_epi32("
+                  "_mm256_castsi256_si128(v0), "
+                  "_mm256_extracti128_si256(v0, 1));")
+                w("s = _mm_add_epi32(s, _mm_srli_si128(s, 8));")
+                w("s = _mm_add_epi32(s, _mm_srli_si128(s, 4));")
+                w("acc += _mm_cvtsi128_si32(s); }")
+            else:
+                w("v0 = _mm_add_epi32(v0, _mm_srli_si128(v0, 8));")
+                w("v0 = _mm_add_epi32(v0, _mm_srli_si128(v0, 4));")
+                w("acc += _mm_cvtsi128_si32(v0);")
+            requant_one(f"(i * {ow} + j) * {co} + k")
+            w.close()
+            self.fclose()
+            if cache_regs:
+                w.close()
+            self.fclose(2)
+            w.close()
+        elif taps < 16:
+            # tiny window (e.g. first conv on a 1-channel image):
+            # straight-line taps with the int8 weight codes as literals
+            # (P3) — no const arrays, no inner loop overhead
+            bias_eff = qg.effective_bias(layer)
+            self.floop("i", oh)
+            self.floop("j", ow)
+            for k in range(co):
+                w.open("")
+                w(f"int acc = {int(bias_eff[k])};")
+                w("float t;" if is_sink else self._REQ_DECLS)
+                for n in range(kh):
+                    for m in range(kw_):
+                        for o in range(ci):
+                            c_w = int(wt[k, (n * kw_ + m) * ci + o])
+                            if c_w == 0:
+                                continue
+                            w(f"acc += {c_w} * {src}[((i * {sh} + {n}) * "
+                              f"{wdt} + (j * {sw} + {m})) * {ci} + {o}];")
+                w(f"t = (float)acc * {_flit(scales[k])};")
+                self._act_float(act, layer.alpha)
+                if is_sink:
+                    w(f"out[(i * {ow} + j) * {co} + {k}] = t;")
+                else:
+                    self._round_clamp(
+                        qg.out_qp(layer).zero_point,
+                        f"{dst}[(i * {ow} + j) * {co} + {k}]")
+                w.close()
+            self.fclose(2)
+        else:
+            wname = self.const_i8(f"w{self.uid()}", wt)
+            self.floop("i", oh)
+            self.floop("j", ow)
+            self.floop("k", co)
+            w.open("")
+            w(f"int acc = {bname}[k];")
+            w("float t;" if is_sink else self._REQ_DECLS)
+            if use_sse:
+                w("__m128i vacc = _mm_setzero_si128();")
+            self.floop("n", kh)
+            self._dot_inner(src, wname, row, use_sse,
+                            f"((i * {sh} + n) * {wdt} + j * {sw}) * {ci}",
+                            f"k * {taps} + n * {row}")
+            self.fclose()
+            if use_sse:
+                self._hsum_sse()
+            requant_one(f"(i * {ow} + j) * {co} + k")
+            w.close()
+            self.fclose(3)
+        if is_sink and act == "softmax":
+            self.emit_softmax((oh, ow, co), "out")
+
+    def emit_qdepthwise(self, layer: DepthwiseConv2D, in_shape, src: str,
+                        dst: str, pad_buf: Optional[str],
+                        is_sink: bool) -> None:
+        qg, w = self.qg, self.w
+        oh, ow, co = layer.out_shape(in_shape)
+        sh, sw = layer.strides
+        kh, kw_, ci, mult = layer.kh, layer.kw, layer.c_in, layer.multiplier
+        pads = layer.pad_amounts(in_shape)
+        zp_in = qg.in_qp(layer).zero_point
+        act = layer.activation
+        w(f"/* QDepthwiseConv2D {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} mult={mult} pad={layer.padding} "
+          f"act={act} int8/int32 */")
+        if any(pads):
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy_i8(
+                src, in_shape, pads, pad_buf, str(zp_in))
+        h, wdt, _ = in_shape
+        wname = self.const_i8(f"w{self.uid()}",
+                              qg.weights[layer.name].w_q)  # HWCM layout
+        bname = self.const_i32(f"b{self.uid()}", qg.effective_bias(layer))
+        scales = (qg.dequant_scales(layer) if is_sink
+                  else qg.requant_scales(layer))
+        mname = self.const_array(f"m{self.uid()}", scales)
+        self.floop("i", oh)
+        self.floop("j", ow)
+        self.floop("c", ci)
+        for m_ in range(mult):
+            w.open("")
+            w(f"int acc = {bname}[c * {mult} + {m_}];")
+            w("float t;" if is_sink else self._REQ_DECLS)
+            w(_cfor("n", kh, _cfor(
+                "m", kw_,
+                f"acc += {src}[((i * {sh} + n) * {wdt} + "
+                f"(j * {sw} + m)) * {ci} + c] * "
+                f"{wname}[((n * {kw_} + m) * {ci} + c) * {mult} + {m_}];")))
+            oidx = f"(i * {ow} + j) * {co} + c * {mult} + {m_}"
+            w(f"t = (float)acc * {mname}[c * {mult} + {m_}];")
+            self._act_float(act, layer.alpha)
+            if is_sink:
+                w(f"out[{oidx}] = t;")
+            else:
+                self._round_clamp(qg.out_qp(layer).zero_point,
+                                  f"{dst}[{oidx}]")
+            w.close()
+        self.fclose(3)
+        if is_sink and act == "softmax":
+            self.emit_softmax((oh, ow, co), "out")
+
+    def emit_qdense(self, layer: Dense, in_shape, src: str, dst: str,
+                    is_sink: bool) -> None:
+        qg, w = self.qg, self.w
+        d_in, d_out = layer.weights.shape
+        act = layer.activation
+        w(f"/* QDense {layer.name}: {d_in}->{d_out} int8/int32 */")
+        wname = self.const_i8(f"w{self.uid()}",
+                              qg.weights[layer.name].w_q.T)  # (d_out, d_in)
+        bname = self.const_i32(f"b{self.uid()}", qg.effective_bias(layer))
+        scales = (qg.dequant_scales(layer) if is_sink
+                  else qg.requant_scales(layer))
+        mname = self.const_array(f"m{self.uid()}", scales)
+        use_sse = self.opts.isa is not None and d_in >= 16
+        self.floop("k", d_out)
+        w.open("")
+        w(f"int acc = {bname}[k];")
+        w("float t;" if is_sink else self._REQ_DECLS)
+        if use_sse:
+            w("__m128i vacc = _mm_setzero_si128();")
+        self._dot_inner(src, wname, d_in, use_sse, "0", f"k * {d_in}")
+        if use_sse:
+            self._hsum_sse()
+        w(f"t = (float)acc * {mname}[k];")
+        self._act_float(act, layer.alpha)
+        if is_sink:
+            w("out[k] = t;")
+        else:
+            self._round_clamp(qg.out_qp(layer).zero_point, f"{dst}[k]")
+        w.close()
+        self.fclose()
+        if is_sink and act == "softmax":
+            self.emit_softmax((1, 1, d_out), "out")
+
+    # -- pooling / merge / elementwise ---------------------------------------
+
+    def emit_qmaxpool(self, layer: MaxPool, in_shape, src: str, dst: str,
+                      pad_buf: Optional[str]) -> None:
+        w = self.w
+        oh, ow, co = layer.out_shape(in_shape)
+        kh, kw_ = layer.size
+        sh, sw = layer.strides
+        pads = layer.pad_amounts(in_shape)
+        w(f"/* QMaxPool {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} pad={layer.padding} (pure int8, "
+          f"shared qparams) */")
+        if any(pads):
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy_i8(
+                src, in_shape, pads, pad_buf, "-128")
+        h, wdt, c = in_shape
+
+        def idx(n, m):
+            return (f"((i * {sh} + {n}) * {wdt} + (j * {sw} + {m})) "
+                    f"* {c} + k")
+
+        self.floop("i", oh)
+        self.floop("j", ow)
+        self.floop("k", c)
+        w.open("")
+        w(f"signed char q = {src}[{idx(0, 0)}];")
+        for n in range(kh):
+            for m in range(kw_):
+                if n == 0 and m == 0:
+                    continue
+                w(f"q = {src}[{idx(n, m)}] > q ? {src}[{idx(n, m)}] : q;")
+        w(f"{dst}[(i * {ow} + j) * {co} + k] = q;")
+        w.close()
+        self.fclose(3)
+
+    def emit_qavgpool(self, layer: AvgPool, in_shape, src: str, dst: str,
+                      pad_buf: Optional[str]) -> None:
+        qg, w = self.qg, self.w
+        oh, ow, co = layer.out_shape(in_shape)
+        kh, kw_ = layer.size
+        sh, sw = layer.strides
+        pads = layer.pad_amounts(in_shape)
+        zp_in = qg.in_qp(layer).zero_point
+        minv = qg.pool_scales(layer, in_shape)  # (oh, ow) float32
+        w(f"/* QAvgPool {layer.name}: {in_shape}->{(oh, ow, co)} "
+          f"k={kh}x{kw_} s={sh}x{sw} pad={layer.padding} int8/int32 */")
+        if any(pads):
+            # zp fill: padded taps sum as zp and the fixed kh*kw*zp
+            # correction below cancels them exactly
+            assert pad_buf is not None, f"{layer.name}: unplanned pad scratch"
+            src, in_shape = self.emit_padded_copy_i8(
+                src, in_shape, pads, pad_buf, str(zp_in))
+        h, wdt, c = in_shape
+        if np.unique(minv).size == 1:
+            mexpr = _flit(minv.ravel()[0])
+        else:
+            mname = self.const_array(f"pinv{self.uid()}", minv)
+            mexpr = f"{mname}[i * {ow} + j]"
+        self.floop("i", oh)
+        self.floop("j", ow)
+        self.floop("k", c)
+        w.open("")
+        w("int acc = 0;")
+        w(self._REQ_DECLS)
+        w(_cfor("n", kh, _cfor(
+            "m", kw_,
+            f"acc += {src}[((i * {sh} + n) * {wdt} + "
+            f"(j * {sw} + m)) * {c} + k];")))
+        w(f"t = (float)(acc - {kh * kw_ * zp_in}) * {mexpr};")
+        self._round_clamp(qg.out_qp(layer).zero_point,
+                          f"{dst}[(i * {ow} + j) * {co} + k]")
+        w.close()
+        self.fclose(3)
+
+    def emit_qglobal_avgpool(self, layer: GlobalAvgPool, in_shape,
+                             src: str, dst: str) -> None:
+        qg, w = self.qg, self.w
+        h, wdt, c = in_shape
+        zp_in = qg.in_qp(layer).zero_point
+        minv = qg.pool_scales(layer, in_shape)  # scalar float32
+        w(f"/* QGlobalAvgPool {layer.name}: {in_shape}->(1, 1, {c}) */")
+        self.floop("k", c)
+        w.open("")
+        w("int acc = 0;")
+        w(self._REQ_DECLS)
+        w(_cfor("p", h * wdt, f"acc += {src}[p * {c} + k];"))
+        w(f"t = (float)(acc - {h * wdt * zp_in}) * {_flit(minv)};")
+        self._round_clamp(qg.out_qp(layer).zero_point, f"{dst}[k]")
+        w.close()
+        self.fclose()
+
+    def emit_qadd(self, layer: Add, shape, srcs: List[str],
+                  dst: str) -> None:
+        qg, w = self.qg, self.w
+        n = int(np.prod(shape))
+        act = layer.activation
+        w(f"/* QAdd {layer.name}: {len(srcs)} inputs, {shape}, "
+          f"act={act} */")
+        self.floop("z", n)
+        w.open("")
+        w(self._REQ_DECLS)
+        for i, s in enumerate(srcs):
+            op = "=" if i == 0 else "+="
+            qp = qg.in_qp(layer, i)
+            w(f"t {op} (float)({s}[z] - {qp.zero_point}) * "
+              f"{_flit(qg.rescale(layer, i))};")
+        self._act_float(act, layer.alpha)
+        self._round_clamp(qg.out_qp(layer).zero_point, f"{dst}[z]")
+        w.close()
+        self.fclose()
+
+    def emit_qconcat(self, layer: Concat, in_shapes, srcs: List[str],
+                     dst: str) -> None:
+        qg, w = self.qg, self.w
+        h, wdt, _ = in_shapes[0]
+        co = int(sum(s[2] for s in in_shapes))
+        zp_out = qg.out_qp(layer).zero_point
+        w(f"/* QConcat {layer.name}: {[tuple(s) for s in in_shapes]} -> "
+          f"({h}, {wdt}, {co}) (per-input requant) */")
+        self.floop("p", h * wdt)
+        off = 0
+        for i, (s, ish) in enumerate(zip(srcs, in_shapes)):
+            ck = int(ish[2])
+            qp = qg.in_qp(layer, i)
+            # the multiply and the +0.5f stay separate statements: in
+            # one expression an FP_CONTRACT-honoring compiler could
+            # fuse them into an FMA (single rounding) and break the
+            # bit-exact contract with the jax reference
+            w(_cfor(
+                "z", ck,
+                f"{{ float t; float u; int q; "
+                f"t = (float)({s}[p * {ck} + z] - {qp.zero_point}) * "
+                f"{_flit(qg.rescale(layer, i))}; "
+                f"u = t + 0.5f; "
+                f"q = (int)u; "
+                f"q = (q - ((float)q > u)) + {zp_out}; "
+                f"{dst}[p * {co} + {off} + z] = (signed char)"
+                f"(q < -128 ? -128 : (q > 127 ? 127 : q)); }}"))
+            off += ck
+        self.fclose()
+
+    def emit_qrelu(self, layer, in_shape, src: str, dst: str,
+                   act: str, alpha: float) -> None:
+        qg, w = self.qg, self.w
+        n = int(np.prod(in_shape))
+        qp = qg.in_qp(layer)
+        w(f"/* Q{type(layer).__name__} {layer.name}: {in_shape} */")
+        self.floop("z", n)
+        w.open("")
+        w(self._REQ_DECLS)
+        w(f"t = (float)({src}[z] - {qp.zero_point}) * "
+          f"{_flit(qg.rescale(layer))};")
+        self._act_float(act, alpha)
+        self._round_clamp(qg.out_qp(layer).zero_point, f"{dst}[z]")
+        w.close()
+        self.fclose()
+
+    def emit_qsoftmax_sink(self, layer: Softmax, in_shape,
+                           src: str) -> None:
+        qg, w = self.qg, self.w
+        n = int(np.prod(in_shape))
+        qp = qg.in_qp(layer)
+        w(f"/* QSoftmax {layer.name} (sink): dequantize + float "
+          f"softmax */")
+        w(_cfor("z", n,
+                f"out[z] = (float)({src}[z] - {qp.zero_point}) * "
+                f"{_flit(np.float32(qp.scale))};"))
+        self.emit_softmax(in_shape, "out")
+
+    # -- driver ---------------------------------------------------------------
+
+    def generate(self) -> str:
+        g, opts, w = self.g, self.opts, self.w
+        smap = g.shape_map()
+        plan = self.plan = plan_arena(g, opts, quantized=True)
+        val = _value_map(g, quantized=True)
+        sink = g.sink
+        out_value = val[sink.name]
+        assert out_value != "xq", "degenerate identity graph"
+
+        def ref(v: str) -> str:
+            return "out" if v == out_value else _cname(v)
+
+        w.open(f"void {opts.ws_func_name}(const float *NNCG_RESTRICT x, "
+               f"float *NNCG_RESTRICT out, "
+               f"signed char *NNCG_RESTRICT ws)")
+        for iv in sorted(plan.intervals, key=lambda iv: (iv.offset, iv.value)):
+            w(f"signed char *const {_cname(iv.value)} = ws + {iv.offset}; "
+              f"/* {iv.size} bytes, live layers [{iv.start}, {iv.end}] */")
+        if not plan.intervals:
+            w("(void) ws;")
+
+        # input quantization: float x -> int8 codes
+        in_qp = self.qg.input_qp
+        w(f"/* quantize input: q = floor(x * {in_qp.inv_scale} + 0.5) "
+          f"+ {in_qp.zero_point} */")
+        self.floop("z", int(np.prod(g.input_shape)))
+        w.open("")
+        w(self._REQ_DECLS)
+        w(f"t = x[z] * {_flit(in_qp.inv_scale)};")
+        self._round_clamp(in_qp.zero_point, f"{_cname('xq')}[z]")
+        w.close()
+        self.fclose()
+
+        for layer in g.layers:
+            if isinstance(layer, IDENTITY_LAYERS):
+                continue
+            ishs = [smap[n] for n in layer.inputs]
+            srcs = [ref(val[n]) for n in layer.inputs]
+            v = val[layer.name]
+            is_sink = layer is sink
+            dst = "out" if v == out_value else _cname(v)
+            pad_buf = (_cname(layer.name + "__pad")
+                       if layer.name + "__pad" in plan.offsets else None)
+            if isinstance(layer, Conv2D):
+                self.emit_qconv(layer, ishs[0], srcs[0], dst, pad_buf,
+                                is_sink)
+            elif isinstance(layer, DepthwiseConv2D):
+                self.emit_qdepthwise(layer, ishs[0], srcs[0], dst,
+                                     pad_buf, is_sink)
+            elif isinstance(layer, Dense):
+                self.emit_qdense(layer, ishs[0], srcs[0], dst, is_sink)
+            elif isinstance(layer, MaxPool):
+                self.emit_qmaxpool(layer, ishs[0], srcs[0], dst, pad_buf)
+            elif isinstance(layer, AvgPool):
+                self.emit_qavgpool(layer, ishs[0], srcs[0], dst, pad_buf)
+            elif isinstance(layer, GlobalAvgPool):
+                self.emit_qglobal_avgpool(layer, ishs[0], srcs[0], dst)
+            elif isinstance(layer, Add):
+                self.emit_qadd(layer, smap[layer.name], srcs, dst)
+            elif isinstance(layer, Concat):
+                self.emit_qconcat(layer, ishs, srcs, dst)
+            elif isinstance(layer, ReLU):
+                self.emit_qrelu(layer, ishs[0], srcs[0], dst, "relu", 0.0)
+            elif isinstance(layer, LeakyReLU):
+                self.emit_qrelu(layer, ishs[0], srcs[0], dst, "leaky_relu",
+                                layer.alpha)
+            elif isinstance(layer, Softmax):
+                assert is_sink, "standalone Softmax only supported as sink"
+                self.emit_qsoftmax_sink(layer, ishs[0], srcs[0])
+            else:
+                raise TypeError(
+                    f"quantized cgen: unhandled layer "
+                    f"{type(layer).__name__} "
+                    f"(run passes.optimize before quantizing)")
+        w.close()
+
+        arena = f"{opts.func_name}_arena"
+        self.decls(f"static signed char {arena}"
+                   f"[{max(plan.total_floats, 1)}];")
+        w("")
+        w.open(f"void {opts.func_name}(const float *NNCG_RESTRICT x, "
+               f"float *NNCG_RESTRICT out)")
+        w(f"{opts.ws_func_name}(x, out, {arena});")
+        w.close()
+        w("")
+        w.open(f"long {opts.ws_bytes_func_name}(void)")
+        w(f"return {plan.total_bytes}L;")
+        w.close()
+
+        if opts.emit_batch:
+            in_n = int(np.prod(g.input_shape))
+            out_n = int(np.prod(smap[sink.name]))
+            w("")
+            w.open(f"void {opts.batch_func_name}("
+                   f"const float *NNCG_RESTRICT x, "
+                   f"float *NNCG_RESTRICT out, int n)")
+            w("int b;")
+            w(f"for (b = 0; b < n; ++b) "
+              f"{opts.func_name}(x + (long)b * {in_n}, "
+              f"out + (long)b * {out_n});")
+            w.close()
+
+        hdr = _W()
+        hdr("/* Generated by NNCG-JAX (repro of Urbann et al., 2020) — "
+            "int8 PTQ build.")
+        hdr(f" * net: in {g.input_shape} -> out {smap[sink.name]}, "
+            f"{g.param_count()} params, simd={opts.simd},")
+        hdr(f" * int8 arena {plan.total_bytes} B "
+            f"(float32 intermediates would be ~4x) */")
+        hdr("#include <math.h>")
+        if opts.isa is not None:
+            hdr(f"#include <{opts.isa.header}>")
+        hdr("#if defined(__STDC_VERSION__) && __STDC_VERSION__ >= 199901L")
+        hdr("#define NNCG_RESTRICT restrict")
+        hdr("#else")
+        hdr("#define NNCG_RESTRICT")
+        hdr("extern float expf(float);")
+        hdr("#endif")
+        hdr("")
+        return hdr.text() + self.decls.text() + "\n" + self.w.text()
+
+
+def generate_quantized_c(qgraph,
+                         opts: Optional[CodegenOptions] = None) -> str:
+    """Generate the single ANSI C file for a calibrated int8 net."""
+    return QuantCGenerator(qgraph, opts or CodegenOptions()).generate()

@@ -229,38 +229,62 @@ class Dense(Layer):
         return int(self.weights.size + self.bias.size)
 
 
+def pool_window_counts(in_shape: Shape3, size, strides, pads) -> np.ndarray:
+    """Per-output-window count of *valid* (non-padding) taps, shape
+    ``(oh, ow)``.  Factorizes as rows(i) * cols(j); edge windows of a
+    ``same``-padded pool cover fewer valid elements, so AvgPool must
+    divide by this, not by the fixed ``kh*kw``."""
+    h, w, _ = in_shape
+    kh, kw = size
+    sh, sw = strides
+    pt, pb, pl, pr = pads
+    oh = (h + pt + pb - kh) // sh + 1
+    ow = (w + pl + pr - kw) // sw + 1
+    rows = np.array([min(i * sh - pt + kh, h) - max(i * sh - pt, 0)
+                     for i in range(oh)], dtype=np.int64)
+    cols = np.array([min(j * sw - pl + kw, w) - max(j * sw - pl, 0)
+                     for j in range(ow)], dtype=np.int64)
+    return rows[:, None] * cols[None, :]
+
+
 @dataclass
-class MaxPool(Layer):
+class _Pool(Layer):
+    """Shared window semantics for spatial pooling.
+
+    ``padding='same'`` uses the conv padding arithmetic (paper Eq. 1);
+    padded taps never contribute to the result — MaxPool ignores them,
+    AvgPool divides by the per-window count of *valid* elements."""
+
     size: Tuple[int, int] = (2, 2)
     strides: Optional[Tuple[int, int]] = None  # default = size
+    padding: str = "valid"  # 'same' | 'valid'
 
     def __post_init__(self):
         self.size = _pair(self.size)
         self.strides = _pair(self.strides) if self.strides is not None else self.size
+        assert self.padding in ("same", "valid")
+
+    def pad_amounts(self, in_shape: Shape3) -> Tuple[int, int, int, int]:
+        return _conv_pads(in_shape, self.size[0], self.size[1],
+                          self.strides, self.padding)
 
     def out_shape(self, in_shape: Shape3) -> Shape3:
         h, w, c = in_shape
         kh, kw = self.size
         sh, sw = self.strides
-        return ((h - kh) // sh + 1, (w - kw) // sw + 1, c)
+        pt, pb, pl, pr = self.pad_amounts(in_shape)
+        return ((h + pt + pb - kh) // sh + 1,
+                (w + pl + pr - kw) // sw + 1, c)
 
 
 @dataclass
-class AvgPool(Layer):
-    """Average pooling (VALID), same window semantics as :class:`MaxPool`."""
+class MaxPool(_Pool):
+    pass
 
-    size: Tuple[int, int] = (2, 2)
-    strides: Optional[Tuple[int, int]] = None
 
-    def __post_init__(self):
-        self.size = _pair(self.size)
-        self.strides = _pair(self.strides) if self.strides is not None else self.size
-
-    def out_shape(self, in_shape: Shape3) -> Shape3:
-        h, w, c = in_shape
-        kh, kw = self.size
-        sh, sw = self.strides
-        return ((h - kh) // sh + 1, (w - kw) // sw + 1, c)
+@dataclass
+class AvgPool(_Pool):
+    """Average pooling, same window semantics as :class:`MaxPool`."""
 
 
 @dataclass

@@ -38,6 +38,7 @@ from .graph import (
     MaxPool,
     ReLU,
     Softmax,
+    pool_window_counts,
 )
 
 _DIMS = ("NHWC", "HWIO", "NHWC")
@@ -56,14 +57,16 @@ def _activation(x: jnp.ndarray, kind: Optional[str], alpha: float) -> jnp.ndarra
     raise ValueError(f"unknown activation {kind!r}")
 
 
-def _pool(x: jnp.ndarray, size, strides, op, init) -> jnp.ndarray:
+def _pool(x: jnp.ndarray, size, strides, op, init,
+          pads=(0, 0, 0, 0)) -> jnp.ndarray:
     kh, kw = size
     sh, sw = strides
+    pt, pb, pl, pr = pads
     return jax.lax.reduce_window(
         x, init, op,
         window_dimensions=(1, kh, kw, 1),
         window_strides=(1, sh, sw, 1),
-        padding="VALID",
+        padding=((0, 0), (pt, pb), (pl, pr), (0, 0)),
     )
 
 
@@ -99,10 +102,15 @@ def _apply(layer, ins: Sequence[jnp.ndarray]) -> jnp.ndarray:
         y = _activation(y, layer.activation, layer.alpha)
         return y.reshape(y.shape[0], 1, 1, -1)
     if isinstance(layer, MaxPool):
-        return _pool(x, layer.size, layer.strides, jax.lax.max, -jnp.inf)
+        pads = layer.pad_amounts(x.shape[1:])
+        return _pool(x, layer.size, layer.strides, jax.lax.max, -jnp.inf,
+                     pads)
     if isinstance(layer, AvgPool):
-        s = _pool(x, layer.size, layer.strides, jax.lax.add, 0.0)
-        return s / float(layer.size[0] * layer.size[1])
+        pads = layer.pad_amounts(x.shape[1:])
+        s = _pool(x, layer.size, layer.strides, jax.lax.add, 0.0, pads)
+        counts = pool_window_counts(x.shape[1:], layer.size, layer.strides,
+                                    pads)
+        return s / jnp.asarray(counts[None, :, :, None], jnp.float32)
     if isinstance(layer, GlobalAvgPool):
         return jnp.mean(x, axis=(1, 2), keepdims=True)
     if isinstance(layer, Add):
@@ -190,7 +198,7 @@ def forward_pallas(graph: CNNGraph, x: jnp.ndarray) -> jnp.ndarray:
                            alpha=layer.alpha)
             if layer.activation == "softmax":
                 y = jax.nn.softmax(y, axis=-1)
-        elif isinstance(layer, MaxPool):
+        elif isinstance(layer, MaxPool) and layer.padding == "valid":
             y = ops.maxpool2d(xi, size=layer.size, strides=layer.strides)
         elif isinstance(layer, (Dropout, BatchNorm, Dense, Flatten)):
             raise NotImplementedError(
@@ -199,6 +207,166 @@ def forward_pallas(graph: CNNGraph, x: jnp.ndarray) -> jnp.ndarray:
             y = _apply(layer, ins)
         vals[layer.name] = y
     return vals[graph.sink.name]
+
+
+def forward_quantized(qg, x: jnp.ndarray) -> jnp.ndarray:
+    """Int8 reference forward — bit-faithful to the generated C.
+
+    Every intermediate tensor is an int8 code (held as int32 here; the
+    values are clipped to [-128, 127]), accumulation is exact int32,
+    and requantization is ``floor(float32(acc) * M + 0.5) + zp`` — the
+    identical IEEE-754 single-precision op sequence the C emits, so the
+    integer path agrees with the compiled net *exactly*, not just
+    within tolerance.  Input is float32 NHWC; output is the dequantized
+    float32 result (softmax, when fused on the sink, runs in float).
+
+    ``qg`` is a :class:`repro.core.quantize.QuantizedGraph`.
+    """
+    g = qg.graph
+    assert x.ndim == 4, "expected NHWC batch"
+    sink = g.sink
+    smap = g.shape_map()
+    half = jnp.float32(0.5)
+
+    def affine_out(layer, acc, is_sink: bool):
+        """Requantize an int32 accumulator of a weighted layer (or
+        dequantize it, on the sink) — float32 multiplier path."""
+        act = layer.activation
+        if is_sink:
+            t = acc.astype(jnp.float32) * jnp.asarray(
+                qg.dequant_scales(layer))
+            if act == "relu":
+                t = jnp.where(t > 0, t, jnp.float32(0.0))
+            elif act == "leaky_relu":
+                t = jnp.where(t > 0, t, jnp.float32(layer.alpha) * t)
+            elif act == "softmax":
+                t = jax.nn.softmax(t, axis=-1)
+            return t
+        t = acc.astype(jnp.float32) * jnp.asarray(qg.requant_scales(layer))
+        if act == "relu":
+            t = jnp.where(t > 0, t, jnp.float32(0.0))
+        elif act == "leaky_relu":
+            t = jnp.where(t > 0, t, jnp.float32(layer.alpha) * t)
+        q = jnp.floor(t + half).astype(jnp.int32) \
+            + qg.out_qp(layer).zero_point
+        return jnp.clip(q, -128, 127)
+
+    def requant_codes(layer, t):
+        """float32 value (already in s_out units) -> int8 codes."""
+        q = jnp.floor(t + half).astype(jnp.int32) \
+            + qg.out_qp(layer).zero_point
+        return jnp.clip(q, -128, 127)
+
+    vals: Dict[str, jnp.ndarray] = {}
+    for layer in g.layers:
+        name = layer.name
+        is_sink = layer is sink
+        if isinstance(layer, Input):
+            qp = qg.acts[name]
+            t = x.astype(jnp.float32) * qp.inv_scale
+            q = jnp.floor(t + half).astype(jnp.int32) + qp.zero_point
+            vals[name] = jnp.clip(q, -128, 127)
+            continue
+        ins = [vals[n] for n in layer.inputs]
+        qi = ins[0]
+        in_shape = smap[layer.inputs[0]]
+        if isinstance(layer, (Conv2D, DepthwiseConv2D)):
+            lq = qg.weights[name]
+            zp_in = qg.in_qp(layer).zero_point
+            pt, pb, pl, pr = layer.pad_amounts(in_shape)
+            xin = qi - zp_in  # zero-padded by conv == C's zp-code fill
+            wq = jnp.asarray(lq.w_q, jnp.int32)
+            if isinstance(layer, DepthwiseConv2D):
+                wq = wq.reshape(layer.kh, layer.kw, 1, layer.c_out)
+                acc = jax.lax.conv_general_dilated(
+                    xin, wq, layer.strides, ((pt, pb), (pl, pr)),
+                    dimension_numbers=_DIMS,
+                    feature_group_count=layer.c_in)
+            else:
+                acc = jax.lax.conv_general_dilated(
+                    xin, wq, layer.strides, ((pt, pb), (pl, pr)),
+                    dimension_numbers=_DIMS)
+            acc = acc + jnp.asarray(lq.b_q, jnp.int32)
+            vals[name] = affine_out(layer, acc, is_sink)
+        elif isinstance(layer, Dense):
+            lq = qg.weights[name]
+            zp_in = qg.in_qp(layer).zero_point
+            flat = (qi - zp_in).reshape(qi.shape[0], -1)
+            acc = flat @ jnp.asarray(lq.w_q, jnp.int32) \
+                + jnp.asarray(lq.b_q, jnp.int32)
+            vals[name] = affine_out(
+                layer, acc.reshape(acc.shape[0], 1, 1, -1), is_sink)
+        elif isinstance(layer, MaxPool):
+            # same qparams in/out (forced at calibration): pure int8 max;
+            # the -128 init/pad value never wins (>=1 valid tap/window)
+            pads = layer.pad_amounts(in_shape)
+            vals[name] = _pool(qi, layer.size, layer.strides, jax.lax.max,
+                               jnp.int32(-128), pads)
+        elif isinstance(layer, AvgPool):
+            zp_in = qg.in_qp(layer).zero_point
+            pads = layer.pad_amounts(in_shape)
+            acc = _pool(qi - zp_in, layer.size, layer.strides, jax.lax.add,
+                        jnp.int32(0), pads)
+            minv = qg.pool_scales(layer, in_shape)  # (oh, ow) float32
+            t = acc.astype(jnp.float32) * jnp.asarray(minv)[None, :, :, None]
+            vals[name] = requant_codes(layer, t)
+        elif isinstance(layer, GlobalAvgPool):
+            zp_in = qg.in_qp(layer).zero_point
+            acc = jnp.sum(qi - zp_in, axis=(1, 2), keepdims=True,
+                          dtype=jnp.int32)
+            t = acc.astype(jnp.float32) * qg.pool_scales(layer, in_shape)
+            vals[name] = requant_codes(layer, t)
+        elif isinstance(layer, Add):
+            t = (ins[0] - qg.in_qp(layer, 0).zero_point).astype(
+                jnp.float32) * qg.rescale(layer, 0)
+            for i in range(1, len(ins)):
+                t = t + (ins[i] - qg.in_qp(layer, i).zero_point).astype(
+                    jnp.float32) * qg.rescale(layer, i)
+            if layer.activation == "relu":
+                t = jnp.where(t > 0, t, jnp.float32(0.0))
+            elif layer.activation == "leaky_relu":
+                t = jnp.where(t > 0, t, jnp.float32(layer.alpha) * t)
+            vals[name] = requant_codes(layer, t)
+        elif isinstance(layer, Concat):
+            parts = []
+            for i, q in enumerate(ins):
+                t = (q - qg.in_qp(layer, i).zero_point).astype(
+                    jnp.float32) * qg.rescale(layer, i)
+                parts.append(requant_codes(layer, t))
+            vals[name] = jnp.concatenate(parts, axis=-1)
+        elif isinstance(layer, ReLU):
+            t = (qi - qg.in_qp(layer).zero_point).astype(
+                jnp.float32) * qg.rescale(layer)
+            t = jnp.where(t > 0, t, jnp.float32(0.0))
+            vals[name] = requant_codes(layer, t)
+        elif isinstance(layer, LeakyReLU):
+            t = (qi - qg.in_qp(layer).zero_point).astype(
+                jnp.float32) * qg.rescale(layer)
+            t = jnp.where(t > 0, t, jnp.float32(layer.alpha) * t)
+            vals[name] = requant_codes(layer, t)
+        elif isinstance(layer, Softmax):
+            assert is_sink, "standalone Softmax only supported as sink"
+            qp = qg.in_qp(layer)
+            deq = (qi - qp.zero_point).astype(jnp.float32) \
+                * jnp.float32(qp.scale)
+            vals[name] = jax.nn.softmax(deq, axis=-1)
+        elif isinstance(layer, (Dropout, Flatten)):
+            vals[name] = qi if isinstance(layer, Dropout) \
+                else qi.reshape(qi.shape[0], 1, 1, -1)
+        else:
+            raise TypeError(
+                f"forward_quantized: unhandled layer {type(layer).__name__}")
+    return vals[sink.name]
+
+
+def make_jit_forward_quantized(qg):
+    """XLA-compiled int8 reference (the quantized parity oracle)."""
+
+    @jax.jit
+    def f(x):
+        return forward_quantized(qg, x)
+
+    return f
 
 
 def extract_params(graph: CNNGraph) -> dict:

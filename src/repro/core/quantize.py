@@ -1,0 +1,311 @@
+"""Post-training int8 quantization (calibration + qparam annotation).
+
+The paper's design principles all exploit full knowledge of the trained
+net at generation time; this module extends that to the *value ranges*:
+a calibration pass runs sample inputs through the float oracle
+(:func:`repro.core.jax_exec.forward`), records per-tensor activation
+ranges, and derives:
+
+* **activations** — per-tensor *asymmetric* int8 ``(scale, zero_point)``
+  over the observed post-activation range (zero always exactly
+  representable, so ReLU clamps and zero padding stay exact);
+* **conv / depthwise / dense weights** — *per-output-channel symmetric*
+  int8 scales (no zero point), the standard PTQ recipe;
+* **biases** — int32 at scale ``s_in * s_w[k]``.
+
+The quantized execution scheme (shared bit-for-bit by the generated C
+and the :func:`repro.core.jax_exec.forward_quantized` reference):
+
+* int8 storage for every intermediate tensor, int32 accumulation;
+* requantization by a float32 multiplier ``M[k] = s_in*s_w[k]/s_out``
+  applied as ``floor(acc * M + 0.5)`` (round-half-up) — float32
+  multiply/add/floor are deterministic IEEE-754 ops, so the C build and
+  the XLA reference agree *exactly* on the integer path;
+* fused ReLU / LeakyReLU applied to the float requant value (both are
+  positively-homogeneous, so they commute with the output scale);
+* the sink layer dequantizes its int32 accumulator straight to float
+  (softmax, when present, runs in float32) — the public API stays
+  float-in / float-out.
+
+Every scale used anywhere is computed **here** and cast to float32
+once, so the code generator (which prints it via ``_flit``, a bit-exact
+round-trip) and the jax reference (which closes over the same array)
+can never disagree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from .graph import (
+    BatchNorm,
+    CNNGraph,
+    Conv2D,
+    Dense,
+    DepthwiseConv2D,
+    Dropout,
+    Flatten,
+    GlobalAvgPool,
+    Input,
+    MaxPool,
+    Softmax,
+    pool_window_counts,
+)
+
+QMIN, QMAX = -128, 127
+
+# layers whose int8 output reuses the producer's qparams unchanged:
+# identity layers alias the buffer; MaxPool commutes with any monotone
+# quantization, so sharing qparams makes it a pure int8 max (no requant)
+_SHARE_INPUT_QPARAMS = (Dropout, Flatten, MaxPool)
+
+# weighted layers that get per-output-channel symmetric weight scales
+_WEIGHTED = (Conv2D, DepthwiseConv2D, Dense)
+
+
+@dataclass(frozen=True)
+class QParams:
+    """Asymmetric per-tensor int8 affine quantization:
+    ``real = scale * (q - zero_point)``."""
+
+    scale: float  # stored as the exact float32 value
+    zero_point: int
+
+    @property
+    def inv_scale(self) -> np.float32:
+        """The float32 multiplier the input-quantization step uses —
+        computed once here so C literal and jax constant agree."""
+        return np.float32(1.0 / float(self.scale))
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        """Reference quantizer: float -> int8 codes (round half up) —
+        the same ``floor(x*inv + 0.5) + zp`` the C and jax paths use."""
+        t = np.asarray(x, np.float32) * self.inv_scale
+        q = np.floor(t + np.float32(0.5)).astype(np.int64) + self.zero_point
+        return np.clip(q, QMIN, QMAX).astype(np.int8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return ((np.asarray(q, np.int32) - self.zero_point)
+                * np.float32(self.scale)).astype(np.float32)
+
+
+def qparams_from_range(mn: float, mx: float) -> QParams:
+    """Derive (scale, zero_point) from an observed float range.
+
+    The range is widened to include zero so that 0.0 is exactly
+    representable (``q == zero_point``) — required for exact ReLU
+    clamps and for padding int8 feature maps with the zero code."""
+    mn = min(float(mn), 0.0)
+    mx = max(float(mx), 0.0)
+    scale = (mx - mn) / float(QMAX - QMIN)
+    if scale == 0.0:  # constant-zero tensor
+        scale = 1.0
+    scale = float(np.float32(scale))
+    zp = int(np.clip(round(QMIN - mn / scale), QMIN, QMAX))
+    return QParams(scale=scale, zero_point=zp)
+
+
+@dataclass
+class LayerQuant:
+    """Quantized parameters of one weighted layer (weights keep their
+    graph layout: HWIO / HWCM / ``(d_in, d_out)``)."""
+
+    w_scale: np.ndarray  # (c_out,) float32, symmetric per-channel
+    w_q: np.ndarray      # int8
+    b_q: np.ndarray      # int32 at scale s_in * s_w[k]
+
+
+@dataclass
+class QuantizedGraph:
+    """A trained graph annotated with calibration-derived qparams."""
+
+    graph: CNNGraph
+    acts: Dict[str, QParams]          # layer name -> output qparams
+    weights: Dict[str, LayerQuant] = field(default_factory=dict)
+
+    # -- qparam lookups ------------------------------------------------------
+
+    def out_qp(self, layer) -> QParams:
+        return self.acts[layer.name]
+
+    def in_qp(self, layer, idx: int = 0) -> QParams:
+        return self.acts[layer.inputs[idx]]
+
+    @property
+    def input_qp(self) -> QParams:
+        return self.acts[self.graph.layers[0].name]
+
+    # -- derived constants (single source for cgen AND the jax ref) ----------
+
+    def requant_scales(self, layer) -> np.ndarray:
+        """(c_out,) float32: ``s_in * s_w[k] / s_out``."""
+        lq = self.weights[layer.name]
+        s_in = float(self.in_qp(layer).scale)
+        s_out = float(self.out_qp(layer).scale)
+        return np.float32(s_in * lq.w_scale.astype(np.float64) / s_out)
+
+    def dequant_scales(self, layer) -> np.ndarray:
+        """(c_out,) float32: ``s_in * s_w[k]`` — sink dequantization."""
+        lq = self.weights[layer.name]
+        s_in = float(self.in_qp(layer).scale)
+        return np.float32(s_in * lq.w_scale.astype(np.float64))
+
+    def rescale(self, layer, idx: int = 0) -> np.float32:
+        """float32 ``s_in_idx / s_out`` for Add/Concat/ReLU requant."""
+        return np.float32(float(self.in_qp(layer, idx).scale)
+                          / float(self.out_qp(layer).scale))
+
+    def pool_scales(self, layer, in_shape) -> np.ndarray:
+        """AvgPool/GlobalAvgPool requant multipliers.
+
+        AvgPool: ``(oh, ow)`` float32 ``s_in / (s_out * count[i,j])``
+        with the edge-correct per-window valid-tap count.
+        GlobalAvgPool: scalar float32 ``s_in / (s_out * h*w)``."""
+        s_in = float(self.in_qp(layer).scale)
+        s_out = float(self.out_qp(layer).scale)
+        if isinstance(layer, GlobalAvgPool):
+            return np.float32(s_in / (s_out * in_shape[0] * in_shape[1]))
+        counts = pool_window_counts(in_shape, layer.size, layer.strides,
+                                    layer.pad_amounts(in_shape))
+        return np.float32(s_in / (s_out * counts.astype(np.float64)))
+
+    def effective_bias(self, layer) -> np.ndarray:
+        """(c_out,) int32: bias with the input zero-point correction
+        folded in (``b_q[k] - zp_in * sum_taps w_q[...,k]``), so the C
+        inner loop is a plain raw-code dot product — padding an int8
+        feature map with the zero code then cancels exactly."""
+        lq = self.weights[layer.name]
+        zp = self.in_qp(layer).zero_point
+        w = lq.w_q.astype(np.int64)
+        if isinstance(layer, Conv2D):
+            wsum = w.sum(axis=(0, 1, 2))
+        elif isinstance(layer, DepthwiseConv2D):
+            wsum = w.sum(axis=(0, 1)).reshape(-1)  # (ci*mult,) group-major
+        else:  # Dense
+            wsum = w.sum(axis=0)
+        return (lq.b_q.astype(np.int64) - zp * wsum).astype(np.int32)
+
+
+def check_quantizable(graph: CNNGraph) -> None:
+    """The int8 path supports the *optimized* layer set; anything the
+    NNCG passes should have removed is rejected with a pointer."""
+    sink = graph.sink
+    for layer in graph.layers:
+        if isinstance(layer, BatchNorm):
+            raise ValueError(
+                f"{layer.name}: BatchNorm is not quantizable — run "
+                "passes.optimize first (folds BN into the conv)")
+        if isinstance(layer, Softmax) and layer is not sink:
+            raise ValueError(
+                f"{layer.name}: standalone Softmax is only supported as "
+                "the graph output in int8 mode")
+        if getattr(layer, "activation", None) == "softmax" \
+                and layer is not sink:
+            raise ValueError(
+                f"{layer.name}: fused softmax is only supported on the "
+                "graph output in int8 mode")
+    if not isinstance(sink, _WEIGHTED + (Softmax,)):
+        raise ValueError(
+            f"sink {sink.name} ({type(sink).__name__}): int8 mode "
+            "requires a Conv2D/DepthwiseConv2D/Dense (or Softmax) output "
+            "layer to dequantize into")
+
+
+def calibrate(graph: CNNGraph, xs: np.ndarray) -> Dict[str, QParams]:
+    """Run the calibration batch through the XLA float oracle and record
+    per-tensor (post-activation) ranges for every layer output."""
+    from . import jax_exec  # deferred: keep quantize importable sans jax
+    import jax.numpy as jnp
+
+    xs = np.asarray(xs, np.float32)
+    if xs.ndim == 3:
+        xs = xs[None]
+    assert xs.ndim == 4 and xs.shape[1:] == tuple(graph.input_shape), (
+        f"calibration batch must be (N,)+{tuple(graph.input_shape)}, "
+        f"got {xs.shape}")
+
+    vals: Dict[str, "jnp.ndarray"] = {}
+    x = jnp.asarray(xs)
+    for layer in graph.layers:
+        if isinstance(layer, Input):
+            vals[layer.name] = x
+        else:
+            vals[layer.name] = jax_exec._apply(
+                layer, [vals[n] for n in layer.inputs])
+
+    acts: Dict[str, QParams] = {}
+    for layer in graph.layers:
+        if isinstance(layer, _SHARE_INPUT_QPARAMS):
+            acts[layer.name] = acts[layer.inputs[0]]
+            continue
+        v = np.asarray(vals[layer.name])
+        acts[layer.name] = qparams_from_range(v.min(), v.max())
+    return acts
+
+
+def quantize_weights(layer) -> LayerQuant:
+    """Symmetric per-output-channel int8 weights + int32 bias."""
+    w = np.asarray(layer.weights, np.float64)
+    if isinstance(layer, Conv2D):
+        absmax = np.abs(w).max(axis=(0, 1, 2))          # (c_out,)
+    elif isinstance(layer, DepthwiseConv2D):
+        absmax = np.abs(w).max(axis=(0, 1)).reshape(-1)  # (ci*mult,)
+    elif isinstance(layer, Dense):
+        absmax = np.abs(w).max(axis=0)                   # (d_out,)
+    else:  # pragma: no cover
+        raise TypeError(f"{layer.name}: not a weighted layer")
+    scale = np.where(absmax > 0, absmax / QMAX, 1.0)
+    scale = scale.astype(np.float32)
+
+    if isinstance(layer, DepthwiseConv2D):
+        per_tap = scale.reshape(w.shape[2], w.shape[3])[None, None]
+    else:
+        per_tap = scale
+    w_q = np.clip(np.round(w / per_tap.astype(np.float64)),
+                  -QMAX, QMAX).astype(np.int8)
+    return LayerQuant(w_scale=scale, w_q=w_q,
+                      b_q=np.zeros(scale.shape, np.int32))
+
+
+def quantize_graph(graph: CNNGraph,
+                   acts: Dict[str, QParams]) -> QuantizedGraph:
+    """Annotate a calibrated graph with quantized weights and biases."""
+    check_quantizable(graph)
+    qg = QuantizedGraph(graph=graph, acts=dict(acts))
+    for layer in graph.layers:
+        if not isinstance(layer, _WEIGHTED):
+            continue
+        lq = quantize_weights(layer)
+        s_in = float(acts[layer.inputs[0]].scale)
+        bias_scale = s_in * lq.w_scale.astype(np.float64)
+        lq.b_q = np.round(
+            np.asarray(layer.bias, np.float64) / bias_scale
+        ).astype(np.int32)
+        qg.weights[layer.name] = lq
+    return qg
+
+
+def quantize(graph: CNNGraph, calibration: np.ndarray) -> QuantizedGraph:
+    """The two-step pipeline: calibrate on samples, annotate the graph."""
+    return quantize_graph(graph, calibrate(graph, calibration))
+
+
+def quantization_error(qg: QuantizedGraph,
+                       xs: np.ndarray,
+                       ref: Optional[np.ndarray] = None) -> dict:
+    """Accuracy probe: int8 vs float oracle on a batch — max |Δ| and
+    top-1 agreement over the channel axis (the calibration-set gate)."""
+    from . import jax_exec
+    xs = np.asarray(xs, np.float32)
+    if ref is None:
+        ref = np.asarray(jax_exec.make_vmap_forward(qg.graph)(xs))
+    got = np.asarray(jax_exec.forward_quantized(qg, xs))
+    ref_f = ref.reshape(ref.shape[0], -1)
+    got_f = got.reshape(got.shape[0], -1)
+    return {
+        "max_abs_err": float(np.abs(got_f - ref_f).max()),
+        "top1_agreement": float(
+            (got_f.argmax(-1) == ref_f.argmax(-1)).mean()),
+    }

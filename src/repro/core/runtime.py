@@ -97,7 +97,12 @@ class CompiledNet:
 
     Also binds the reentrant ``<func>_ws(x, out, workspace)`` entry point
     when present: every call site supplies its own workspace, so the same
-    .so can run one image per thread (``predict_batch(threads=k)``)."""
+    .so can run one image per thread (``predict_batch(threads=k)``).
+
+    ``precision`` makes the binding dtype-aware: an int8 build's
+    workspace is a ``signed char`` arena (``workspace_bytes``), a float
+    build's a float one (``workspace_floats``); the public x/out
+    interface is float32 either way."""
 
     so_path: str
     func_name: str
@@ -109,6 +114,8 @@ class CompiledNet:
     arena_bytes: int = 0
     arena_buffer_sum_bytes: int = 0
     per_layer_live_bytes: Optional[dict] = None
+    precision: str = "fp32"          # 'fp32' | 'int8'
+    workspace_bytes: int = 0         # int8 builds: arena size in bytes
 
     def __post_init__(self):
         lib = ctypes.CDLL(self.so_path)
@@ -126,13 +133,22 @@ class CompiledNet:
                 self._batch_fn.restype = None
                 self._batch_fn.argtypes = [FLOATP, FLOATP, ctypes.c_int]
         self._ws_fn = None
+        # the workspace pointer type follows the build's precision
+        self._ws_ctype = (ctypes.c_byte if self.precision == "int8"
+                          else ctypes.c_float)
         try:
             self._ws_fn = getattr(lib, self.func_name + "_ws")
         except AttributeError:  # pre-arena .so
             pass
         else:
             self._ws_fn.restype = None
-            self._ws_fn.argtypes = [FLOATP, FLOATP, FLOATP]
+            self._ws_fn.argtypes = [FLOATP, FLOATP,
+                                    ctypes.POINTER(self._ws_ctype)]
+
+    def _alloc_workspace(self) -> np.ndarray:
+        if self.precision == "int8":
+            return np.empty(max(self.workspace_bytes, 1), dtype=np.int8)
+        return np.empty(max(self.workspace_floats, 1), dtype=np.float32)
 
     def __call__(self, x: np.ndarray) -> np.ndarray:
         x = np.ascontiguousarray(x, dtype=np.float32)
@@ -177,8 +193,8 @@ class CompiledNet:
         xf = x.reshape(-1)
 
         def run(t: int) -> None:
-            ws = np.empty(max(self.workspace_floats, 1), dtype=np.float32)
-            wp = ws.ctypes.data_as(FLOATP)
+            ws = self._alloc_workspace()
+            wp = ws.ctypes.data_as(ctypes.POINTER(self._ws_ctype))
             for b in range(t, n, k):
                 xi = xf[b * self.in_size:(b + 1) * self.in_size]
                 oi = out[b * self.out_size:(b + 1) * self.out_size]
@@ -223,6 +239,37 @@ def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
         arena_buffer_sum_bytes=plan.buffer_sum_bytes,
         per_layer_live_bytes={k: v * 4
                               for k, v in plan.per_layer_live.items()},
+    )
+
+
+def build_quantized(qgraph, opts: Optional[CodegenOptions] = None,
+                    extra_flags: Sequence[str] = ()) -> CompiledNet:
+    """Calibrated int8 graph -> C -> .so -> callable (float32 in/out).
+
+    ``qgraph`` is a :class:`repro.core.quantize.QuantizedGraph`; the
+    compiled net's workspace is the byte-planned int8 arena (~4x
+    smaller than the float build's)."""
+    from .cgen import QuantCGenerator
+    opts = opts or CodegenOptions()
+    gen = QuantCGenerator(qgraph, opts)
+    src = gen.generate()
+    so = compile_c(src, simd=opts.simd, extra_flags=extra_flags)
+    plan = gen.plan
+    graph = qgraph.graph
+    return CompiledNet(
+        so_path=so,
+        func_name=opts.func_name,
+        in_size=int(np.prod(graph.input_shape)),
+        out_size=int(np.prod(graph.output_shape)),
+        c_source_bytes=len(src),
+        batch_func_name=opts.batch_func_name if opts.emit_batch else None,
+        workspace_floats=0,
+        arena_bytes=plan.total_bytes,
+        arena_buffer_sum_bytes=plan.buffer_sum_bytes,
+        per_layer_live_bytes={k: v * plan.elem_bytes
+                              for k, v in plan.per_layer_live.items()},
+        precision="int8",
+        workspace_bytes=plan.total_bytes,
     )
 
 

@@ -82,18 +82,28 @@ class CBackend(Backend):
     """NNCG: graph -> C -> cc -> ctypes. Batches run through the
     generated ``<func>_batch`` loop wrapper, or — with ``threads>1`` —
     thread-parallel over the reentrant ``<func>_ws`` workspace entry
-    (each thread owns one liveness-planned arena)."""
+    (each thread owns one liveness-planned arena).
+
+    Passing ``qgraph`` (a calibrated
+    :class:`repro.core.quantize.QuantizedGraph`) selects the int8
+    codegen path: int8 weights/intermediates, int32 accumulators, a
+    byte-planned arena, float32 in/out — same serving interface."""
 
     def __init__(self, graph: CNNGraph, *, simd: str = "sse",
                  unroll=0, func_name: str = "nncg_net",
                  term_budget: Optional[int] = None,
-                 threads: Optional[int] = None):
+                 threads: Optional[int] = None,
+                 qgraph=None):
         super().__init__(graph)
         kw = {} if term_budget is None else {"term_budget": term_budget}
         self.opts = cgen.CodegenOptions(simd=simd, unroll=unroll,
                                         func_name=func_name, **kw)
         self.threads = threads
-        self.net = runtime.build(graph, self.opts)
+        self.qgraph = qgraph
+        if qgraph is not None:
+            self.net = runtime.build_quantized(qgraph, self.opts)
+        else:
+            self.net = runtime.build(graph, self.opts)
 
     def predict_batch(self, x: np.ndarray) -> np.ndarray:
         n = x.shape[0]
@@ -147,6 +157,23 @@ class XLABackend(_JaxBackend):
 
     def _make_fn(self, graph: CNNGraph):
         return jax_exec.make_vmap_forward(graph)
+
+
+class QuantizedXLABackend(_JaxBackend):
+    """XLA-compiled int8 reference
+    (:func:`repro.core.jax_exec.forward_quantized`) — the parity oracle
+    the quantized C build must match bit-for-bit on the integer path.
+    Constructed directly by the session (not in the registry: it needs
+    the calibrated ``QuantizedGraph``, not just a graph)."""
+
+    name = "xla-int8"
+
+    def __init__(self, qgraph):
+        self.qgraph = qgraph
+        super().__init__(qgraph.graph)
+
+    def _make_fn(self, graph: CNNGraph):
+        return jax_exec.make_jit_forward_quantized(self.qgraph)
 
 
 @register_backend("pallas")

@@ -3,10 +3,16 @@
     sess = InferenceSession(graph, backend="c", autotune=True)
     probs = sess.predict(batch)          # (N, *out_shape)
 
+Post-training int8 quantization is one more argument:
+
+    sess = InferenceSession(graph, backend="c", precision="int8",
+                            calibration=sample_batch)
+
 The session owns the whole deployment pipeline the repo previously
 scattered across benchmarks/examples: the NNCG optimization passes,
 ISA selection, per-layer variant autotuning (with the on-disk tuning
-cache), codegen + compile, and batched execution.
+cache), calibration + quantization, codegen + compile, and batched
+execution.
 """
 from __future__ import annotations
 
@@ -14,11 +20,11 @@ from typing import Dict, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core import cgen, passes, runtime
+from repro.core import cgen, passes, quantize as quantize_mod, runtime
 from repro.core.graph import CNNGraph
 
 from .autotune import Autotuner, TuneResult, TuningCache, tune_best_simd
-from .backends import Backend, CBackend, get_backend
+from .backends import (Backend, CBackend, QuantizedXLABackend, get_backend)
 
 
 class InferenceSession:
@@ -45,6 +51,16 @@ class InferenceSession:
     tune_cache: directory (or :class:`TuningCache`) for persisted tuning
               results; ``None`` uses the default cache dir.
     tune_iters: timing iterations per candidate during autotuning.
+    precision: ``"fp32"`` (default) or ``"int8"`` — post-training
+              quantization: calibrate activation ranges on sample
+              inputs, then serve the int8 C build (int8 weights and
+              intermediates, int32 accumulators, ~4x smaller arena) or,
+              with ``backend="xla"``, the bit-faithful jax reference.
+    calibration: sample inputs ``(N, *in_shape)`` for the int8
+              calibration pass; defaults to ``calib_samples`` standard
+              normal images (fine for smoke tests — use real data for
+              deployment).
+    calib_samples: size of the default calibration batch.
     """
 
     def __init__(self, graph: CNNGraph, backend: str = "c", *,
@@ -56,16 +72,35 @@ class InferenceSession:
                  threads: Optional[int] = None,
                  tune_cache: Union[None, str, TuningCache] = None,
                  tune_iters: int = 300,
-                 func_name: str = "nncg_net"):
+                 func_name: str = "nncg_net",
+                 precision: str = "fp32",
+                 calibration: Optional[np.ndarray] = None,
+                 calib_samples: int = 32):
+        assert precision in ("fp32", "int8"), precision
         self.backend_name = backend
+        self.precision = precision
         self.simd = simd or runtime.best_isa()
         candidates = list(simd_search) if (simd_search and autotune
                                            and backend == "c") else None
         widths = [cgen.ISAS[s].width if s in cgen.ISAS else 4
                   for s in (candidates or [self.simd])]
-        self.graph = (passes.optimize(graph, simd_multiple=max(widths))
+        # int8 kernels vectorize over window taps, not output channels —
+        # SIMD channel alignment would only add dead compute
+        multiple = 1 if precision == "int8" else max(widths)
+        self.graph = (passes.optimize(graph, simd_multiple=multiple)
                       if optimize else graph)
         self.tuned: Optional[TuneResult] = None
+        self.qgraph = None
+
+        if precision == "int8":
+            if calibration is None:
+                calibration = np.random.default_rng(0).normal(
+                    size=(calib_samples,) + tuple(self.graph.input_shape)
+                ).astype(np.float32)
+            self.qgraph = quantize_mod.quantize(self.graph, calibration)
+            self._init_int8(backend, candidates, threads, func_name,
+                            tune_iters, autotune, tune_cache)
+            return
 
         if backend == "c":
             if autotune:
@@ -95,6 +130,66 @@ class InferenceSession:
         else:
             self._backend = get_backend(backend)(self.graph)
 
+    def _init_int8(self, backend: str, candidates, threads, func_name: str,
+                   tune_iters: int, autotune: bool, tune_cache) -> None:
+        """Build the int8 serving backend.
+
+        The quantized kernels' variant space is the SIMD mode (the int8
+        emitters are rolled — unroll levels don't apply): with
+        ``autotune`` the session times each candidate build and keeps
+        the fastest; integer accumulation is order-independent, so all
+        candidates are bit-identical and the choice is purely speed.
+        The winning mode persists in the same on-disk tuning cache the
+        float path uses (keyed by graph/compiler/codegen version plus
+        an int8 tag), so a repeat session times nothing."""
+        if backend == "xla":
+            self._backend = QuantizedXLABackend(self.qgraph)
+            return
+        if backend != "c":
+            raise ValueError(
+                f"precision='int8' supports backends 'c' and 'xla', "
+                f"not {backend!r}")
+        if autotune:
+            cands = candidates
+            if not cands:
+                cands = ["generic"]
+                if runtime.host_supports_ssse3():
+                    cands.insert(0, "sse")
+                if runtime.host_supports_avx2():
+                    cands.insert(0, "avx")
+            cache = (tune_cache if isinstance(tune_cache, TuningCache)
+                     else TuningCache(tune_cache))
+            key = cache.key(self.graph, "+".join(cands),
+                            extra=f"int8:i{tune_iters}")
+            rec = cache.get(key)
+            if rec is not None and rec.get("simd") in cands:
+                self.simd = rec["simd"]
+                self._backend = CBackend(
+                    self.graph, simd=self.simd, func_name=func_name,
+                    threads=threads, qgraph=self.qgraph)
+                self.tuned = TuneResult(levels={}, us_per_call=float(
+                    rec.get("us_per_call", 0.0)), from_cache=True)
+                return
+            x = np.random.default_rng(0).normal(
+                size=self.graph.input_shape).astype(np.float32)
+            best = None
+            for simd in cands:
+                b = CBackend(self.graph, simd=simd, func_name=func_name,
+                             threads=threads, qgraph=self.qgraph)
+                t = b.time_per_call_us(x, iters=tune_iters,
+                                       warmup=max(10, tune_iters // 10))
+                if best is None or t < best[0]:
+                    best = (t, simd, b)
+            _, self.simd, self._backend = best
+            cache.put(key, {"simd": self.simd,
+                            "us_per_call": round(best[0], 3)})
+            self.tuned = TuneResult(levels={}, us_per_call=best[0],
+                                    from_cache=False)
+        else:
+            self._backend = CBackend(self.graph, simd=self.simd,
+                                     func_name=func_name, threads=threads,
+                                     qgraph=self.qgraph)
+
     # -- shapes --------------------------------------------------------------
 
     @property
@@ -122,15 +217,24 @@ class InferenceSession:
 
     def benchmark(self, x: Optional[np.ndarray] = None, *,
                   iters: int = 500, warmup: int = 20) -> float:
-        """Single-image latency of this session's backend in µs/call."""
+        """Single-image latency of this session's backend in µs/call.
+
+        Accepts one image or a batch — a batch is sliced to its first
+        image here, consistently for every backend (the C backend's
+        ctypes timing loop reads exactly one image's worth of memory
+        and would otherwise trip its single-image assert)."""
         if x is None:
             x = np.random.default_rng(0).normal(
                 size=self.input_shape).astype(np.float32)
         x = np.asarray(x, np.float32)
-        if x.shape != tuple(self.input_shape):
-            raise ValueError(
-                f"benchmark times one image of {tuple(self.input_shape)}, "
-                f"got {x.shape} — pass batch[i], not the batch")
+        in_shape = tuple(self.input_shape)
+        if x.shape != in_shape:
+            if x.ndim == len(in_shape) + 1 and x.shape[1:] == in_shape:
+                x = x[0]  # batch -> its first image, for all backends
+            else:
+                raise ValueError(
+                    f"benchmark times one image of {in_shape}, "
+                    f"got {x.shape}")
         return self._backend.time_per_call_us(x, iters=iters, warmup=warmup)
 
     # -- introspection -------------------------------------------------------
@@ -138,8 +242,13 @@ class InferenceSession:
     @property
     def info(self) -> dict:
         d = {"backend": self.backend_name, "simd": self.simd,
+             "precision": self.precision,
              "input_shape": tuple(self.input_shape),
              "output_shape": tuple(self.output_shape)}
+        if self.qgraph is not None:
+            d["quantized_layers"] = sorted(self.qgraph.weights)
+            d["input_qparams"] = (self.qgraph.input_qp.scale,
+                                  self.qgraph.input_qp.zero_point)
         if self.tuned is not None:
             d.update(levels=self.tuned.levels,
                      tuned_us_per_call=self.tuned.us_per_call,

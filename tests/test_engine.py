@@ -146,11 +146,47 @@ def test_predict_rejects_wrong_shape():
         sess.predict(np.zeros((3, 3), np.float32))
 
 
-def test_benchmark_rejects_batch_input():
-    # a batch would silently time only its first image on the C backend
-    sess = InferenceSession(_tiny_cnn(), backend="c", simd="structured")
-    with pytest.raises(ValueError, match="one image"):
-        sess.benchmark(_batch(sess.input_shape, n=4))
+def test_benchmark_slices_batch_to_one_image():
+    # regression: a batched array used to trip the C backend's
+    # single-image assert; the session now slices batch[0] consistently
+    # for every backend (and still rejects junk shapes)
+    for backend in ("c", "xla"):
+        sess = InferenceSession(_tiny_cnn(), backend=backend,
+                                simd="structured")
+        t = sess.benchmark(_batch(sess.input_shape, n=4), iters=5,
+                           warmup=1)
+        assert np.isfinite(t) and t > 0
+        with pytest.raises(ValueError, match="one image"):
+            sess.benchmark(np.zeros((3, 3), np.float32))
+
+
+def test_jax_backend_timing_measures_compute_not_dispatch():
+    # regression: without block_until_ready() inside the timed loop,
+    # timing a jitted fn measures async dispatch instead of compute.
+    # Compare against a measured dispatch-only baseline rather than a
+    # wall-clock constant so the test is machine-independent.
+    import time
+
+    import jax
+    if not getattr(jax.config, "jax_cpu_enable_async_dispatch", True):
+        pytest.skip("synchronous CPU dispatch: nothing to regress")
+
+    sess = InferenceSession(PAPER_CNNS["pedestrian"](), backend="xla")
+    t_blocked = sess.benchmark(iters=10, warmup=3)
+    assert np.isfinite(t_blocked) and t_blocked > 0
+
+    import jax.numpy as jnp
+    fn = sess._backend._fn
+    xb = jnp.asarray(np.zeros((1,) + tuple(sess.input_shape), np.float32))
+    fn(xb).block_until_ready()  # compiled and warm
+    t0 = time.perf_counter()
+    for _ in range(10):
+        fn(xb)  # the buggy loop: dispatch only, never blocks
+    t_dispatch = (time.perf_counter() - t0) / 10 * 1e6
+    assert t_blocked > 2 * t_dispatch, (
+        f"blocked timing {t_blocked:.1f}us is not clearly above the "
+        f"dispatch-only {t_dispatch:.1f}us — is block_until_ready() "
+        f"inside the timed loop?")
 
 
 def test_tuning_cache_keys_differ_by_tuner_params(tmp_path):

@@ -1,0 +1,263 @@
+"""Int8 post-training quantization: emitted-literal fidelity, exact
+C-vs-jax-reference parity on the integer path, accuracy vs the float
+oracle, arena shrinkage, dtype-aware threading, and the strict-ANSI
+claim for the quantized emitter."""
+import shutil
+import subprocess
+
+import numpy as np
+import pytest
+
+try:  # hypothesis widens the literal search; a fixed grid runs without
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.cnn_paper import PAPER_CNNS, residual_cnn
+from repro.core import cgen, jax_exec, passes, quantize, runtime
+from repro.core.cgen import _flit
+from repro.core.graph import (
+    Add, AvgPool, BatchNorm, CNNGraph, Concat, Conv2D, DepthwiseConv2D,
+    GlobalAvgPool, Input, MaxPool,
+)
+
+
+def _conv(rng, kh, kw, ci, co, **kw_args) -> Conv2D:
+    w = rng.normal(0, 0.5, (kh, kw, ci, co)).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Conv2D(weights=w, bias=b, **kw_args)
+
+
+def _dw(rng, kh, kw, c, m, **kw_args) -> DepthwiseConv2D:
+    w = rng.normal(0, 0.5, (kh, kw, c, m)).astype(np.float32)
+    b = rng.normal(0, 0.1, (c * m,)).astype(np.float32)
+    return DepthwiseConv2D(weights=w, bias=b, **kw_args)
+
+
+def _zoo_graph(seed=1) -> CNNGraph:
+    """Every quantizable construct, ending in a softmax-free sink so
+    the whole net is on the exact integer path."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(12, 10, 3), name="in"),
+        _conv(rng, 3, 3, 3, 8, padding="same", activation="relu",
+              name="c1"),
+        MaxPool(size=(2, 2), padding="same", name="mp"),
+        _dw(rng, 3, 3, 8, 1, padding="same", activation="leaky_relu",
+            name="dw1"),
+        _conv(rng, 1, 1, 8, 8, padding="valid", name="pw"),
+        Add(name="add", inputs=["pw", "mp"], activation="relu"),
+        _conv(rng, 1, 1, 8, 4, name="b1", inputs=["add"]),
+        _conv(rng, 3, 3, 8, 4, padding="same", name="b2", inputs=["add"]),
+        Concat(name="cat", inputs=["b1", "b2"]),
+        AvgPool(size=(3, 3), strides=(2, 2), padding="same", name="ap"),
+        GlobalAvgPool(name="gap"),
+        _conv(rng, 1, 1, 8, 5, name="head", activation="relu"),
+    ])
+
+
+def _calib(shape, n=8, seed=3):
+    return np.random.default_rng(seed).normal(
+        size=(n,) + tuple(shape)).astype(np.float32)
+
+
+# ------------------------------------------ emitted-literal fidelity ----
+
+def _assert_flit_roundtrip(v: np.float32) -> None:
+    lit = _flit(v)
+    assert lit.endswith("f")
+    back = np.float32(lit[:-1])
+    assert back.tobytes() == np.float32(v).tobytes(), (v, lit, back)
+
+
+_FLIT_GRID = np.concatenate([
+    np.random.default_rng(0).normal(0, 1, 200),
+    np.random.default_rng(1).normal(0, 1e-30, 50),
+    np.random.default_rng(2).normal(0, 1e30, 50),
+    [0.0, -0.0, 1.0, -1.0, 1 / 3, np.float32(2 ** -149),
+     -np.float32(2 ** -149), np.finfo(np.float32).max,
+     np.finfo(np.float32).min, np.finfo(np.float32).tiny],
+]).astype(np.float32)
+
+
+def test_flit_roundtrip_grid():
+    """Every emitted C float literal parses back bit-exact (P3 depends
+    on it; the quantized requant scales depend on it doubly)."""
+    for v in _FLIT_GRID:
+        _assert_flit_roundtrip(v)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=300, deadline=None)
+    @given(st.floats(width=32, allow_nan=False, allow_infinity=False))
+    def test_flit_roundtrip_property(x):
+        _assert_flit_roundtrip(np.float32(x))
+
+
+def test_qparams_zero_exactly_representable():
+    for mn, mx in [(-1.3, 2.7), (0.0, 5.0), (-4.2, 0.0), (0.0, 0.0),
+                   (0.5, 2.0), (-3.0, -1.0)]:
+        qp = quantize.qparams_from_range(mn, mx)
+        assert quantize.QMIN <= qp.zero_point <= quantize.QMAX
+        z = qp.quantize(np.zeros(1, np.float32))
+        assert z[0] == qp.zero_point
+        assert qp.dequantize(z)[0] == 0.0
+
+
+# ------------------------------------------------ integer-path parity ----
+
+@pytest.mark.parametrize("simd", ["generic", "sse"])
+def test_quantized_c_bit_exact_vs_jax_reference(simd):
+    """The generated int8 C and the quantized jax reference share every
+    float32 requant constant and an exact int32 integer path — on a
+    softmax-free net the outputs must be *identical*, not just close
+    (SIMD included: integer addition is associative)."""
+    if simd == "sse" and not runtime.host_supports_ssse3():
+        pytest.skip("no SSSE3")
+    g = passes.optimize(_zoo_graph(), simd_multiple=1)
+    xs = _calib(g.input_shape)
+    qg = quantize.quantize(g, xs)
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    net = runtime.build_quantized(qg, cgen.CodegenOptions(simd=simd))
+    got = net.predict_batch(xs).reshape(ref.shape)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("name", ["ball", "residual"])
+def test_quantized_c_matches_jax_reference_cnn(name):
+    """cnn_paper + residual configs: exact integer path, float softmax
+    tail allowed one-ulp wiggle (libm expf vs XLA exp)."""
+    builder = PAPER_CNNS.get(name, residual_cnn)
+    g = passes.optimize(builder(), simd_multiple=1)
+    xs = _calib(g.input_shape, n=16)
+    qg = quantize.quantize(g, xs)
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    net = runtime.build_quantized(qg, cgen.CodegenOptions(simd="generic"))
+    got = net.predict_batch(xs).reshape(ref.shape)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    assert (got.reshape(len(xs), -1).argmax(-1)
+            == ref.reshape(len(xs), -1).argmax(-1)).all()
+
+
+@pytest.mark.slow
+def test_quantized_c_matches_jax_reference_pedestrian_robot():
+    for builder in (PAPER_CNNS["pedestrian"], PAPER_CNNS["robot"]):
+        g = passes.optimize(builder(), simd_multiple=1)
+        xs = _calib(g.input_shape, n=4)
+        qg = quantize.quantize(g, xs)
+        ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+        net = runtime.build_quantized(qg, cgen.CodegenOptions(simd="sse"))
+        got = net.predict_batch(xs).reshape(ref.shape)
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- accuracy vs float ----
+
+def test_quantized_close_to_float_oracle():
+    g = passes.optimize(PAPER_CNNS["ball"](), simd_multiple=1)
+    xs = _calib(g.input_shape, n=64)
+    qg = quantize.quantize(g, xs)
+    stats = quantize.quantization_error(qg, xs)
+    # softmax probabilities: int8 should stay within a few percent and
+    # agree on top-1 for nearly all calibration images
+    assert stats["max_abs_err"] < 0.08, stats
+    assert stats["top1_agreement"] >= 0.85, stats
+
+
+# ------------------------------------------------------- engine wiring ----
+
+def test_session_int8_end_to_end():
+    from repro.engine import InferenceSession
+    g = PAPER_CNNS["ball"]()
+    xs = _calib(g.input_shape, n=16)
+    s8 = InferenceSession(g, backend="c", precision="int8",
+                          calibration=xs, simd="generic")
+    sref = InferenceSession(g, backend="xla", precision="int8",
+                            calibration=xs)
+    got, ref = s8.predict(xs), sref.predict(xs)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    info = s8.info
+    assert info["precision"] == "int8"
+    assert info["quantized_layers"]
+    assert info["arena_bytes"] > 0
+
+
+def test_session_int8_arena_shrinks_vs_fp32():
+    from repro.engine import InferenceSession
+    g = PAPER_CNNS["pedestrian"]()
+    xs = _calib(g.input_shape, n=4)
+    sf = InferenceSession(g, backend="c", simd="sse")
+    s8 = InferenceSession(g, backend="c", precision="int8",
+                          calibration=xs, simd="sse")
+    # int8 intermediates: ~4x smaller (the int8 arena also carries the
+    # quantized input copy, so slightly less than exactly 4x)
+    assert s8.info["arena_bytes"] * 2 < sf.info["arena_bytes"]
+
+
+def test_session_int8_autotune_over_quant_kernels():
+    from repro.engine import InferenceSession
+    g = PAPER_CNNS["ball"]()
+    xs = _calib(g.input_shape, n=8)
+    sess = InferenceSession(g, backend="c", precision="int8",
+                            calibration=xs, autotune=True, tune_iters=30)
+    ref = InferenceSession(g, backend="xla", precision="int8",
+                           calibration=xs)
+    np.testing.assert_allclose(sess.predict(xs), ref.predict(xs),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_session_int8_tuning_cache_round_trip(tmp_path):
+    from repro.engine import InferenceSession
+    g = PAPER_CNNS["ball"]()
+    xs = _calib(g.input_shape, n=8)
+    s1 = InferenceSession(g, backend="c", precision="int8",
+                          calibration=xs, autotune=True, tune_iters=20,
+                          tune_cache=str(tmp_path))
+    assert s1.tuned is not None and not s1.tuned.from_cache
+    s2 = InferenceSession(g, backend="c", precision="int8",
+                          calibration=xs, autotune=True, tune_iters=20,
+                          tune_cache=str(tmp_path))
+    assert s2.tuned.from_cache and s2.simd == s1.simd
+    np.testing.assert_array_equal(s1.predict(xs), s2.predict(xs))
+
+
+def test_quantized_threads_match_sequential():
+    """Dtype-aware workspace binding: the threaded path allocates int8
+    arenas and must reproduce the sequential batch exactly."""
+    g = passes.optimize(PAPER_CNNS["ball"](), simd_multiple=1)
+    xs = _calib(g.input_shape, n=8)
+    qg = quantize.quantize(g, xs)
+    net = runtime.build_quantized(qg, cgen.CodegenOptions(simd="generic"))
+    np.testing.assert_array_equal(net.predict_batch(xs),
+                                  net.predict_batch(xs, threads=3))
+
+
+def test_check_quantizable_rejects_unfolded_batchnorm():
+    rng = np.random.default_rng(0)
+    g = CNNGraph([
+        Input(shape=(4, 4, 2)),
+        _conv(rng, 1, 1, 2, 2),
+        BatchNorm(mean=np.zeros(2), var=np.ones(2)),
+        _conv(rng, 1, 1, 2, 2),
+    ])
+    with pytest.raises(ValueError, match="BatchNorm"):
+        quantize.check_quantizable(g)
+
+
+# ------------------------------------------------------- strict ANSI C ----
+
+def test_quantized_c_is_strict_ansi_c89(tmp_path):
+    gcc = shutil.which("gcc")
+    if gcc is None:
+        pytest.skip("gcc not available")
+    g = passes.optimize(residual_cnn(), simd_multiple=1)
+    qg = quantize.quantize(g, _calib(g.input_shape))
+    src = cgen.generate_quantized_c(qg, cgen.CodegenOptions(simd="generic"))
+    c_path = tmp_path / "quant.c"
+    c_path.write_text(src)
+    proc = subprocess.run(
+        [gcc, "-std=c89", "-Wall", "-Wextra", "-Werror",
+         "-pedantic-errors", "-c", str(c_path), "-o", str(c_path) + ".o"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr[:4000]

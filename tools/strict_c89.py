@@ -23,7 +23,7 @@ import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.cnn_paper import ball_classifier, residual_cnn  # noqa: E402
-from repro.core import cgen, passes  # noqa: E402
+from repro.core import cgen, passes, quantize  # noqa: E402
 
 STRICT_FLAGS = ["-std=c89", "-Wall", "-Wextra", "-Werror",
                 "-pedantic-errors"]
@@ -32,7 +32,18 @@ CASES = [
     ("ball", ball_classifier, 0),       # paper CNN, fully unrolled
     ("ball", ball_classifier, None),    # paper CNN, rolled loops
     ("residual", residual_cnn, None),   # DAG config (Add/Concat/depthwise)
+    ("ball", ball_classifier, "int8"),      # post-training-quantized build
+    ("residual", residual_cnn, "int8"),     # quantized DAG build
 ]
+
+
+def _quantized_source(graph) -> str:
+    import numpy as np
+    xs = np.random.default_rng(0).normal(
+        size=(8,) + tuple(graph.input_shape)).astype(np.float32)
+    qg = quantize.quantize(graph, xs)
+    return cgen.generate_quantized_c(
+        qg, cgen.CodegenOptions(simd="generic"))
 
 
 def main() -> int:
@@ -44,8 +55,11 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as tmp:
         for name, builder, unroll in CASES:
             g = passes.optimize(builder(), simd_multiple=1)
-            src = cgen.generate_c(
-                g, cgen.CodegenOptions(simd="generic", unroll=unroll))
+            if unroll == "int8":
+                src = _quantized_source(g)
+            else:
+                src = cgen.generate_c(
+                    g, cgen.CodegenOptions(simd="generic", unroll=unroll))
             c_path = os.path.join(tmp, f"{name}_{unroll}.c")
             with open(c_path, "w") as f:
                 f.write(src)
