@@ -13,7 +13,11 @@ Reproduces the NNCG evaluation on the container CPU:
     C build (per-channel int8 weights, int8 intermediates, int32
     accumulators): latency vs the float C path, top-1 agreement with
     the float oracle on the calibration set, and the byte-planned
-    arena (~4x smaller than the float arena).
+    arena (~4x smaller than the float arena).  Calibration runs on
+    synthetic *camera-like* frames (bounded, spatially smooth — the
+    input domain the paper's nets actually see) with histogram-
+    percentile range selection; the recorded ``int8_top1_agreement``
+    is a hard >= 0.99 gate on every net.
   * Table VII — feature ablation: generic scalar C -> SSE layout ->
     SSE + full unroll -> autotuned per-layer selection.
 
@@ -38,12 +42,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.cnn_paper import EXTRA_CNNS, PAPER_CNNS  # noqa: E402
 from repro.core import runtime  # noqa: E402
+from repro.data.pipeline import camera_frame_batch  # noqa: E402
 from repro.engine import InferenceSession  # noqa: E402
 
 ITERS = {"ball": 20000, "pedestrian": 3000, "robot": 800, "residual": 5000}
 ALL_CNNS = {**PAPER_CNNS, **EXTRA_CNNS}
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_engine.json")
+
+# histogram-observer calibration: percentile range selection on
+# representative frames (minmax on noise was the robot-net accuracy
+# regression — agreement 0.94; see core/quantize.py)
+CALIBRATION_METHOD = "percentile"
+INT8_AGREEMENT_GATE = 0.99
 
 RESULTS: dict = {"cnns": {}, "ablation": {}}
 
@@ -52,19 +63,28 @@ def _bench_cnn(name: str):
     simd = runtime.best_isa()
     iters = ITERS[name]
     tune_iters = max(200, iters // 20)
-    g = ALL_CNNS[name]()
+    if name == "ball":
+        # the ROADMAP accuracy gate: calibrate and evaluate the ball
+        # net *trained* on its dataset, on real frames of that dataset
+        # (a random-weight 2-class softmax is a coin flip — its top-1
+        # agreement measures tie-breaking luck, not calibration)
+        from repro.configs.cnn_paper import trained_ball_classifier
+        from repro.data.pipeline import ball_image_batch
+        g, _ = trained_ball_classifier(steps=150, seed=0)
+        calib = ball_image_batch(32, seed=1)[0]
+    else:
+        g = ALL_CNNS[name]()
+        calib = camera_frame_batch(32, g.input_shape, seed=1)
     x = np.random.default_rng(0).normal(
         size=g.input_shape).astype(np.float32)
-
-    calib = np.random.default_rng(1).normal(
-        size=(32,) + tuple(g.input_shape)).astype(np.float32)
 
     tuned = InferenceSession(g, backend="c", autotune=True, simd=simd,
                              tune_iters=tune_iters)
     untuned = InferenceSession(g, backend="c", simd=simd)
     int8 = InferenceSession(g, backend="c", precision="int8",
-                            calibration=calib, autotune=True,
-                            tune_iters=tune_iters)
+                            calibration=calib,
+                            calibration_method=CALIBRATION_METHOD,
+                            autotune=True, tune_iters=tune_iters)
     xla = InferenceSession(g, backend="xla")
 
     # correctness gates before timing
@@ -77,7 +97,10 @@ def _bench_cnn(name: str):
     np.testing.assert_allclose(int8.predict(x).reshape(qref.shape), qref,
                                rtol=1e-5, atol=1e-6)
     qstats = quantization_error(int8.qgraph, calib)
-    assert qstats["top1_agreement"] >= 0.75, qstats
+    assert qstats["top1_agreement"] >= INT8_AGREEMENT_GATE, (
+        f"{name}: int8 top-1 agreement "
+        f"{qstats['top1_agreement']:.4f} < {INT8_AGREEMENT_GATE} "
+        f"(calibration_method={int8.qgraph.method})")
 
     t_c = tuned.benchmark(x, iters=iters)
     t_u = untuned.benchmark(x, iters=iters)
@@ -102,6 +125,7 @@ def _bench_cnn(name: str):
         "int8_arena_bytes": int8.info["arena_bytes"],
         "int8_top1_agreement": round(qstats["top1_agreement"], 4),
         "int8_max_abs_err": round(qstats["max_abs_err"], 6),
+        "calibration_method": int8.qgraph.method,
         "arena_bytes": arena,
         "arena_buffer_sum_bytes": tuned.info["arena_buffer_sum_bytes"],
         "peak_live_bytes": tuned.info["peak_live_bytes"],

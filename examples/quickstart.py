@@ -14,53 +14,20 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.cnn_paper import ball_classifier
-from repro.core import jax_exec, runtime
+from repro.configs.cnn_paper import trained_ball_classifier
+from repro.core import runtime
 from repro.data.pipeline import ball_image_batch
 from repro.engine import InferenceSession
-from repro.optim import AdamW
 
 # ---------------------------------------------------------------- 1. train
-graph = ball_classifier(seed=0)
-params = jax_exec.extract_params(graph)
-opt = AdamW(learning_rate=3e-3, weight_decay=0.0)
-opt_state = opt.init(params)
-
-
-def loss_fn(p, x, y):
-    logits = jax_exec.forward_with_params(graph, p, x)[:, 0, 0, :]
-    logp = jax.nn.log_softmax(logits)
-    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
-
-
-@jax.jit
-def step(p, s, x, y):
-    loss, g = jax.value_and_grad(loss_fn)(p, x, y)
-    up, s = opt.update(g, s, p)
-    p = jax.tree.map(lambda a, u: a + u, p, up)
-    return p, s, loss
-
-
 print("training ball classifier on synthetic balls ...")
-for i in range(150):
-    xs, ys = ball_image_batch(64, seed=0, step=i)
-    params, opt_state, loss = step(params, opt_state, jnp.asarray(xs),
-                                   jnp.asarray(ys))
-    if (i + 1) % 50 == 0:
-        print(f"  step {i+1}: loss {float(loss):.4f}")
-
-xs, ys = ball_image_batch(2000, seed=99, step=0)
-pred = jnp.argmax(jax_exec.forward_with_params(
-    graph, params, jnp.asarray(xs))[:, 0, 0, :], -1)
-acc = float((pred == jnp.asarray(ys)).mean())
+trained, acc = trained_ball_classifier(steps=150, seed=0, log=print)
 print(f"accuracy on held-out synthetic set: {acc:.4f} "
       f"(paper reports 99.975% on the RoboCup set)")
 
-trained = jax_exec.insert_params(graph, params)
+xs, ys = ball_image_batch(2000, seed=99, step=0)
 
 # ------------------------- 2-3. engine: optimize + autotune + compile C
 # InferenceSession runs the NNCG passes, benchmarks every per-layer
@@ -91,19 +58,33 @@ print(f"latency: NNCG C {t_c:.2f}us | XLA jit {t_xla:.2f}us | "
       f"speed-up {t_xla/t_c:.2f}x (paper: 11.81x vs TF-XLA on i7)")
 
 # ------------------------------------- 5. int8 quantize-and-deploy (2 lines)
-# calibrate activation ranges on sample images, compile the int8 C
-# build: int8 weights + intermediates, int32 accumulators, ~4x smaller
-# memory arena — same float-in/float-out serving interface.
+# calibrate activation ranges on sample images (streamed through
+# histogram observers), compile the int8 C build: int8 weights +
+# intermediates, int32 accumulators, ~4x smaller memory arena — same
+# float-in/float-out serving interface.  The calibration *method* is
+# one more argument: "minmax" (exact range), "percentile" (clip
+# outlier tails), "mse" (histogram-MSE-optimal range).
+from repro.core import passes, quantize  # noqa: E402
+
+opt_graph = passes.optimize(trained, simd_multiple=1)
+print("calibration methods on the trained ball net (64 real frames):")
+for method in quantize.CALIBRATION_METHODS:
+    qg = quantize.quantize(opt_graph, xs[:64], method=method)
+    st = quantize.quantization_error(qg, xs[:512])
+    print(f"  {method:10s} top-1 agreement {st['top1_agreement']:.4f}  "
+          f"max|err| {st['max_abs_err']:.5f}")
+
 qsess = InferenceSession(trained, backend="c", precision="int8",
-                         calibration=xs[:64])
+                         calibration=xs[:64],
+                         calibration_method="percentile")
 qpred = qsess.predict(xs[:256])
 
+pred = np.argmax(oracle.predict(xs[:256]).reshape(256, -1), -1)
 qacc = float((np.argmax(qpred.reshape(256, -1), -1)
               == np.asarray(ys[:256])).mean())
-agree = float((np.argmax(qpred.reshape(256, -1), -1)
-               == np.asarray(pred[:256])).mean())
+agree = float((np.argmax(qpred.reshape(256, -1), -1) == pred).mean())
 t_q = qsess.benchmark(x, iters=20000)
-print(f"int8: accuracy {qacc:.4f}, top-1 agreement with float "
-      f"{agree:.4f}, latency {t_q:.2f}us, arena "
-      f"{qsess.info['arena_bytes']} B (float: "
+print(f"int8 ({qsess.info['calibration_method']}): accuracy {qacc:.4f}, "
+      f"top-1 agreement with float {agree:.4f}, latency {t_q:.2f}us, "
+      f"arena {qsess.info['arena_bytes']} B (float: "
       f"{sess.info['arena_bytes']} B)")

@@ -3,7 +3,8 @@
 Weights are He-initialized from a fixed seed (the paper's latency results
 do not depend on weight values, only structure); the ball classifier can
 additionally be *trained* on the synthetic ball dataset via
-``examples/train_ball.py``.
+:func:`trained_ball_classifier` (used by the quantization tests and
+``examples/quickstart.py``).
 """
 from __future__ import annotations
 
@@ -132,6 +133,55 @@ def residual_cnn(seed: int = 0) -> CNNGraph:
         _conv(r, 1, 1, 8, 4, padding="valid", name="head"),
         Softmax(name="probs"),
     ])
+
+
+def trained_ball_classifier(steps: int = 150, *, seed: int = 0,
+                            learning_rate: float = 3e-3, batch: int = 64,
+                            eval_n: int = 2000, log=None):
+    """The Table-I ball net *trained* on the synthetic ball dataset.
+
+    The calibration-quality work (percentile/MSE range selection) is
+    gated on this trained net, not on random weights — random-weight
+    activations are unstructured and hide calibration differences.
+    Deterministic in ``(steps, seed)``.  Returns ``(graph, accuracy)``
+    with the trained weights inserted and the held-out accuracy on a
+    fresh synthetic split."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import jax_exec
+    from repro.data.pipeline import ball_image_batch
+    from repro.optim import AdamW
+
+    graph = ball_classifier(seed=seed)
+    params = jax_exec.extract_params(graph)
+    opt = AdamW(learning_rate=learning_rate, weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, x, y):
+        logits = jax_exec.forward_with_params(graph, p, x)[:, 0, 0, :]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p, s, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        up, s = opt.update(g, s, p)
+        p = jax.tree.map(lambda a, u: a + u, p, up)
+        return p, s, loss
+
+    for i in range(steps):
+        xs, ys = ball_image_batch(batch, seed=0, step=i)
+        params, opt_state, loss = step(params, opt_state,
+                                       jnp.asarray(xs), jnp.asarray(ys))
+        if log is not None and (i + 1) % 50 == 0:
+            log(f"  step {i + 1}: loss {float(loss):.4f}")
+
+    xs, ys = ball_image_batch(eval_n, seed=99, step=0)
+    pred = jnp.argmax(jax_exec.forward_with_params(
+        graph, params, jnp.asarray(xs))[:, 0, 0, :], -1)
+    acc = float((pred == jnp.asarray(ys)).mean())
+    return jax_exec.insert_params(graph, params), acc
 
 
 PAPER_CNNS = {

@@ -1884,6 +1884,8 @@ class QuantCGenerator(CGenerator):
             "int8 PTQ build.")
         hdr(f" * net: in {g.input_shape} -> out {smap[sink.name]}, "
             f"{g.param_count()} params, simd={opts.simd},")
+        hdr(f" * calibration={getattr(self.qg, 'method', 'minmax')} "
+            f"(per-branch activation qparams on multi-input edges),")
         hdr(f" * int8 arena {plan.total_bytes} B "
             f"(float32 intermediates would be ~4x) */")
         hdr("#include <math.h>")

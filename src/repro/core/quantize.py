@@ -2,9 +2,20 @@
 
 The paper's design principles all exploit full knowledge of the trained
 net at generation time; this module extends that to the *value ranges*:
-a calibration pass runs sample inputs through the float oracle
-(:func:`repro.core.jax_exec.forward`), records per-tensor activation
-ranges, and derives:
+a calibration pass streams sample inputs through the float oracle
+(:func:`repro.core.jax_exec.forward`) in chunks, accumulates a
+fixed-bin histogram per tensor (:class:`Observer`), selects a
+quantization range per tensor with a pluggable method —
+
+* ``"minmax"``     — the exact observed range (the historical default);
+* ``"percentile"`` — clip each tail to the e.g. 99.99th percentile of
+  the observed distribution, so a handful of outliers stop inflating
+  the quantization step for everything else;
+* ``"mse"``        — grid-search the clipped range minimizing the
+  quantization mean-squared-error over the histogram (the
+  entropy-style data-driven choice);
+
+— and derives:
 
 * **activations** — per-tensor *asymmetric* int8 ``(scale, zero_point)``
   over the observed post-activation range (zero always exactly
@@ -27,6 +38,15 @@ and the :func:`repro.core.jax_exec.forward_quantized` reference):
   (softmax, when present, runs in float32) — the public API stays
   float-in / float-out.
 
+Multi-input layers (Add, Concat) are **per-branch**: every input edge
+keeps the qparams of its own producer and both the generated C and the
+jax reference requantize per edge (``rescale(layer, idx)``), so a
+narrow branch never inherits the step size of a wide sibling.  The
+Concat *output* range is the union of its inputs' *calibrated* ranges
+(computed per branch, then merged) — never a histogram over the mixed
+concatenated tensor, where one wide branch would decide the clip for
+all of them.
+
 Every scale used anywhere is computed **here** and cast to float32
 once, so the code generator (which prints it via ``_flit``, a bit-exact
 round-trip) and the jax reference (which closes over the same array)
@@ -34,14 +54,16 @@ can never disagree.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from .graph import (
     BatchNorm,
     CNNGraph,
+    Concat,
     Conv2D,
     Dense,
     DepthwiseConv2D,
@@ -96,15 +118,152 @@ def qparams_from_range(mn: float, mx: float) -> QParams:
 
     The range is widened to include zero so that 0.0 is exactly
     representable (``q == zero_point``) — required for exact ReLU
-    clamps and for padding int8 feature maps with the zero code."""
+    clamps and for padding int8 feature maps with the zero code.
+    The zero point rounds half **up** (``floor(x + 0.5)``), the same
+    scheme every quantization step in the C build and the jax
+    reference uses — not Python's banker's ``round``."""
     mn = min(float(mn), 0.0)
     mx = max(float(mx), 0.0)
     scale = (mx - mn) / float(QMAX - QMIN)
     if scale == 0.0:  # constant-zero tensor
         scale = 1.0
     scale = float(np.float32(scale))
-    zp = int(np.clip(round(QMIN - mn / scale), QMIN, QMAX))
+    zp = int(np.clip(np.floor(QMIN - mn / scale + 0.5), QMIN, QMAX))
     return QParams(scale=scale, zero_point=zp)
+
+
+# ---------------------------------------------------------------------------
+# calibration observers (streaming histograms + range selection)
+# ---------------------------------------------------------------------------
+
+CALIBRATION_METHODS = ("minmax", "percentile", "mse")
+
+
+class Observer:
+    """Streaming per-tensor range observer.
+
+    Accumulates an exact running min/max plus a fixed-bin histogram
+    over chunked calibration batches — one chunk's activations at a
+    time, so calibration memory is bounded by the chunk, not the whole
+    calibration set.  When a later chunk falls outside the current
+    histogram span, the span grows to the union and the existing
+    counts are redistributed onto the new uniform grid by linear
+    interpolation of the cumulative mass (the standard piecewise-
+    uniform merge); the min/max themselves always stay exact, so the
+    ``minmax`` method reproduces the historical single-pass behavior
+    bit-for-bit.
+    """
+
+    def __init__(self, nbins: int = 2048):
+        assert nbins >= 16, "need a usable histogram resolution"
+        self.nbins = int(nbins)
+        self.mn = np.inf
+        self.mx = -np.inf
+        self.counts: Optional[np.ndarray] = None
+        self.edges: Optional[np.ndarray] = None
+
+    def update(self, x: np.ndarray) -> None:
+        x = np.asarray(x, np.float32).ravel()
+        if x.size == 0:
+            return
+        cmn, cmx = float(x.min()), float(x.max())
+        self.mn = min(self.mn, cmn)
+        self.mx = max(self.mx, cmx)
+        if self.counts is None:
+            counts, edges = np.histogram(
+                x, bins=self.nbins, range=(cmn, cmx))
+            self.counts = counts.astype(np.int64)
+            self.edges = edges
+            return
+        lo, hi = float(self.edges[0]), float(self.edges[-1])
+        if cmn < lo or cmx > hi:
+            new_lo, new_hi = min(lo, cmn), max(hi, cmx)
+            new_edges = np.linspace(new_lo, new_hi, self.nbins + 1)
+            cum = np.concatenate([[0.0], np.cumsum(self.counts)])
+            remapped = np.diff(np.interp(new_edges, self.edges, cum,
+                                         left=0.0, right=cum[-1]))
+            self.counts = remapped  # float mass from here on
+            self.edges = new_edges
+            lo, hi = new_lo, new_hi
+        counts, _ = np.histogram(x, bins=self.nbins, range=(lo, hi))
+        self.counts = self.counts + counts
+
+    # -- range selection -----------------------------------------------------
+
+    def range_minmax(self) -> Tuple[float, float]:
+        assert np.isfinite(self.mn), "Observer.update never called"
+        return float(self.mn), float(self.mx)
+
+    def range_percentile(self, percentile: float) -> Tuple[float, float]:
+        """Clip each tail to ``(100 - percentile)/2`` % of the observed
+        mass (two-sided, asymmetric-friendly); the selected edges come
+        from the histogram grid, min/max-clamped."""
+        assert 50.0 < percentile <= 100.0, percentile
+        assert self.counts is not None, "Observer.update never called"
+        total = float(self.counts.sum())
+        if total == 0.0:
+            return self.range_minmax()
+        tail = total * (100.0 - percentile) / 100.0 / 2.0
+        cum = np.cumsum(self.counts)
+        lo_bin = int(np.searchsorted(cum, tail, side="right"))
+        hi_bin = int(np.searchsorted(cum, total - tail, side="left"))
+        lo_bin = min(lo_bin, self.nbins - 1)
+        hi_bin = max(min(hi_bin, self.nbins - 1), lo_bin)
+        lo = max(float(self.edges[lo_bin]), self.mn)
+        hi = min(float(self.edges[hi_bin + 1]), self.mx)
+        return min(lo, hi), max(lo, hi)
+
+    def range_mse(self, grid: int = 24) -> Tuple[float, float]:
+        """Coordinate search over clipped ranges for the one minimizing
+        the int8 quantization MSE of the histogram mass (bin centers
+        weighted by counts, clipped values saturate — exactly what the
+        int8 path does to them).  The full min/max range is always a
+        candidate, so ``mse`` can never select something worse than
+        ``minmax`` *on the calibration distribution itself*."""
+        mn, mx = self.range_minmax()
+        if mn == mx:
+            return mn, mx
+        centers = ((self.edges[:-1] + self.edges[1:]) * 0.5)
+        weights = np.asarray(self.counts, np.float64)
+
+        def err(lo: float, hi: float) -> float:
+            lo2, hi2 = min(lo, 0.0), max(hi, 0.0)
+            scale = (hi2 - lo2) / float(QMAX - QMIN)
+            if scale <= 0.0:
+                return np.inf
+            zp = np.floor(QMIN - lo2 / scale + 0.5)
+            q = np.clip(np.floor(centers / scale + 0.5) + zp, QMIN, QMAX)
+            deq = (q - zp) * scale
+            return float(((centers - deq) ** 2 * weights).sum())
+
+        los = mn * np.linspace(1.0, 1.0 / grid, grid) if mn < 0 else [mn]
+        his = mx * np.linspace(1.0, 1.0 / grid, grid) if mx > 0 else [mx]
+        best = (err(mn, mx), mn, mx)
+        lo = mn
+        for _ in range(2):  # alternate the two ends (coordinate descent)
+            for h in his:
+                e = err(lo, float(h))
+                if e < best[0]:
+                    best = (e, lo, float(h))
+            hi = best[2]
+            for l_ in los:
+                e = err(float(l_), hi)
+                if e < best[0]:
+                    best = (e, float(l_), hi)
+            lo = best[1]
+        return best[1], best[2]
+
+    def select_range(self, method: str,
+                     percentile: float = 99.99) -> Tuple[float, float]:
+        if method == "minmax":
+            return self.range_minmax()
+        if method == "percentile":
+            return self.range_percentile(percentile)
+        if method == "mse":
+            return self.range_mse()
+        raise ValueError(
+            f"unknown calibration method {method!r}; "
+            f"expected one of {CALIBRATION_METHODS}")
 
 
 @dataclass
@@ -124,6 +283,15 @@ class QuantizedGraph:
     graph: CNNGraph
     acts: Dict[str, QParams]          # layer name -> output qparams
     weights: Dict[str, LayerQuant] = field(default_factory=dict)
+    # how the activation ranges were selected (threads through session
+    # info, autotune cache keys, and benchmark records)
+    method: str = "minmax"
+    percentile: float = 99.99
+    # the selected (lo, hi) float range per observed tensor — what the
+    # method actually chose, before the zero-widening in
+    # qparams_from_range (debug/info; Concat entries are the union of
+    # their branches' calibrated ranges)
+    ranges: Dict[str, Tuple[float, float]] = field(default_factory=dict)
 
     # -- qparam lookups ------------------------------------------------------
 
@@ -213,12 +381,37 @@ def check_quantizable(graph: CNNGraph) -> None:
             "layer to dequantize into")
 
 
-def calibrate(graph: CNNGraph, xs: np.ndarray) -> Dict[str, QParams]:
-    """Run the calibration batch through the XLA float oracle and record
-    per-tensor (post-activation) ranges for every layer output."""
+def calibrate(graph: CNNGraph, xs: np.ndarray, *,
+              method: str = "minmax",
+              percentile: float = 99.99,
+              nbins: int = 2048,
+              chunk_size: int = 8,
+              ranges_out: Optional[Dict[str, Tuple[float, float]]] = None,
+              ) -> Dict[str, QParams]:
+    """Stream the calibration batch through the float oracle in chunks
+    and derive per-tensor (post-activation) qparams.
+
+    Each chunk runs layer by layer; every observed tensor updates its
+    :class:`Observer` (exact min/max + fixed-bin histogram) and is
+    dropped as soon as its last in-chunk consumer has run — peak
+    calibration memory is one chunk's live set, not the whole
+    calibration batch across all layers.  ``method`` selects the range
+    per tensor (see :data:`CALIBRATION_METHODS`).
+
+    Per-branch rule for multi-input layers: qparams are selected on
+    each *producer* tensor independently (so a Concat branch with a
+    narrow range is clipped on its own distribution), and a Concat
+    output takes the **union of its branches' calibrated ranges** —
+    the generated C and the jax reference then requantize each input
+    edge with its own ``rescale(layer, idx)`` multiplier.
+    """
     from . import jax_exec  # deferred: keep quantize importable sans jax
     import jax.numpy as jnp
 
+    if method not in CALIBRATION_METHODS:
+        raise ValueError(
+            f"unknown calibration method {method!r}; "
+            f"expected one of {CALIBRATION_METHODS}")
     xs = np.asarray(xs, np.float32)
     if xs.ndim == 3:
         xs = xs[None]
@@ -226,22 +419,60 @@ def calibrate(graph: CNNGraph, xs: np.ndarray) -> Dict[str, QParams]:
         f"calibration batch must be (N,)+{tuple(graph.input_shape)}, "
         f"got {xs.shape}")
 
-    vals: Dict[str, "jnp.ndarray"] = {}
-    x = jnp.asarray(xs)
+    # layers whose qparams are derived, not observed: identity/MaxPool
+    # share their producer's; Concat takes the union of its branches
+    derived = {l.name for l in graph.layers
+               if isinstance(l, _SHARE_INPUT_QPARAMS + (Concat,))}
+    # refcounts for in-chunk eviction (a value dies after its last use;
+    # the sink is kept through its own step only)
+    n_consumers: Dict[str, int] = {l.name: 0 for l in graph.layers}
     for layer in graph.layers:
-        if isinstance(layer, Input):
-            vals[layer.name] = x
-        else:
-            vals[layer.name] = jax_exec._apply(
-                layer, [vals[n] for n in layer.inputs])
+        for src in layer.inputs:
+            n_consumers[src] += 1
 
+    observers: Dict[str, Observer] = {
+        l.name: Observer(nbins) for l in graph.layers
+        if l.name not in derived}
+
+    chunk_size = max(1, int(chunk_size))
+    for c0 in range(0, len(xs), chunk_size):
+        x = jnp.asarray(xs[c0:c0 + chunk_size])
+        vals: Dict[str, "jnp.ndarray"] = {}
+        pending: Dict[str, int] = dict(n_consumers)
+        for layer in graph.layers:
+            if isinstance(layer, Input):
+                vals[layer.name] = x
+            else:
+                vals[layer.name] = jax_exec._apply(
+                    layer, [vals[n] for n in layer.inputs])
+            if layer.name in observers:
+                observers[layer.name].update(np.asarray(vals[layer.name]))
+            for src in layer.inputs:
+                pending[src] -= 1
+                if pending[src] == 0:
+                    del vals[src]  # streaming: chunk-local liveness
+            if pending[layer.name] == 0:
+                del vals[layer.name]
+
+    ranges: Dict[str, Tuple[float, float]] = {}
     acts: Dict[str, QParams] = {}
     for layer in graph.layers:
+        name = layer.name
         if isinstance(layer, _SHARE_INPUT_QPARAMS):
-            acts[layer.name] = acts[layer.inputs[0]]
+            acts[name] = acts[layer.inputs[0]]
+            ranges[name] = ranges[layer.inputs[0]]
             continue
-        v = np.asarray(vals[layer.name])
-        acts[layer.name] = qparams_from_range(v.min(), v.max())
+        if isinstance(layer, Concat):
+            # per-branch: union of the branches' calibrated ranges
+            branch = [ranges[n] for n in layer.inputs]
+            lo = min(b[0] for b in branch)
+            hi = max(b[1] for b in branch)
+            ranges[name] = (lo, hi)
+        else:
+            ranges[name] = observers[name].select_range(method, percentile)
+        acts[name] = qparams_from_range(*ranges[name])
+    if ranges_out is not None:
+        ranges_out.update(ranges)
     return acts
 
 
@@ -287,25 +518,61 @@ def quantize_graph(graph: CNNGraph,
     return qg
 
 
-def quantize(graph: CNNGraph, calibration: np.ndarray) -> QuantizedGraph:
-    """The two-step pipeline: calibrate on samples, annotate the graph."""
-    return quantize_graph(graph, calibrate(graph, calibration))
+def quantize(graph: CNNGraph, calibration: np.ndarray, *,
+             method: str = "minmax",
+             percentile: float = 99.99,
+             nbins: int = 2048,
+             chunk_size: int = 8) -> QuantizedGraph:
+    """The two-step pipeline: calibrate on samples (streaming histogram
+    observers, range selection per ``method``), annotate the graph."""
+    ranges: Dict[str, Tuple[float, float]] = {}
+    acts = calibrate(graph, calibration, method=method,
+                     percentile=percentile, nbins=nbins,
+                     chunk_size=chunk_size, ranges_out=ranges)
+    qg = quantize_graph(graph, acts)
+    qg.method = method
+    qg.percentile = percentile
+    qg.ranges = ranges
+    return qg
+
+
+def qparams_digest(qg: QuantizedGraph) -> str:
+    """Content hash of the calibration outcome (method + every
+    activation qparam).  Two sessions whose calibration differs —
+    different data, method, or percentile — must not share autotune
+    cache entries for the int8 build, because the generated C embeds
+    the qparams."""
+    h = hashlib.sha256()
+    h.update(f"{qg.method}:{qg.percentile!r};".encode())
+    for name in sorted(qg.acts):
+        qp = qg.acts[name]
+        h.update(f"{name}={np.float32(qp.scale).tobytes().hex()}"
+                 f",{qp.zero_point};".encode())
+    return h.hexdigest()[:16]
 
 
 def quantization_error(qg: QuantizedGraph,
                        xs: np.ndarray,
                        ref: Optional[np.ndarray] = None) -> dict:
     """Accuracy probe: int8 vs float oracle on a batch — max |Δ| and
-    top-1 agreement over the channel axis (the calibration-set gate)."""
+    top-1 agreement over the channel axis (the calibration-set gate).
+
+    For a 4-D (N, h, w, c) output the argmax is taken over the channel
+    axis at **every spatial position** (a spatial sink like the robot
+    detector head is h*w independent classifications, not one flat
+    h*w*c argmax); flat outputs argmax over everything but the batch."""
     from . import jax_exec
     xs = np.asarray(xs, np.float32)
     if ref is None:
         ref = np.asarray(jax_exec.make_vmap_forward(qg.graph)(xs))
     got = np.asarray(jax_exec.forward_quantized(qg, xs))
-    ref_f = ref.reshape(ref.shape[0], -1)
-    got_f = got.reshape(got.shape[0], -1)
+    ref = np.asarray(ref).reshape(got.shape)
+    if got.ndim == 4:  # per-position channel argmax
+        agree = (got.argmax(-1) == ref.argmax(-1)).mean()
+    else:
+        agree = (got.reshape(got.shape[0], -1).argmax(-1)
+                 == ref.reshape(ref.shape[0], -1).argmax(-1)).mean()
     return {
-        "max_abs_err": float(np.abs(got_f - ref_f).max()),
-        "top1_agreement": float(
-            (got_f.argmax(-1) == ref_f.argmax(-1)).mean()),
+        "max_abs_err": float(np.abs(got - ref).max()),
+        "top1_agreement": float(agree),
     }

@@ -119,3 +119,35 @@ def ball_image_batch(n: int, *, res: int = 16, seed: int = 0, step: int = 0):
                 w = rng.integers(2, 6)
                 imgs[i, :w, :, 0] += rng.uniform(0.4, 0.6)
     return np.clip(imgs, 0, 1), labels.astype(np.int32)
+
+
+def camera_frame_batch(n: int, shape, *, seed: int = 0,
+                       blur_passes: int = 2, blur_k: int = 5) -> np.ndarray:
+    """Synthetic camera-like frames for int8 calibration: smooth,
+    bounded [0, 1] images with per-frame brightness/contrast jitter.
+
+    The paper's CNNs consume camera images; calibrating activation
+    ranges on unbounded white noise (the old benchmark default) is
+    unrepresentative of deployment and inflates every per-tensor range.
+    These frames are spatially-correlated uniform noise (separable box
+    blur), contrast-stretched per frame, then gain/offset-jittered so
+    the calibration set covers a spread of exposure conditions.
+    Deterministic in ``(seed)``; returns ``(n, *shape)`` float32."""
+    rng = _rng_for(seed, 0, 1)
+    h, w, c = shape
+    imgs = rng.uniform(0, 1, (n, h, w, c)).astype(np.float32)
+    half = blur_k // 2
+    for _ in range(blur_passes):
+        # separable box blur via padded cumulative sums (no scipy dep)
+        s = np.cumsum(np.pad(imgs, ((0, 0), (half + 1, half), (0, 0),
+                                    (0, 0)), mode="edge"), axis=1)
+        imgs = (s[:, blur_k:] - s[:, :-blur_k]) / blur_k
+        s = np.cumsum(np.pad(imgs, ((0, 0), (0, 0), (half + 1, half),
+                                    (0, 0)), mode="edge"), axis=2)
+        imgs = (s[:, :, blur_k:] - s[:, :, :-blur_k]) / blur_k
+    mn = imgs.min(axis=(1, 2, 3), keepdims=True)
+    mx = imgs.max(axis=(1, 2, 3), keepdims=True)
+    imgs = (imgs - mn) / np.maximum(mx - mn, 1e-6)
+    gain = rng.uniform(0.6, 1.0, (n, 1, 1, 1)).astype(np.float32)
+    offset = rng.uniform(0.0, 0.3, (n, 1, 1, 1)).astype(np.float32)
+    return np.clip(imgs * gain + offset, 0.0, 1.0).astype(np.float32)

@@ -61,6 +61,13 @@ class InferenceSession:
               normal images (fine for smoke tests — use real data for
               deployment).
     calib_samples: size of the default calibration batch.
+    calibration_method: activation range selection — ``"minmax"``
+              (exact observed range, the default), ``"percentile"``
+              (clip outlier tails at ``calibration_percentile``), or
+              ``"mse"`` (histogram-MSE-optimal clipped range).  See
+              :data:`repro.core.quantize.CALIBRATION_METHODS`.
+    calibration_percentile: the two-sided keep-mass for
+              ``calibration_method="percentile"`` (e.g. 99.99).
     """
 
     def __init__(self, graph: CNNGraph, backend: str = "c", *,
@@ -75,8 +82,12 @@ class InferenceSession:
                  func_name: str = "nncg_net",
                  precision: str = "fp32",
                  calibration: Optional[np.ndarray] = None,
-                 calib_samples: int = 32):
+                 calib_samples: int = 32,
+                 calibration_method: str = "minmax",
+                 calibration_percentile: float = 99.99):
         assert precision in ("fp32", "int8"), precision
+        assert calibration_method in quantize_mod.CALIBRATION_METHODS, \
+            calibration_method
         self.backend_name = backend
         self.precision = precision
         self.simd = simd or runtime.best_isa()
@@ -97,7 +108,9 @@ class InferenceSession:
                 calibration = np.random.default_rng(0).normal(
                     size=(calib_samples,) + tuple(self.graph.input_shape)
                 ).astype(np.float32)
-            self.qgraph = quantize_mod.quantize(self.graph, calibration)
+            self.qgraph = quantize_mod.quantize(
+                self.graph, calibration, method=calibration_method,
+                percentile=calibration_percentile)
             self._init_int8(backend, candidates, threads, func_name,
                             tune_iters, autotune, tune_cache)
             return
@@ -159,8 +172,12 @@ class InferenceSession:
                     cands.insert(0, "avx")
             cache = (tune_cache if isinstance(tune_cache, TuningCache)
                      else TuningCache(tune_cache))
+            # the generated int8 C embeds the calibration-derived
+            # qparams, so the cache key must carry them: a different
+            # calibration set/method is a different program
+            qdigest = quantize_mod.qparams_digest(self.qgraph)
             key = cache.key(self.graph, "+".join(cands),
-                            extra=f"int8:i{tune_iters}")
+                            extra=f"int8:{qdigest}:i{tune_iters}")
             rec = cache.get(key)
             if rec is not None and rec.get("simd") in cands:
                 self.simd = rec["simd"]
@@ -249,6 +266,9 @@ class InferenceSession:
             d["quantized_layers"] = sorted(self.qgraph.weights)
             d["input_qparams"] = (self.qgraph.input_qp.scale,
                                   self.qgraph.input_qp.zero_point)
+            d["calibration_method"] = self.qgraph.method
+            if self.qgraph.method == "percentile":
+                d["calibration_percentile"] = self.qgraph.percentile
         if self.tuned is not None:
             d.update(levels=self.tuned.levels,
                      tuned_us_per_call=self.tuned.us_per_call,

@@ -32,16 +32,21 @@ CASES = [
     ("ball", ball_classifier, 0),       # paper CNN, fully unrolled
     ("ball", ball_classifier, None),    # paper CNN, rolled loops
     ("residual", residual_cnn, None),   # DAG config (Add/Concat/depthwise)
-    ("ball", ball_classifier, "int8"),      # post-training-quantized build
-    ("residual", residual_cnn, "int8"),     # quantized DAG build
+    # post-training-quantized builds, one per calibration method (the
+    # requant constants differ; the emitted C must stay strict-ANSI
+    # regardless of how the ranges were selected)
+    ("ball", ball_classifier, "int8:minmax"),
+    ("ball", ball_classifier, "int8:mse"),
+    # quantized DAG build: per-branch Concat requant under percentile
+    ("residual", residual_cnn, "int8:percentile"),
 ]
 
 
-def _quantized_source(graph) -> str:
+def _quantized_source(graph, method: str) -> str:
     import numpy as np
     xs = np.random.default_rng(0).normal(
         size=(8,) + tuple(graph.input_shape)).astype(np.float32)
-    qg = quantize.quantize(graph, xs)
+    qg = quantize.quantize(graph, xs, method=method)
     return cgen.generate_quantized_c(
         qg, cgen.CodegenOptions(simd="generic"))
 
@@ -55,8 +60,8 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as tmp:
         for name, builder, unroll in CASES:
             g = passes.optimize(builder(), simd_multiple=1)
-            if unroll == "int8":
-                src = _quantized_source(g)
+            if isinstance(unroll, str) and unroll.startswith("int8"):
+                src = _quantized_source(g, unroll.split(":")[1])
             else:
                 src = cgen.generate_c(
                     g, cgen.CodegenOptions(simd="generic", unroll=unroll))
