@@ -43,7 +43,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs.cnn_paper import EXTRA_CNNS, PAPER_CNNS  # noqa: E402
 from repro.core import runtime  # noqa: E402
 from repro.data.pipeline import camera_frame_batch  # noqa: E402
-from repro.engine import InferenceSession  # noqa: E402
+from repro.engine import (CalibrationConfig, InferenceSession,  # noqa: E402
+                          SessionConfig)
 
 ITERS = {"ball": 20000, "pedestrian": 3000, "robot": 800, "residual": 5000}
 ALL_CNNS = {**PAPER_CNNS, **EXTRA_CNNS}
@@ -78,14 +79,16 @@ def _bench_cnn(name: str):
     x = np.random.default_rng(0).normal(
         size=g.input_shape).astype(np.float32)
 
-    tuned = InferenceSession(g, backend="c", autotune=True, simd=simd,
-                             tune_iters=tune_iters)
-    untuned = InferenceSession(g, backend="c", simd=simd)
-    int8 = InferenceSession(g, backend="c", precision="int8",
-                            calibration=calib,
-                            calibration_method=CALIBRATION_METHOD,
-                            autotune=True, tune_iters=tune_iters)
-    xla = InferenceSession(g, backend="xla")
+    tuned = InferenceSession(g, config=SessionConfig(
+        backend="c", autotune=True, simd=simd, tune_iters=tune_iters))
+    untuned = InferenceSession(g, config=SessionConfig(backend="c",
+                                                       simd=simd))
+    int8 = InferenceSession(g, config=SessionConfig(
+        backend="c", precision="int8", autotune=True,
+        tune_iters=tune_iters,
+        calibration=CalibrationConfig(data=calib,
+                                      method=CALIBRATION_METHOD)))
+    xla = InferenceSession(g, config=SessionConfig(backend="xla"))
 
     # correctness gates before timing
     ref = xla.predict(x)
@@ -161,19 +164,20 @@ def bench_table7_features():
     sse = "sse" if runtime.host_supports_ssse3() else "structured"
 
     sessions = {
-        "general": InferenceSession(g, backend="c", simd="generic",
-                                    unroll=None),
-        "simd": InferenceSession(g, backend="c", simd=sse, unroll=None),
-        "simd_full_unroll": InferenceSession(g, backend="c", simd=sse,
-                                             unroll="auto"),
-        "simd_autotuned": InferenceSession(
-            g, backend="c", simd=sse, autotune=True,
-            tune_iters=max(200, iters // 20)),
+        "general": InferenceSession(g, config=SessionConfig(
+            backend="c", simd="generic", unroll=None)),
+        "simd": InferenceSession(g, config=SessionConfig(
+            backend="c", simd=sse, unroll=None)),
+        "simd_full_unroll": InferenceSession(g, config=SessionConfig(
+            backend="c", simd=sse, unroll="auto")),
+        "simd_autotuned": InferenceSession(g, config=SessionConfig(
+            backend="c", simd=sse, autotune=True,
+            tune_iters=max(200, iters // 20))),
     }
     if runtime.host_supports_avx2():  # the paper's named future work
         sessions["avx_fma_autotuned"] = InferenceSession(
-            g, backend="c", simd="avx", autotune=True,
-            tune_iters=max(200, iters // 20))
+            g, config=SessionConfig(backend="c", simd="avx", autotune=True,
+                                    tune_iters=max(200, iters // 20)))
 
     rows = {}
     t_gen = None
@@ -194,8 +198,18 @@ def _persist() -> None:
         "machine": platform.machine(),
         "python": platform.python_version(),
     }
+    # read-modify-write: other benchmarks (serve_bench) own their own
+    # top-level sections — don't clobber them
+    merged = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(RESULTS)
     with open(BENCH_JSON, "w") as f:
-        json.dump(RESULTS, f, indent=1, sort_keys=True)
+        json.dump(merged, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"# wrote {os.path.normpath(BENCH_JSON)}")
 

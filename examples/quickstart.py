@@ -19,7 +19,7 @@ import numpy as np
 from repro.configs.cnn_paper import trained_ball_classifier
 from repro.core import runtime
 from repro.data.pipeline import ball_image_batch
-from repro.engine import InferenceSession
+from repro.engine import CalibrationConfig, InferenceSession, SessionConfig
 
 # ---------------------------------------------------------------- 1. train
 print("training ball classifier on synthetic balls ...")
@@ -34,15 +34,15 @@ xs, ys = ball_image_batch(2000, seed=99, step=0)
 # codegen variant (paper Table VII selection, cached on disk), compiles
 # the winner with the host cc, and serves batches.
 simd = "sse" if runtime.host_supports_ssse3() else "structured"
-sess = InferenceSession(trained, backend="c", autotune=True, simd=simd,
-                        tune_iters=500)
+sess = InferenceSession(trained, config=SessionConfig(
+    backend="c", autotune=True, simd=simd, tune_iters=500))
 info = sess.info
 print(f"generated {info['c_source_bytes']/1e3:.0f} KB of C, "
       f"compiled to {info['so_path']}")
 print(f"autotuned per-layer unroll levels: {info['levels']} "
       f"(from_cache={info['tuned_from_cache']})")
 
-oracle = InferenceSession(trained, backend="xla", simd=simd)
+oracle = InferenceSession(trained, config=SessionConfig(backend="xla"))
 x = xs[0]
 ref = oracle.predict(x)
 np.testing.assert_allclose(sess.predict(x), ref, rtol=1e-3, atol=1e-5)
@@ -74,9 +74,9 @@ for method in quantize.CALIBRATION_METHODS:
     print(f"  {method:10s} top-1 agreement {st['top1_agreement']:.4f}  "
           f"max|err| {st['max_abs_err']:.5f}")
 
-qsess = InferenceSession(trained, backend="c", precision="int8",
-                         calibration=xs[:64],
-                         calibration_method="percentile")
+qsess = InferenceSession(trained, config=SessionConfig(
+    backend="c", precision="int8",
+    calibration=CalibrationConfig(data=xs[:64], method="percentile")))
 qpred = qsess.predict(xs[:256])
 
 pred = np.argmax(oracle.predict(xs[:256]).reshape(256, -1), -1)

@@ -76,7 +76,7 @@ Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
 
 # bump whenever the emitted C changes for the same (graph, options) —
 # cached artifacts measured on older generated code must not be reused
-CODEGEN_VERSION = 4
+CODEGEN_VERSION = 5
 
 # the single source of truth for the unroll/icache emission budget
 # (both CodegenOptions.term_budget and choose_levels read it)
@@ -156,6 +156,12 @@ class CodegenOptions:
     @property
     def batch_func_name(self) -> str:
         return self.func_name + "_batch"
+
+    @property
+    def batch_ws_func_name(self) -> str:
+        """Reentrant batch entry: N images through one foreign call,
+        caller-provided workspace — the serving worker-pool hot path."""
+        return self.func_name + "_batch_ws"
 
     @property
     def ws_func_name(self) -> str:
@@ -1177,19 +1183,28 @@ class CGenerator:
         w.close()
 
         if opts.emit_batch:
-            # serving entry point: N images through the single-image
-            # function (sequential over the static arena; thread-parallel
-            # callers drive <func>_ws with per-thread workspaces)
+            # serving entry points: N images through the single-image
+            # function.  <func>_batch runs over the static arena;
+            # <func>_batch_ws takes a caller workspace, so a server
+            # worker pool pushes whole batches through one foreign call
+            # per batch, each worker on its own arena.
             in_n = int(np.prod(g.input_shape))
             out_n = int(np.prod(smap[g.sink.name]))
+            w("")
+            w.open(f"void {opts.batch_ws_func_name}("
+                   f"const float *NNCG_RESTRICT x, "
+                   f"float *NNCG_RESTRICT out, int n, "
+                   f"float *NNCG_RESTRICT workspace)")
+            w("int b;")
+            w(f"for (b = 0; b < n; ++b) "
+              f"{opts.ws_func_name}(x + (long)b * {in_n}, "
+              f"out + (long)b * {out_n}, workspace);")
+            w.close()
             w("")
             w.open(f"void {opts.batch_func_name}("
                    f"const float *NNCG_RESTRICT x, "
                    f"float *NNCG_RESTRICT out, int n)")
-            w("int b;")
-            w(f"for (b = 0; b < n; ++b) "
-              f"{opts.func_name}(x + (long)b * {in_n}, "
-              f"out + (long)b * {out_n});")
+            w(f"{opts.batch_ws_func_name}(x, out, n, {arena});")
             w.close()
 
         hdr = _W()
@@ -1870,13 +1885,20 @@ class QuantCGenerator(CGenerator):
             in_n = int(np.prod(g.input_shape))
             out_n = int(np.prod(smap[sink.name]))
             w("")
+            w.open(f"void {opts.batch_ws_func_name}("
+                   f"const float *NNCG_RESTRICT x, "
+                   f"float *NNCG_RESTRICT out, int n, "
+                   f"signed char *NNCG_RESTRICT workspace)")
+            w("int b;")
+            w(f"for (b = 0; b < n; ++b) "
+              f"{opts.ws_func_name}(x + (long)b * {in_n}, "
+              f"out + (long)b * {out_n}, workspace);")
+            w.close()
+            w("")
             w.open(f"void {opts.batch_func_name}("
                    f"const float *NNCG_RESTRICT x, "
                    f"float *NNCG_RESTRICT out, int n)")
-            w("int b;")
-            w(f"for (b = 0; b < n; ++b) "
-              f"{opts.func_name}(x + (long)b * {in_n}, "
-              f"out + (long)b * {out_n});")
+            w(f"{opts.batch_ws_func_name}(x, out, n, {arena});")
             w.close()
 
         hdr = _W()

@@ -144,6 +144,17 @@ class CompiledNet:
             self._ws_fn.restype = None
             self._ws_fn.argtypes = [FLOATP, FLOATP,
                                     ctypes.POINTER(self._ws_ctype)]
+        # reentrant batch entry: a whole batch in ONE foreign call on a
+        # caller workspace — the serving worker-pool hot path
+        self._batch_ws_fn = None
+        try:
+            self._batch_ws_fn = getattr(lib, self.func_name + "_batch_ws")
+        except AttributeError:  # older .so without the entry
+            pass
+        else:
+            self._batch_ws_fn.restype = None
+            self._batch_ws_fn.argtypes = [FLOATP, FLOATP, ctypes.c_int,
+                                          ctypes.POINTER(self._ws_ctype)]
 
     def _alloc_workspace(self) -> np.ndarray:
         if self.precision == "int8":
@@ -191,11 +202,22 @@ class CompiledNet:
         FLOATP = ctypes.POINTER(ctypes.c_float)
         k = min(threads, n)
         xf = x.reshape(-1)
+        # contiguous chunk per thread: with the reentrant batch entry
+        # each thread is ONE foreign call for its whole chunk
+        bounds = [(n * t) // k for t in range(k + 1)]
 
         def run(t: int) -> None:
             ws = self._alloc_workspace()
             wp = ws.ctypes.data_as(ctypes.POINTER(self._ws_ctype))
-            for b in range(t, n, k):
+            lo, hi = bounds[t], bounds[t + 1]
+            if self._batch_ws_fn is not None:
+                xi = xf[lo * self.in_size:hi * self.in_size]
+                oi = out[lo * self.out_size:hi * self.out_size]
+                self._batch_ws_fn(xi.ctypes.data_as(FLOATP),
+                                  oi.ctypes.data_as(FLOATP),
+                                  ctypes.c_int(hi - lo), wp)
+                return
+            for b in range(lo, hi):
                 xi = xf[b * self.in_size:(b + 1) * self.in_size]
                 oi = out[b * self.out_size:(b + 1) * self.out_size]
                 self._ws_fn(xi.ctypes.data_as(FLOATP),

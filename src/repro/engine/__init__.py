@@ -4,12 +4,15 @@ from .autotune import (Autotuner, TuneResult, TuningCache, cc_fingerprint,
                        graph_fingerprint, tune_best_simd)
 from .backends import (Backend, available_backends, get_backend,
                        register_backend)
+from .config import CalibrationConfig, SessionConfig
 from .session import InferenceSession
 
 __all__ = [
     "Autotuner",
     "Backend",
+    "CalibrationConfig",
     "InferenceSession",
+    "SessionConfig",
     "TuneResult",
     "TuningCache",
     "available_backends",

@@ -11,11 +11,18 @@ substrates — the paper's deployment artifact plus its two baselines:
 * ``"pallas"`` — the Pallas TPU kernels (interpret mode on CPU,
   Mosaic on TPU).
 
-New substrates register with :func:`register_backend` — the engine and
-every caller dispatch purely by name.
+``Backend`` is a formal ABC, not duck typing: every substrate
+implements ``predict_batch`` and inherits ``describe()`` (a stable
+dict of what this backend is), ``close()`` (release native resources;
+default no-op), and ``worker()`` (a reentrant execution handle for
+server worker pools — see :mod:`repro.serve`).  New substrates
+register with :func:`register_backend`; the engine and every caller
+dispatch purely by name through :func:`get_backend`.
 """
 from __future__ import annotations
 
+import abc
+import ctypes
 import time
 from typing import Dict, List, Optional, Type
 
@@ -31,6 +38,9 @@ def register_backend(name: str):
     """Class decorator: make a backend constructible by name."""
 
     def deco(cls: Type["Backend"]) -> Type["Backend"]:
+        if not (isinstance(cls, type) and issubclass(cls, Backend)):
+            raise TypeError(
+                f"register_backend({name!r}): {cls!r} must subclass Backend")
         cls.name = name
         _REGISTRY[name] = cls
         return cls
@@ -51,19 +61,54 @@ def available_backends() -> List[str]:
     return sorted(_REGISTRY)
 
 
-class Backend:
-    """One execution substrate. Constructed with an *optimized* graph
-    (passes already applied); ``predict_batch`` maps ``(N, *in_shape)``
-    float32 to ``(N, *out_shape)`` float32."""
+class Backend(abc.ABC):
+    """One execution substrate — the engine's formal serving interface.
+
+    Constructed with an *optimized* graph (passes already applied).
+    Required: :meth:`predict_batch` maps ``(N, *in_shape)`` float32 to
+    ``(N, *out_shape)`` float32.  Optional overrides: :meth:`describe`
+    (extend the base dict with substrate facts), :meth:`close` (release
+    native resources), :meth:`worker` (hand a server worker a handle it
+    may call concurrently with other workers' handles).
+    """
 
     name = "?"
+    precision = "fp32"
 
     def __init__(self, graph: CNNGraph):
         self.graph = graph
         self.out_shape = graph.output_shape
 
+    @abc.abstractmethod
     def predict_batch(self, x: np.ndarray) -> np.ndarray:
-        raise NotImplementedError
+        """``(N, *in_shape)`` float32 -> ``(N, *out_shape)`` float32."""
+
+    def describe(self) -> dict:
+        """Stable facts about this backend (extended by subclasses)."""
+        return {
+            "name": self.name,
+            "precision": self.precision,
+            "input_shape": tuple(self.graph.input_shape),
+            "output_shape": tuple(self.out_shape),
+        }
+
+    def close(self) -> None:
+        """Release backend resources. Idempotent; default no-op."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def worker(self) -> "Backend":
+        """An execution handle a server worker thread may use
+        concurrently with other workers' handles.  Substrates whose
+        ``predict_batch`` is already reentrant (jit-compiled jax
+        functions) return ``self``; substrates with per-call scratch
+        state (the C arena) return a handle owning private scratch."""
+        return self
 
     def time_per_call_us(self, x: np.ndarray, iters: int = 500,
                          warmup: int = 20) -> float:
@@ -75,6 +120,44 @@ class Backend:
         for _ in range(iters):
             self.predict_batch(xb)
         return (time.perf_counter() - t0) / iters * 1e6
+
+
+class _CArenaWorker(Backend):
+    """A per-thread handle on a compiled net: one warm liveness-planned
+    workspace, driven through the reentrant ``<func>_ws`` entry.  Many
+    of these can run concurrently against the same ``.so`` — ctypes
+    releases the GIL during the call."""
+
+    name = "c-worker"
+
+    def __init__(self, parent: "CBackend"):
+        super().__init__(parent.graph)
+        self.name = parent.name + "-worker"
+        self.precision = parent.precision
+        self._net = parent.net
+        self._ws = self._net._alloc_workspace()
+        self._wp = self._ws.ctypes.data_as(
+            ctypes.POINTER(self._net._ws_ctype))
+
+    def predict_batch(self, x: np.ndarray) -> np.ndarray:
+        net = self._net
+        x = np.ascontiguousarray(x, dtype=np.float32)
+        n = x.size // net.in_size
+        out = np.empty(n * net.out_size, dtype=np.float32)
+        FLOATP = ctypes.POINTER(ctypes.c_float)
+        if net._batch_ws_fn is not None:
+            # the whole batch in one GIL-releasing foreign call
+            net._batch_ws_fn(x.ctypes.data_as(FLOATP),
+                             out.ctypes.data_as(FLOATP),
+                             ctypes.c_int(n), self._wp)
+            return out.reshape((n,) + self.out_shape)
+        xf = x.reshape(-1)
+        for b in range(n):
+            xi = xf[b * net.in_size:(b + 1) * net.in_size]
+            oi = out[b * net.out_size:(b + 1) * net.out_size]
+            net._ws_fn(xi.ctypes.data_as(FLOATP),
+                       oi.ctypes.data_as(FLOATP), self._wp)
+        return out.reshape((n,) + self.out_shape)
 
 
 @register_backend("c")
@@ -101,6 +184,7 @@ class CBackend(Backend):
         self.threads = threads
         self.qgraph = qgraph
         if qgraph is not None:
+            self.precision = "int8"
             self.net = runtime.build_quantized(qgraph, self.opts)
         else:
             self.net = runtime.build(graph, self.opts)
@@ -109,6 +193,22 @@ class CBackend(Backend):
         n = x.shape[0]
         out = self.net.predict_batch(x, threads=self.threads)
         return out.reshape((n,) + self.out_shape)
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(simd=self.opts.simd, threads=self.threads,
+                 so_path=self.net.so_path,
+                 c_source_bytes=self.net.c_source_bytes,
+                 arena_bytes=self.net.arena_bytes,
+                 arena_buffer_sum_bytes=self.net.arena_buffer_sum_bytes,
+                 per_layer_live_bytes=dict(
+                     self.net.per_layer_live_bytes or {}))
+        return d
+
+    def worker(self) -> Backend:
+        if self.net._ws_fn is None:  # pre-arena .so: not reentrant
+            return self
+        return _CArenaWorker(self)
 
     def time_per_call_us(self, x: np.ndarray, iters: int = 500,
                          warmup: int = 20) -> float:
@@ -167,6 +267,7 @@ class QuantizedXLABackend(_JaxBackend):
     the calibrated ``QuantizedGraph``, not just a graph)."""
 
     name = "xla-int8"
+    precision = "int8"
 
     def __init__(self, qgraph):
         self.qgraph = qgraph

@@ -1,0 +1,152 @@
+"""Typed, frozen session configuration.
+
+:class:`InferenceSession` grew one keyword argument per PR until
+constructing it programmatically (the serving layer, benchmark sweeps,
+config files) meant threading seventeen loosely-validated kwargs.
+:class:`SessionConfig` is the consolidation: one frozen dataclass, one
+nested :class:`CalibrationConfig` for the int8 calibration knobs,
+validation at construction time, and a stable JSON-safe ``to_dict()``
+that round-trips::
+
+    cfg = SessionConfig(backend="c", autotune=True, precision="int8")
+    sess = InferenceSession(graph, config=cfg)
+    assert SessionConfig(**sess.info["config"]) == cfg.portable()
+
+The legacy per-kwarg path (``InferenceSession(graph, backend="c",
+autotune=True, ...)``) still works through a deprecation shim in
+``session.py`` that builds a ``SessionConfig`` internally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.core import quantize as quantize_mod
+
+_PRECISIONS = ("fp32", "int8")
+
+
+@dataclass(frozen=True)
+class CalibrationConfig:
+    """The int8 calibration knobs (ignored at ``precision="fp32"``).
+
+    ``data`` is the representative sample batch ``(N, *in_shape)``; when
+    ``None`` the session synthesizes ``samples`` camera-like frames via
+    :func:`repro.data.pipeline.camera_frame_batch` (bounded, spatially
+    smooth — the input domain the paper's nets actually see).  ``data``
+    is runtime state, not a knob: it is excluded from ``to_dict()``.
+
+    ``method=None`` means *auto*: ``"minmax"`` when the caller provided
+    ``data`` (the historical, bit-stable behavior), ``"percentile"``
+    when the session synthesizes its default frames (outlier-tail clip
+    is what keeps the robot net's top-1 agreement >= 0.99 there).
+    """
+
+    data: Optional[Any] = None          # np.ndarray; not serialized
+    samples: int = 32
+    method: Optional[str] = None        # None = auto (see above)
+    percentile: float = 99.99
+
+    def __post_init__(self):
+        if (self.method is not None
+                and self.method not in quantize_mod.CALIBRATION_METHODS):
+            raise ValueError(
+                f"calibration method {self.method!r}; expected one of "
+                f"{quantize_mod.CALIBRATION_METHODS} or None (auto)")
+        if not (0.0 < self.percentile <= 100.0):
+            raise ValueError(
+                f"calibration percentile {self.percentile!r} not in (0, 100]")
+        if self.samples < 1:
+            raise ValueError(f"calibration samples {self.samples} < 1")
+
+    def resolved_method(self, *, data_provided: bool) -> str:
+        """The concrete range-selection method after resolving auto."""
+        if self.method is not None:
+            return self.method
+        return "minmax" if data_provided else "percentile"
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe knobs (``data`` omitted — arrays don't serialize)."""
+        return {"samples": self.samples, "method": self.method,
+                "percentile": self.percentile}
+
+
+def _coerce_calibration(v) -> CalibrationConfig:
+    if isinstance(v, CalibrationConfig):
+        return v
+    if isinstance(v, dict):
+        return CalibrationConfig(**v)
+    if v is None:
+        return CalibrationConfig()
+    # legacy spelling: calibration=<sample batch array>
+    return CalibrationConfig(data=v)
+
+
+@dataclass(frozen=True)
+class SessionConfig:
+    """Everything :class:`InferenceSession` needs beyond the graph.
+
+    Field semantics match the historical kwargs one-for-one (see the
+    session docstring); the four calibration knobs live in the nested
+    :class:`CalibrationConfig`.  Frozen: a config can key caches and be
+    shared across threads/workers without defensive copies.
+    """
+
+    backend: str = "c"
+    autotune: bool = False
+    simd: Optional[str] = None
+    simd_search: Optional[Tuple[str, ...]] = None
+    unroll: Union[str, int, None, Dict] = "auto"
+    optimize: bool = True
+    threads: Optional[int] = None
+    tune_cache: Optional[Any] = None    # dir path str, or a TuningCache
+    tune_iters: int = 300
+    func_name: str = "nncg_net"
+    precision: str = "fp32"
+    calibration: CalibrationConfig = field(default_factory=CalibrationConfig)
+
+    def __post_init__(self):
+        if self.precision not in _PRECISIONS:
+            raise ValueError(
+                f"precision {self.precision!r}; expected one of {_PRECISIONS}")
+        if self.tune_iters < 1:
+            raise ValueError(f"tune_iters {self.tune_iters} < 1")
+        # normalize the container-ish fields so equality and to_dict()
+        # are stable regardless of how the caller spelled them
+        object.__setattr__(self, "calibration",
+                           _coerce_calibration(self.calibration))
+        if self.simd_search is not None:
+            object.__setattr__(self, "simd_search",
+                               tuple(self.simd_search))
+
+    def replace(self, **changes) -> "SessionConfig":
+        """A copy with ``changes`` applied (frozen-friendly update)."""
+        return dataclasses.replace(self, **changes)
+
+    def portable(self) -> "SessionConfig":
+        """The serializable projection of this config: calibration data
+        and live :class:`TuningCache` objects dropped (a cache *path*
+        string is kept).  ``SessionConfig(**cfg.to_dict())`` equals
+        ``cfg.portable()``."""
+        changes: Dict[str, Any] = {}
+        if self.calibration.data is not None:
+            changes["calibration"] = dataclasses.replace(
+                self.calibration, data=None)
+        if self.tune_cache is not None and not isinstance(
+                self.tune_cache, str):
+            changes["tune_cache"] = getattr(self.tune_cache, "path", None)
+        return self.replace(**changes) if changes else self
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Stable JSON-safe dict; ``SessionConfig(**d)`` reconstructs."""
+        p = self.portable()
+        d = dataclasses.asdict(p)
+        d["calibration"] = p.calibration.to_dict()
+        if d["simd_search"] is not None:
+            d["simd_search"] = list(d["simd_search"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SessionConfig":
+        return cls(**d)

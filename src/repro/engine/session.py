@@ -1,22 +1,30 @@
 """The unified inference entry point: one session, three substrates.
 
-    sess = InferenceSession(graph, backend="c", autotune=True)
+    cfg = SessionConfig(backend="c", autotune=True)
+    sess = InferenceSession(graph, config=cfg)
     probs = sess.predict(batch)          # (N, *out_shape)
 
-Post-training int8 quantization is one more argument:
+Post-training int8 quantization is one more config field:
 
-    sess = InferenceSession(graph, backend="c", precision="int8",
-                            calibration=sample_batch)
+    sess = InferenceSession(graph, config=SessionConfig(
+        precision="int8",
+        calibration=CalibrationConfig(data=sample_batch)))
 
 The session owns the whole deployment pipeline the repo previously
 scattered across benchmarks/examples: the NNCG optimization passes,
 ISA selection, per-layer variant autotuning (with the on-disk tuning
 cache), calibration + quantization, codegen + compile, and batched
 execution.
+
+The historical kwarg-per-knob constructor
+(``InferenceSession(graph, backend="c", autotune=True, ...)``) still
+works: the kwargs are folded into a :class:`SessionConfig` by a shim
+that emits a single :class:`DeprecationWarning` per process.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Union
+import warnings
+from typing import Optional
 
 import numpy as np
 
@@ -25,6 +33,53 @@ from repro.core.graph import CNNGraph
 
 from .autotune import Autotuner, TuneResult, TuningCache, tune_best_simd
 from .backends import (Backend, CBackend, QuantizedXLABackend, get_backend)
+from .config import CalibrationConfig, SessionConfig
+
+_UNSET = object()
+
+# the legacy kwargs, in the order the old signature declared them
+_LEGACY_KWARGS = ("autotune", "simd", "simd_search", "unroll", "optimize",
+                  "threads", "tune_cache", "tune_iters", "func_name",
+                  "precision", "calibration", "calib_samples",
+                  "calibration_method", "calibration_percentile")
+
+_legacy_warned = False
+
+
+def _warn_legacy_once() -> None:
+    global _legacy_warned
+    if _legacy_warned:
+        return
+    _legacy_warned = True
+    warnings.warn(
+        "InferenceSession(graph, backend=..., <kwargs>) is deprecated; "
+        "pass InferenceSession(graph, config=SessionConfig(...)) instead "
+        "(calibration knobs go in SessionConfig.calibration="
+        "CalibrationConfig(...)).",
+        DeprecationWarning, stacklevel=4)
+
+
+def _config_from_legacy(backend, kw: dict) -> SessionConfig:
+    """Fold the historical kwargs into a SessionConfig."""
+    calib = CalibrationConfig(
+        data=kw.get("calibration"),
+        samples=kw.get("calib_samples", 32),
+        method=kw.get("calibration_method"),
+        percentile=kw.get("calibration_percentile", 99.99))
+    fields = {k: kw[k] for k in ("autotune", "simd", "simd_search", "unroll",
+                                 "optimize", "threads", "tune_cache",
+                                 "tune_iters", "func_name", "precision")
+              if k in kw}
+    return SessionConfig(backend=backend, calibration=calib, **fields)
+
+
+class SessionInfo(dict):
+    """The session's introspection dict.  Also callable —
+    ``sess.info()`` and ``sess.info[...]`` both work, so callers
+    written against either spelling of the API keep running."""
+
+    def __call__(self) -> "SessionInfo":
+        return self
 
 
 class InferenceSession:
@@ -33,118 +88,148 @@ class InferenceSession:
     Parameters
     ----------
     graph:    trained :class:`CNNGraph` (raw; passes run here unless
-              ``optimize=False``).
-    backend:  ``"c"`` | ``"xla"`` | ``"pallas"`` (see
-              :func:`repro.engine.backends.available_backends`).
-    autotune: C backend only — benchmark every per-layer codegen variant
-              and keep the fastest, consulting the on-disk tuning cache.
-    simd:     C codegen mode (``'generic'|'structured'|'sse'|'avx'``);
-              defaults to the widest ISA the host supports.
-    simd_search: with ``autotune``, a list of simd modes to tune under —
-              the engine keeps the fastest (mode, per-layer levels) pair.
-    unroll:   C backend without autotune — ``"auto"`` (static heuristic),
-              a single level, or a per-layer dict.
-    threads:  C backend — drive batches thread-parallel through the
-              reentrant ``<func>_ws`` entry point (one liveness-planned
-              workspace per thread); ``None``/1 keeps the sequential
-              generated batch loop.
-    tune_cache: directory (or :class:`TuningCache`) for persisted tuning
-              results; ``None`` uses the default cache dir.
-    tune_iters: timing iterations per candidate during autotuning.
-    precision: ``"fp32"`` (default) or ``"int8"`` — post-training
-              quantization: calibrate activation ranges on sample
-              inputs, then serve the int8 C build (int8 weights and
-              intermediates, int32 accumulators, ~4x smaller arena) or,
-              with ``backend="xla"``, the bit-faithful jax reference.
-    calibration: sample inputs ``(N, *in_shape)`` for the int8
-              calibration pass; defaults to ``calib_samples`` standard
-              normal images (fine for smoke tests — use real data for
-              deployment).
-    calib_samples: size of the default calibration batch.
-    calibration_method: activation range selection — ``"minmax"``
-              (exact observed range, the default), ``"percentile"``
-              (clip outlier tails at ``calibration_percentile``), or
-              ``"mse"`` (histogram-MSE-optimal clipped range).  See
-              :data:`repro.core.quantize.CALIBRATION_METHODS`.
-    calibration_percentile: the two-sided keep-mass for
-              ``calibration_method="percentile"`` (e.g. 99.99).
+              ``config.optimize=False``).
+    config:   a :class:`SessionConfig` (or a dict accepted by
+              ``SessionConfig(**d)``).  Field reference:
+
+              * ``backend`` — ``"c"`` | ``"xla"`` | ``"pallas"`` (see
+                :func:`repro.engine.backends.available_backends`).
+              * ``autotune`` — C backend only: benchmark every per-layer
+                codegen variant and keep the fastest, consulting the
+                on-disk tuning cache.
+              * ``simd`` — C codegen mode
+                (``'generic'|'structured'|'sse'|'avx'``); defaults to
+                the widest ISA the host supports.
+              * ``simd_search`` — with ``autotune``, simd modes to tune
+                under; the engine keeps the fastest (mode, levels) pair.
+              * ``unroll`` — C backend without autotune: ``"auto"``
+                (static heuristic), a single level, or a per-layer dict.
+              * ``threads`` — C backend: drive batches thread-parallel
+                through the reentrant ``<func>_ws`` entry point.
+              * ``tune_cache`` — directory (or :class:`TuningCache`) for
+                persisted tuning results; ``None`` = default cache dir.
+              * ``tune_iters`` — timing iterations per tuning candidate.
+              * ``precision`` — ``"fp32"`` (default) or ``"int8"``
+                post-training quantization.
+              * ``calibration`` — a :class:`CalibrationConfig`:
+                ``data`` (representative inputs ``(N, *in_shape)``;
+                ``None`` synthesizes ``samples`` camera-like frames —
+                bounded, spatially smooth, the domain the paper's nets
+                see; unbounded noise was a diagnosed accuracy
+                regression), ``method``
+                (``"minmax"|"percentile"|"mse"``, or ``None`` = auto:
+                minmax on caller data, percentile on synthesized
+                frames), ``percentile``.
+
+    Legacy: every config field is also accepted as a keyword argument
+    (``calibration`` knobs under their old names ``calibration=``,
+    ``calib_samples=``, ``calibration_method=``,
+    ``calibration_percentile=``); that path emits one
+    ``DeprecationWarning`` per process and cannot be mixed with
+    ``config=``.
     """
 
-    def __init__(self, graph: CNNGraph, backend: str = "c", *,
-                 autotune: bool = False,
-                 simd: Optional[str] = None,
-                 simd_search: Optional[Sequence[str]] = None,
-                 unroll: Union[str, int, None, Dict] = "auto",
-                 optimize: bool = True,
-                 threads: Optional[int] = None,
-                 tune_cache: Union[None, str, TuningCache] = None,
-                 tune_iters: int = 300,
-                 func_name: str = "nncg_net",
-                 precision: str = "fp32",
-                 calibration: Optional[np.ndarray] = None,
-                 calib_samples: int = 32,
-                 calibration_method: str = "minmax",
-                 calibration_percentile: float = 99.99):
-        assert precision in ("fp32", "int8"), precision
-        assert calibration_method in quantize_mod.CALIBRATION_METHODS, \
-            calibration_method
-        self.backend_name = backend
-        self.precision = precision
-        self.simd = simd or runtime.best_isa()
-        candidates = list(simd_search) if (simd_search and autotune
-                                           and backend == "c") else None
+    def __init__(self, graph: CNNGraph, backend=_UNSET, *,
+                 config: Optional[SessionConfig] = None,
+                 **legacy):
+        unknown = set(legacy) - set(_LEGACY_KWARGS)
+        if unknown:
+            raise TypeError(
+                f"InferenceSession: unexpected keyword arguments "
+                f"{sorted(unknown)}")
+        if config is not None:
+            if backend is not _UNSET or legacy:
+                raise TypeError(
+                    "InferenceSession: pass either config= or the legacy "
+                    "kwargs, not both")
+            if isinstance(config, dict):
+                config = SessionConfig(**config)
+        else:
+            if backend is not _UNSET or legacy:
+                _warn_legacy_once()
+            config = _config_from_legacy(
+                "c" if backend is _UNSET else backend, legacy)
+        self.config = config
+
+        self.backend_name = config.backend
+        self.precision = config.precision
+        self.simd = config.simd or runtime.best_isa()
+        candidates = (list(config.simd_search)
+                      if (config.simd_search and config.autotune
+                          and config.backend == "c") else None)
         widths = [cgen.ISAS[s].width if s in cgen.ISAS else 4
                   for s in (candidates or [self.simd])]
         # int8 kernels vectorize over window taps, not output channels —
         # SIMD channel alignment would only add dead compute
-        multiple = 1 if precision == "int8" else max(widths)
+        multiple = 1 if config.precision == "int8" else max(widths)
         self.graph = (passes.optimize(graph, simd_multiple=multiple)
-                      if optimize else graph)
+                      if config.optimize else graph)
         self.tuned: Optional[TuneResult] = None
         self.qgraph = None
 
-        if precision == "int8":
+        if config.precision == "int8":
+            calibration = config.calibration.data
+            method = config.calibration.resolved_method(
+                data_provided=calibration is not None)
             if calibration is None:
-                calibration = np.random.default_rng(0).normal(
-                    size=(calib_samples,) + tuple(self.graph.input_shape)
-                ).astype(np.float32)
+                calibration = self._default_calibration()
             self.qgraph = quantize_mod.quantize(
-                self.graph, calibration, method=calibration_method,
-                percentile=calibration_percentile)
-            self._init_int8(backend, candidates, threads, func_name,
-                            tune_iters, autotune, tune_cache)
+                self.graph, calibration, method=method,
+                percentile=config.calibration.percentile)
+            self._init_int8(candidates)
             return
 
-        if backend == "c":
-            if autotune:
-                cache = (tune_cache if isinstance(tune_cache, TuningCache)
-                         else TuningCache(tune_cache))
+        if config.backend == "c":
+            if config.autotune:
+                cache = self._tuning_cache()
                 if candidates:
                     self.simd, self.tuned = tune_best_simd(
                         self.graph, candidates, cache=cache,
-                        iters=tune_iters)
+                        iters=config.tune_iters)
                 else:
-                    tuner = Autotuner(self.simd, iters=tune_iters,
+                    tuner = Autotuner(self.simd, iters=config.tune_iters,
                                       cache=cache)
                     self.tuned = tuner.tune(self.graph)
                 unroll_cfg = self.tuned.levels
-            elif unroll == "auto":
+            elif config.unroll == "auto":
                 unroll_cfg = cgen.choose_levels(self.graph, 20_000)
             else:
-                unroll_cfg = unroll
+                unroll_cfg = config.unroll
             # tuned levels were measured at the tuner's emission budget;
             # the deployed build must emit the same code
             term_budget = (self.tuned.term_cap if self.tuned is not None
                            else None)
             self._backend: Backend = CBackend(
                 self.graph, simd=self.simd, unroll=unroll_cfg,
-                func_name=func_name, term_budget=term_budget,
-                threads=threads)
+                func_name=config.func_name, term_budget=term_budget,
+                threads=config.threads)
         else:
-            self._backend = get_backend(backend)(self.graph)
+            self._backend = get_backend(config.backend)(self.graph)
 
-    def _init_int8(self, backend: str, candidates, threads, func_name: str,
-                   tune_iters: int, autotune: bool, tune_cache) -> None:
+    # -- construction helpers ------------------------------------------------
+
+    def _tuning_cache(self) -> TuningCache:
+        tc = self.config.tune_cache
+        return tc if isinstance(tc, TuningCache) else TuningCache(tc)
+
+    def _default_calibration(self) -> np.ndarray:
+        """Representative frames for int8 calibration when the caller
+        supplies none.  The paper's nets consume camera images: ranges
+        calibrated on unbounded standard-normal noise (the old default)
+        are unrepresentative of deployment and measurably cost accuracy
+        — the exact failure mode diagnosed on the robot net (top-1
+        agreement 0.94 on noise vs 0.99+ on camera-like frames)."""
+        from repro.data.pipeline import camera_frame_batch
+        in_shape = tuple(self.graph.input_shape)
+        n = self.config.calibration.samples
+        if len(in_shape) == 3:
+            return camera_frame_batch(n, in_shape, seed=0)
+        # non-image input: bounded uniform noise still beats unbounded
+        # normal for range calibration
+        return np.random.default_rng(0).uniform(
+            -1.0, 1.0, size=(n,) + in_shape).astype(np.float32)
+
+    def _init_int8(self, candidates) -> None:
         """Build the int8 serving backend.
 
         The quantized kernels' variant space is the SIMD mode (the int8
@@ -155,14 +240,15 @@ class InferenceSession:
         The winning mode persists in the same on-disk tuning cache the
         float path uses (keyed by graph/compiler/codegen version plus
         an int8 tag), so a repeat session times nothing."""
-        if backend == "xla":
+        cfg = self.config
+        if cfg.backend == "xla":
             self._backend = QuantizedXLABackend(self.qgraph)
             return
-        if backend != "c":
+        if cfg.backend != "c":
             raise ValueError(
                 f"precision='int8' supports backends 'c' and 'xla', "
-                f"not {backend!r}")
-        if autotune:
+                f"not {cfg.backend!r}")
+        if cfg.autotune:
             cands = candidates
             if not cands:
                 cands = ["generic"]
@@ -170,20 +256,19 @@ class InferenceSession:
                     cands.insert(0, "sse")
                 if runtime.host_supports_avx2():
                     cands.insert(0, "avx")
-            cache = (tune_cache if isinstance(tune_cache, TuningCache)
-                     else TuningCache(tune_cache))
+            cache = self._tuning_cache()
             # the generated int8 C embeds the calibration-derived
             # qparams, so the cache key must carry them: a different
             # calibration set/method is a different program
             qdigest = quantize_mod.qparams_digest(self.qgraph)
             key = cache.key(self.graph, "+".join(cands),
-                            extra=f"int8:{qdigest}:i{tune_iters}")
+                            extra=f"int8:{qdigest}:i{cfg.tune_iters}")
             rec = cache.get(key)
             if rec is not None and rec.get("simd") in cands:
                 self.simd = rec["simd"]
                 self._backend = CBackend(
-                    self.graph, simd=self.simd, func_name=func_name,
-                    threads=threads, qgraph=self.qgraph)
+                    self.graph, simd=self.simd, func_name=cfg.func_name,
+                    threads=cfg.threads, qgraph=self.qgraph)
                 self.tuned = TuneResult(levels={}, us_per_call=float(
                     rec.get("us_per_call", 0.0)), from_cache=True)
                 return
@@ -191,10 +276,11 @@ class InferenceSession:
                 size=self.graph.input_shape).astype(np.float32)
             best = None
             for simd in cands:
-                b = CBackend(self.graph, simd=simd, func_name=func_name,
-                             threads=threads, qgraph=self.qgraph)
-                t = b.time_per_call_us(x, iters=tune_iters,
-                                       warmup=max(10, tune_iters // 10))
+                b = CBackend(self.graph, simd=simd,
+                             func_name=cfg.func_name,
+                             threads=cfg.threads, qgraph=self.qgraph)
+                t = b.time_per_call_us(x, iters=cfg.tune_iters,
+                                       warmup=max(10, cfg.tune_iters // 10))
                 if best is None or t < best[0]:
                     best = (t, simd, b)
             _, self.simd, self._backend = best
@@ -204,7 +290,8 @@ class InferenceSession:
                                     from_cache=False)
         else:
             self._backend = CBackend(self.graph, simd=self.simd,
-                                     func_name=func_name, threads=threads,
+                                     func_name=cfg.func_name,
+                                     threads=cfg.threads,
                                      qgraph=self.qgraph)
 
     # -- shapes --------------------------------------------------------------
@@ -216,6 +303,14 @@ class InferenceSession:
     @property
     def output_shape(self):
         return self.graph.output_shape
+
+    @property
+    def backend(self) -> Backend:
+        """The live :class:`Backend` this session serves through."""
+        return self._backend
+
+    def close(self) -> None:
+        self._backend.close()
 
     # -- execution -----------------------------------------------------------
 
@@ -257,11 +352,15 @@ class InferenceSession:
     # -- introspection -------------------------------------------------------
 
     @property
-    def info(self) -> dict:
-        d = {"backend": self.backend_name, "simd": self.simd,
-             "precision": self.precision,
-             "input_shape": tuple(self.input_shape),
-             "output_shape": tuple(self.output_shape)}
+    def info(self) -> SessionInfo:
+        d = SessionInfo(
+            backend=self.backend_name, simd=self.simd,
+            precision=self.precision,
+            input_shape=tuple(self.input_shape),
+            output_shape=tuple(self.output_shape),
+            # the stable, reconstructible config section:
+            # SessionConfig(**info["config"]) == config.portable()
+            config=self.config.to_dict())
         if self.qgraph is not None:
             d["quantized_layers"] = sorted(self.qgraph.weights)
             d["input_qparams"] = (self.qgraph.input_qp.scale,
@@ -273,17 +372,17 @@ class InferenceSession:
             d.update(levels=self.tuned.levels,
                      tuned_us_per_call=self.tuned.us_per_call,
                      tuned_from_cache=self.tuned.from_cache)
-        if isinstance(self._backend, CBackend):
-            net = self._backend.net
-            d["c_source_bytes"] = net.c_source_bytes
-            d["so_path"] = net.so_path
+        desc = self._backend.describe()
+        if "arena_bytes" in desc:
             # liveness-planned memory: the one workspace all
             # intermediates share, vs. the per-layer-static scheme it
             # replaced, plus how many bytes are live at each layer step
-            d["arena_bytes"] = net.arena_bytes
-            d["arena_buffer_sum_bytes"] = net.arena_buffer_sum_bytes
-            d["per_layer_live_bytes"] = dict(net.per_layer_live_bytes or {})
+            d["c_source_bytes"] = desc["c_source_bytes"]
+            d["so_path"] = desc["so_path"]
+            d["arena_bytes"] = desc["arena_bytes"]
+            d["arena_buffer_sum_bytes"] = desc["arena_buffer_sum_bytes"]
+            d["per_layer_live_bytes"] = desc["per_layer_live_bytes"]
             d["peak_live_bytes"] = max(
-                (net.per_layer_live_bytes or {}).values(), default=0)
-            d["threads"] = self._backend.threads
+                desc["per_layer_live_bytes"].values(), default=0)
+            d["threads"] = desc["threads"]
         return d

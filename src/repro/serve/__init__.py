@@ -1,0 +1,29 @@
+"""Continuous-batching inference serving on top of the engine.
+
+    from repro.engine import InferenceSession, SessionConfig
+    from repro.serve import InferenceServer, ServerConfig
+
+    sess = InferenceSession(graph, config=SessionConfig(autotune=True))
+    with InferenceServer(sess, config=ServerConfig(workers=4,
+                                                   max_batch=8,
+                                                   batch_deadline_ms=2)) as srv:
+        y = srv.predict(frame)
+        print(srv.stats()["latency_p99_us"], srv.stats()["qps"])
+
+See :mod:`repro.serve.server` for the architecture.
+"""
+from .server import (InferenceResult, InferenceServer, RequestTimeout,
+                     ServeError, ServerClosed, ServerConfig,
+                     ServerOverloaded)
+from .stats import ServerStats
+
+__all__ = [
+    "InferenceResult",
+    "InferenceServer",
+    "RequestTimeout",
+    "ServeError",
+    "ServerClosed",
+    "ServerConfig",
+    "ServerOverloaded",
+    "ServerStats",
+]

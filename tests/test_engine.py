@@ -1,13 +1,17 @@
 """InferenceSession engine: cross-backend agreement, tuning-cache
-round-trip, and batched-vs-looped equivalence."""
+round-trip, batched-vs-looped equivalence, SessionConfig round-trip and
+the legacy-kwarg deprecation shim, and the formal Backend protocol."""
+import warnings
+
 import numpy as np
 import pytest
 
 from repro.configs.cnn_paper import PAPER_CNNS
 from repro.core import runtime
 from repro.core.graph import CNNGraph, Conv2D, Input, MaxPool, Softmax
-from repro.engine import (InferenceSession, TuningCache, available_backends,
-                          get_backend, graph_fingerprint)
+from repro.engine import (CalibrationConfig, InferenceSession, SessionConfig,
+                          TuningCache, available_backends, get_backend,
+                          graph_fingerprint)
 
 RTOL, ATOL = 1e-3, 1e-5
 
@@ -31,6 +35,133 @@ def _tiny_cnn(seed=0) -> CNNGraph:
 def _batch(shape, n=3, seed=1):
     return np.random.default_rng(seed).normal(
         size=(n,) + tuple(shape)).astype(np.float32)
+
+
+# -- SessionConfig ----------------------------------------------------------
+
+def test_session_config_path_matches_legacy_kwargs():
+    g = _tiny_cnn()
+    x = _batch(g.input_shape)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = InferenceSession(g, backend="c", simd="structured")
+    cfg = InferenceSession(g, config=SessionConfig(backend="c",
+                                                   simd="structured"))
+    np.testing.assert_array_equal(legacy.predict(x), cfg.predict(x))
+
+
+def test_session_config_round_trips_through_info():
+    cfg = SessionConfig(backend="c", simd="structured", tune_iters=50,
+                        threads=2,
+                        calibration=CalibrationConfig(samples=8,
+                                                      method="mse"))
+    sess = InferenceSession(_tiny_cnn(), config=cfg)
+    # the stable config section reconstructs the config (info is both a
+    # dict and callable, so either API spelling works)
+    assert sess.info()["config"] == sess.info["config"]
+    rt = SessionConfig(**sess.info["config"])
+    assert rt == cfg.portable() == cfg  # no runtime-only fields set here
+    # runtime-only fields (calibration data, live cache objects) are
+    # dropped by the portable projection, not serialized
+    cfg2 = cfg.replace(calibration=CalibrationConfig(
+        data=np.zeros((1,) + tuple(_tiny_cnn().input_shape), np.float32)))
+    assert SessionConfig(**cfg2.to_dict()) == cfg2.portable()
+    assert cfg2.portable().calibration.data is None
+
+
+def test_session_config_accepts_plain_dicts():
+    d = {"backend": "c", "simd": "structured",
+         "calibration": {"samples": 4, "method": "percentile",
+                         "percentile": 99.9}}
+    sess = InferenceSession(_tiny_cnn(), config=d)
+    assert sess.config.calibration.percentile == 99.9
+    assert sess.config == SessionConfig(**d)
+
+
+def test_session_config_validates():
+    with pytest.raises(ValueError, match="precision"):
+        SessionConfig(precision="int4")
+    with pytest.raises(ValueError, match="method"):
+        CalibrationConfig(method="entropy")
+    with pytest.raises(ValueError, match="percentile"):
+        CalibrationConfig(percentile=0.0)
+    with pytest.raises(ValueError, match="tune_iters"):
+        SessionConfig(tune_iters=0)
+
+
+def test_session_config_is_frozen_with_replace():
+    cfg = SessionConfig()
+    with pytest.raises(Exception):  # FrozenInstanceError
+        cfg.backend = "xla"
+    assert cfg.replace(backend="xla").backend == "xla"
+    assert cfg.backend == "c"
+
+
+def test_legacy_kwargs_warn_exactly_once(monkeypatch):
+    from repro.engine import session as session_mod
+    monkeypatch.setattr(session_mod, "_legacy_warned", False)
+    g = _tiny_cnn()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        InferenceSession(g, backend="c", simd="structured")
+        InferenceSession(g, backend="c", simd="structured", unroll=2)
+        InferenceSession(g, config=SessionConfig(simd="structured"))
+        InferenceSession(g)  # all-defaults: the modern path, no warning
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in w]
+    assert "SessionConfig" in str(dep[0].message)
+
+
+def test_config_and_legacy_kwargs_are_mutually_exclusive():
+    g = _tiny_cnn()
+    with pytest.raises(TypeError, match="not both"):
+        InferenceSession(g, backend="c", config=SessionConfig())
+    with pytest.raises(TypeError, match="not both"):
+        InferenceSession(g, config=SessionConfig(), autotune=True)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        InferenceSession(g, calibraton_method="mse")  # typo'd kwarg
+
+
+# -- Backend protocol -------------------------------------------------------
+
+def test_backend_is_a_formal_abc():
+    import abc
+
+    from repro.engine import Backend, register_backend
+    assert isinstance(Backend, abc.ABCMeta)
+
+    class Incomplete(Backend):
+        pass
+
+    with pytest.raises(TypeError, match="abstract"):
+        Incomplete(_tiny_cnn())
+    with pytest.raises(TypeError, match="must subclass Backend"):
+        register_backend("bogus")(object)
+    assert "bogus" not in available_backends()
+
+
+def test_backend_describe_is_uniform_across_substrates():
+    g = _tiny_cnn()
+    for name in ("c", "xla"):
+        sess = InferenceSession(g, config=SessionConfig(
+            backend=name, simd="structured"))
+        d = sess.backend.describe()
+        assert d["name"] == name
+        assert d["precision"] == "fp32"
+        assert d["input_shape"] == tuple(g.input_shape)
+        assert d["output_shape"] == tuple(sess.output_shape)
+    c_desc = InferenceSession(g, config=SessionConfig(
+        backend="c", simd="structured")).backend.describe()
+    assert c_desc["arena_bytes"] > 0 and c_desc["simd"] == "structured"
+
+
+def test_backend_close_is_optional_and_idempotent():
+    sess = InferenceSession(_tiny_cnn(), config=SessionConfig(
+        backend="c", simd="structured"))
+    with sess.backend as b:
+        pass
+    b.close()  # second close: still fine
+    sess.close()
 
 
 # -- registry ---------------------------------------------------------------

@@ -533,3 +533,42 @@ def test_quantized_c_is_strict_ansi_c89(tmp_path):
          "-pedantic-errors", "-c", str(c_path), "-o", str(c_path) + ".o"],
         capture_output=True, text=True)
     assert proc.returncode == 0, proc.stderr[:4000]
+
+
+# ------------------------------------------- default-calibration bugfix ----
+
+def test_default_calibration_robot_net_regression():
+    """The session's *default* int8 calibration (caller supplies no
+    data) used to be unbounded standard-normal noise — the exact
+    failure mode diagnosed on the robot net (top-1 agreement 0.94).
+    The default is now representative camera-like frames with auto
+    percentile range selection; the default-calibrated robot net must
+    keep >= 0.99 top-1 agreement on held-out frames."""
+    from repro.data.pipeline import camera_frame_batch
+    from repro.engine import InferenceSession, SessionConfig
+
+    g = PAPER_CNNS["robot"]()
+    s = InferenceSession(g, config=SessionConfig(backend="xla",
+                                                 precision="int8"))
+    # auto method resolution: synthesized frames -> percentile
+    assert s.qgraph.method == "percentile"
+    held_out = camera_frame_batch(16, g.input_shape, seed=99)
+    stats = quantize.quantization_error(s.qgraph, held_out)
+    assert stats["top1_agreement"] >= 0.99, stats
+
+
+def test_default_calibration_explicit_data_keeps_minmax():
+    # callers who pass their own data keep the historical bit-stable
+    # default (minmax), and an explicit method always wins
+    from repro.engine import InferenceSession, SessionConfig
+
+    g = PAPER_CNNS["ball"]()
+    xs = _calib(g.input_shape, n=8)
+    s = InferenceSession(g, config=SessionConfig(
+        backend="xla", precision="int8",
+        calibration={"data": xs}))
+    assert s.qgraph.method == "minmax"
+    s2 = InferenceSession(g, config=SessionConfig(
+        backend="xla", precision="int8",
+        calibration={"method": "mse"}))
+    assert s2.qgraph.method == "mse"
