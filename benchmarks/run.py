@@ -56,8 +56,34 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
 # regression — agreement 0.94; see core/quantize.py)
 CALIBRATION_METHOD = "percentile"
 INT8_AGREEMENT_GATE = 0.99
+# perf ratchet: a new run's int8_speedup_vs_c may not fall below this
+# fraction of the value persisted in BENCH_engine.json (the slack
+# absorbs scheduler noise; a kernel regression is far larger)
+INT8_RATCHET_TOLERANCE = 0.90
 
 RESULTS: dict = {"cnns": {}, "ablation": {}}
+
+
+def _prior_results() -> dict:
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                return json.load(f).get("cnns", {})
+        except (OSError, ValueError):
+            pass
+    return {}
+
+
+def _check_int8_ratchet(name: str, speedup: float) -> None:
+    prior = _prior_results().get(name, {}).get("int8_speedup_vs_c")
+    if prior is None:
+        return
+    floor = float(prior) * INT8_RATCHET_TOLERANCE
+    assert speedup >= floor, (
+        f"{name}: int8_speedup_vs_c regressed to {speedup:.3f} "
+        f"(persisted {prior:.3f}, ratchet floor {floor:.3f}) — the "
+        f"tiled kernels got slower; fix the regression or consciously "
+        f"re-baseline BENCH_engine.json")
 
 
 def _bench_cnn(name: str):
@@ -110,12 +136,14 @@ def _bench_cnn(name: str):
     t_q = int8.benchmark(x, iters=iters)
     t_x = xla.benchmark(x, iters=max(iters // 10, 100))
     arena = tuned.info["arena_bytes"]
+    _check_int8_ratchet(name, t_c / t_q)
     print(f"table_{name}_nncg_c_autotuned,{t_c:.2f},"
           f"speedup_vs_xla={t_x / t_c:.2f},{arena}")
     print(f"table_{name}_nncg_c_untuned,{t_u:.2f},"
           f"autotune_gain={t_u / t_c:.2f},{untuned.info['arena_bytes']}")
     print(f"table_{name}_nncg_c_int8,{t_q:.2f},"
-          f"speedup_vs_c={t_c / t_q:.2f},{int8.info['arena_bytes']}")
+          f"speedup_vs_c={t_c / t_q:.2f},"
+          f"variant={int8.simd},{int8.info['arena_bytes']}")
     print(f"table_{name}_xla_jit,{t_x:.2f},baseline=1.0,")
     RESULTS["cnns"][name] = {
         "c_autotuned_us": round(t_c, 3),
@@ -124,7 +152,7 @@ def _bench_cnn(name: str):
         "xla_us": round(t_x, 3),
         "speedup_vs_xla": round(t_x / t_c, 3),
         "int8_speedup_vs_c": round(t_c / t_q, 3),
-        "int8_simd": int8.simd,
+        "int8_kernel_variant": int8.simd,
         "int8_arena_bytes": int8.info["arena_bytes"],
         "int8_top1_agreement": round(qstats["top1_agreement"], 4),
         "int8_max_abs_err": round(qstats["max_abs_err"], 6),

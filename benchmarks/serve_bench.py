@@ -67,6 +67,16 @@ def _open_loop(srv: InferenceServer, frames: np.ndarray,
     n = max(int(rate_qps * duration_s), 32)
     interval = 1.0 / rate_qps
     nf = len(frames)
+    # warm the server before the paced clock starts: the first requests
+    # through a cold worker pay thread spin-up, page faults and branch
+    # training, which at a low offered rate (few total requests) used to
+    # dominate p99 — a cold-start artifact, not queueing behavior.
+    # These warmup round trips are excluded from the percentile stats.
+    for i in range(32):
+        try:
+            srv.submit(frames[i % nf]).result(timeout=30.0)
+        except (ServerOverloaded, ServeError):
+            pass
     handles, dropped = [], 0
     t0 = time.perf_counter()
     for i in range(n):

@@ -76,7 +76,7 @@ Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
 
 # bump whenever the emitted C changes for the same (graph, options) —
 # cached artifacts measured on older generated code must not be reused
-CODEGEN_VERSION = 5
+CODEGEN_VERSION = 6
 
 # the single source of truth for the unroll/icache emission budget
 # (both CodegenOptions.term_budget and choose_levels read it)
@@ -138,9 +138,99 @@ AVX = ISA(name="avx", width=8, reg="__m256", header="immintrin.h",
 ISAS = {"sse": SSE, "avx": AVX}
 
 
+@dataclass(frozen=True)
+class QISA:
+    """Int8 dot-product kernel descriptor — the integer analogue of
+    :class:`ISA`, one entry per tiled kernel variant.
+
+    The quantized conv/dense emitters tile ``group`` output channels
+    into one int32 accumulator vector and fold ``lane_taps`` input taps
+    into every 32-bit lane per dot-product instruction; the requant
+    epilogue (rescale, activation, round-half-up, zero point, saturate)
+    runs vectorized on the same accumulator, so int8 results go from
+    register file to arena without a scalar round trip.
+
+    ``unsigned_x`` marks the u8·s8 instructions (``vpmaddubsw``,
+    ``vpdpbusd``): activations are re-biased to unsigned by XORing the
+    sign bit and the matching ``128 * sum(w)`` correction is folded into
+    the int32 bias (:meth:`QuantizedGraph.effective_bias`), keeping the
+    accumulator bit-identical to the signed variants.
+
+    ``cpu_flags`` are the /proc/cpuinfo tokens the compiled object
+    needs at *load* time; :func:`repro.core.runtime.resolve_int8_simd`
+    walks ``fallback`` until it reaches a variant the host supports, so
+    e.g. an AVX-512-VNNI .so is never loaded on a non-VNNI machine.
+    """
+
+    name: str
+    arch: str                 # 'x86' | 'arm'
+    group: int                # output channels per accumulator vector
+    lane_taps: int            # taps folded into each 32-bit lane
+    header: str
+    cc_flags: tuple
+    cpu_flags: tuple          # /proc/cpuinfo tokens required to run
+    unsigned_x: bool = False  # u8*s8 dot: x codes re-biased by +128
+    fallback: Optional[str] = None  # next-best variant when unsupported
+
+    @property
+    def wide(self) -> bool:
+        """256-bit x86 variant (group of 8) vs 128-bit (group of 4)."""
+        return self.group == 8
+
+
+QISAS = {
+    # SSE2 pair-madd: 2 sign-extended int16 taps per lane,
+    # _mm_madd_epi16 (exact: every i16*i16 pair sum fits int32)
+    "sse": QISA(name="sse", arch="x86", group=4, lane_taps=2,
+                header="emmintrin.h", cc_flags=("-mssse3",),
+                cpu_flags=("ssse3",), fallback="generic"),
+    # AVX2 pair-madd: the 256-bit _mm256_madd_epi16 form
+    "avx": QISA(name="avx", arch="x86", group=8, lane_taps=2,
+                header="immintrin.h", cc_flags=("-mavx2", "-mfma"),
+                cpu_flags=("avx2", "fma"), fallback="sse"),
+    # AVX2 u8*s8 quad: vpmaddubsw + vpmaddwd(1).  vpmaddubsw saturates
+    # its int16 pair sums, so this variant is emitted per layer ONLY
+    # when the trained weights *prove* saturation impossible
+    # (maddubsw_safe); otherwise the layer falls back to pair-madd.
+    "avx_ubs": QISA(name="avx_ubs", arch="x86", group=8, lane_taps=4,
+                    header="immintrin.h", cc_flags=("-mavx2", "-mfma"),
+                    cpu_flags=("avx2", "fma"), unsigned_x=True,
+                    fallback="avx"),
+    # AVX-512-VNNI u8*s8 quad on 256-bit registers: one vpdpbusd per 4
+    # taps x 8 channels, products widened to int32 before summing —
+    # exact for every weight, no saturation proof needed
+    "avx_vnni": QISA(name="avx_vnni", arch="x86", group=8, lane_taps=4,
+                     header="immintrin.h",
+                     cc_flags=("-mavx512vnni", "-mavx512vl",
+                               "-mavx512bw", "-mavx512f",
+                               "-mavx2", "-mfma"),
+                     cpu_flags=("avx512f", "avx512bw", "avx512vl",
+                                "avx512_vnni"),
+                     unsigned_x=True, fallback="avx"),
+    # NEON baseline (every ARMv8-A core): widening multiply-accumulate,
+    # one vmlal_s16 per tap x 4 channels
+    "neon": QISA(name="neon", arch="arm", group=4, lane_taps=1,
+                 header="arm_neon.h", cc_flags=(),
+                 cpu_flags=("asimd",), fallback="generic"),
+    # ARMv8.2 dot product: one s8*s8 vdotq_s32 per 4 taps x 4 channels
+    "neon_dot": QISA(name="neon_dot", arch="arm", group=4, lane_taps=4,
+                     header="arm_neon.h",
+                     cc_flags=("-march=armv8.2-a+dotprod",),
+                     cpu_flags=("asimddp",), fallback="neon"),
+}
+
+# channel-group chunk cap: at most 8 int32 accumulator vectors live at
+# once (plus the broadcast and a weight load, the 16-register budget of
+# SSE/AVX/NEON); wider layers run multiple passes per output position
+_QTILE_MAX_GROUPS = 8
+
+
 @dataclass
 class CodegenOptions:
     simd: str = "sse"            # 'generic' | 'structured' | 'sse' | 'avx'
+                                 # int8 builds additionally accept the
+                                 # QISAS kernel variants ('avx_ubs',
+                                 # 'avx_vnni', 'neon', 'neon_dot')
     unroll: Union[Level, Dict[str, Level]] = 0
     func_name: str = "nncg_net"
     term_budget: int = TERM_BUDGET_DEFAULT
@@ -376,16 +466,66 @@ def _pad_scratch_elems(layer, in_shape, opts: CodegenOptions,
     return (h + pt + pb) * (w + pl + pr) * c
 
 
-def _qconv_use_patch(layer, opts: CodegenOptions) -> bool:
-    """Whether the quantized conv emitter uses the im2row int16 patch:
-    the window's taps are widened into a stack-local ``short`` array
-    once per output position (amortized over all output channels), so
-    every channel runs one flat, tail-free ``_mm_madd_epi16`` dot
-    product against int16-widened weights."""
-    if not isinstance(layer, Conv2D) or opts.isa is None:
-        return False
-    taps = layer.kh * layer.kw * layer.c_in
-    return layer.kh * layer.kw > 1 and taps >= 16
+def _pack_qweights(wt: np.ndarray, co: int, kh: int, row: int,
+                   G: int, L: int) -> Tuple[np.ndarray, int]:
+    """Tile int8 weight codes for the register-blocked kernels.
+
+    ``wt`` is ``(co, kh*row)`` (taps of one output channel contiguous,
+    window rows of ``row`` taps).  Returns ``(packed, P)`` where ``P =
+    ceil(row/L)`` lane blocks per window row and ``packed`` is the flat
+    ``[n][p][g][k][l]`` layout: for window row ``n`` and lane block
+    ``p``, the ``G*L`` codes of channel group ``g`` sit contiguously —
+    lane ``k`` holds the ``L`` consecutive taps of output channel
+    ``g*G+k`` (zero-padded past the row end), which is exactly the
+    operand layout of one madd/dpbusd/dot against a broadcast of those
+    ``L`` input taps.  Only the ``(co // G) * G`` fully-grouped channels
+    are packed; the remainder runs the per-channel fallback loop."""
+    ng = co // G
+    P = -(-row // L)
+    full = np.zeros((ng * G, kh, P * L), dtype=np.int64)
+    full[:, :, :row] = wt[:ng * G].reshape(ng * G, kh, row)
+    packed = full.reshape(ng, G, kh, P, L).transpose(2, 3, 0, 1, 4)
+    return np.ascontiguousarray(packed).reshape(-1), P
+
+
+def maddubsw_safe(wt: np.ndarray, co: int, kh: int, row: int) -> bool:
+    """Static saturation proof for the ``avx_ubs`` variant.
+
+    ``vpmaddubsw`` sums each pair of adjacent u8*s8 products into a
+    *saturating* int16.  With activations re-biased to u8 (0..255), the
+    pair over weights ``(a, b)`` spans ``[255*min(a,0)+255*min(b,0),
+    255*max(a,0)+255*max(b,0)]`` — in range iff the positive pair sum
+    is <= 128 and the negative pair sum is >= -128.  The weights are
+    compile-time constants (paper P3), so this is decidable per layer:
+    eligible layers get the 4-tap maddubsw kernel, the rest fall back
+    to the always-exact pair-madd tile in the same build."""
+    packed, _ = _pack_qweights(wt, co, kh, row, G=8, L=4)
+    pairs = packed.reshape(-1, 2)
+    pos = np.clip(pairs, 0, None).sum(axis=1)
+    neg = np.clip(pairs, None, 0).sum(axis=1)
+    return bool(pos.max(initial=0) <= 128 and neg.min(initial=0) >= -128)
+
+
+def maddubsw_any_eligible(qgraph) -> bool:
+    """True when at least one conv/dense layer of ``qgraph`` would
+    actually use the u8*s8 ``vpmaddubsw`` scheme under 'avx_ubs'.
+    When no layer qualifies the variant degenerates layer-by-layer to
+    the 'avx' pair-madd build, so it isn't worth enumerating."""
+    for layer in qgraph.graph.layers:
+        if isinstance(layer, Conv2D):
+            co = int(layer.weights.shape[3])
+            kh, row = layer.kh, layer.kw * layer.c_in
+            wt = np.transpose(qgraph.weights[layer.name].w_q,
+                              (3, 0, 1, 2)).reshape(co, kh * row)
+        elif isinstance(layer, Dense):
+            wt = qgraph.weights[layer.name].w_q.T
+            co, row = wt.shape
+            kh = 1
+        else:
+            continue
+        if co >= QISAS["avx_ubs"].group and maddubsw_safe(wt, co, kh, row):
+            return True
+    return False
 
 
 def plan_arena(graph: CNNGraph,
@@ -1356,6 +1496,262 @@ class QuantCGenerator(CGenerator):
         w("vacc = _mm_add_epi32(vacc, _mm_srli_si128(vacc, 4));")
         w("acc += _mm_cvtsi128_si32(vacc);")
 
+    # -- tiled dot-product kernels --------------------------------------------
+
+    @property
+    def qisa(self) -> Optional[QISA]:
+        return QISAS.get(self.opts.simd)
+
+    @property
+    def _x86(self) -> bool:
+        q = self.qisa
+        return q is not None and q.arch == "x86"
+
+    def _layer_qisa(self, wt: np.ndarray, co: int, kh: int,
+                    row: int) -> Optional[QISA]:
+        """The kernel variant actually emitted for one weighted layer:
+        the session's variant when the layer tiles (>= one full channel
+        group), with the per-layer ``avx_ubs`` -> ``avx`` demotion when
+        the weights cannot prove ``vpmaddubsw`` saturation-free."""
+        q = self.qisa
+        if q is None or co < q.group:
+            return None
+        if q.name == "avx_ubs" and not maddubsw_safe(wt, co, kh, row):
+            return QISAS["avx"]
+        return q
+
+    def _vec_requant(self, eff: QISA, tf_init: str, mexpr: Optional[str],
+                     act: Optional[str], alpha: float, is_sink: bool,
+                     zp: int, dstp: str) -> None:
+        """The fused requant epilogue on one ``group``-wide vector:
+        float rescale, activation, round-half-up (trunc+fixup floor, the
+        scalar emitter's exact sequence), zero point, saturating int8
+        pack, one store — no scalar round trip.  ``tf_init`` yields the
+        pre-scale float vector (an int32 accumulator convert, or a raw
+        float load for input quantization); ``mexpr`` the multiplier
+        vector (``None`` to skip); ``dstp`` the destination pointer
+        (float for the sink, int8 codes otherwise)."""
+        w = self.w
+        if eff.arch == "arm":
+            w.open("")
+            w(f"float32x4_t tf = {tf_init};")
+            if mexpr is not None:
+                w(f"tf = vmulq_f32(tf, {mexpr});")
+            if act == "relu":
+                w("tf = vmaxq_f32(tf, vdupq_n_f32(0.0f));")
+            elif act == "leaky_relu":
+                w(f"tf = vmaxq_f32(tf, vmulq_f32(tf, "
+                  f"vdupq_n_f32({_flit(alpha)})));")
+            if is_sink:
+                w(f"vst1q_f32({dstp}, tf);")
+                w.close()
+                return
+            # vrndm (floor) then truncating convert == the scalar
+            # trunc+fixup floor for every non-saturating value
+            w("float32x4_t uf = vaddq_f32(tf, vdupq_n_f32(0.5f));")
+            w("int32x4_t qi = vcvtq_s32_f32(vrndmq_f32(uf));")
+            w(f"qi = vaddq_s32(qi, vdupq_n_s32({zp}));")
+            w.open("")
+            w("int16x4_t q16 = vqmovn_s32(qi);")
+            w("int8x8_t q8 = vqmovn_s16(vcombine_s16(q16, q16));")
+            w("int s4 = vget_lane_s32(vreinterpret_s32_s8(q8), 0);")
+            w(f"memcpy({dstp}, &s4, 4);")
+            w.close()
+            w.close()
+            return
+        pfx = "_mm256" if eff.wide else "_mm"
+        rf = "__m256" if eff.wide else "__m128"
+        w.open("")
+        w(f"{rf} tf = {tf_init};")
+        if mexpr is not None:
+            w(f"tf = {pfx}_mul_ps(tf, {mexpr});")
+        if act == "relu":
+            w(f"tf = {pfx}_max_ps(tf, {pfx}_setzero_ps());")
+        elif act == "leaky_relu":
+            w(f"tf = {pfx}_max_ps(tf, {pfx}_mul_ps(tf, "
+              f"{pfx}_set1_ps({_flit(alpha)})));")
+        if is_sink:
+            w(f"{pfx}_storeu_ps({dstp}, tf);")
+            w.close()
+            return
+        w(f"{rf} uf = {pfx}_add_ps(tf, {pfx}_set1_ps(0.5f));")
+        w(f"{rf}i qi = {pfx}_cvttps_epi32(uf);")
+        if eff.wide:
+            w("qi = _mm256_add_epi32(qi, _mm256_castps_si256("
+              "_mm256_cmp_ps(_mm256_cvtepi32_ps(qi), uf, _CMP_GT_OQ)));")
+        else:
+            w("qi = _mm_add_epi32(qi, _mm_castps_si128("
+              "_mm_cmpgt_ps(_mm_cvtepi32_ps(qi), uf)));")
+        w(f"qi = {pfx}_add_epi32(qi, {pfx}_set1_epi32({zp}));")
+        w.open("")
+        if eff.wide:
+            w("__m128i pk = _mm_packs_epi32(_mm256_castsi256_si128(qi), "
+              "_mm256_extracti128_si256(qi, 1));")
+            w("pk = _mm_packs_epi16(pk, pk);")
+            w(f"_mm_storel_epi64((__m128i *)({dstp}), pk);")
+        else:
+            w("__m128i pk = _mm_packs_epi16(_mm_packs_epi32(qi, qi), qi);")
+            w("int s4 = _mm_cvtsi128_si32(pk);")
+            w(f"memcpy({dstp}, &s4, 4);")
+        w.close()
+        w.close()
+
+    def _tiled_x_block(self, eff: QISA, n: int, t0: int, real: int) -> None:
+        """Broadcast ``lane_taps`` consecutive input codes from window
+        row ``n`` into ``vx`` (declared here).  Full blocks are one
+        4-byte load (or a 2-tap sign-extended pair); the statically-last
+        partial block of each row builds the word from single bytes so
+        the zero-padded weight lanes never read past the row."""
+        w = self.w
+        L = eff.lane_taps
+        if eff.arch == "arm" and L == 1:
+            w(f"const int16x4_t vx = vdup_n_s16((short)xr{n}[{t0}]);")
+            return
+        w("int xp;")
+        if L == 2:
+            if real == 2:
+                w(f"xp = (int)(((unsigned)xr{n}[{t0 + 1}] << 16) | "
+                  f"((unsigned)xr{n}[{t0}] & 0xffffu));")
+            else:
+                w(f"xp = (int)((unsigned)xr{n}[{t0}] & 0xffffu);")
+            w(f"{'__m256i' if eff.wide else '__m128i'} vx = "
+              f"{'_mm256' if eff.wide else '_mm'}_set1_epi32(xp);")
+            return
+        # L == 4 (vnni / maddubsw / neon_dot)
+        if real == 4:
+            w(f"memcpy(&xp, xr{n} + {t0}, 4);")
+        else:
+            parts = [f"((unsigned)(xr{n}[{t0 + i}] & 255) << {8 * i})"
+                     for i in range(real)]
+            w(f"xp = (int)({' | '.join(parts)});")
+        if eff.arch == "arm":
+            w("int8x16_t vx = vreinterpretq_s8_s32(vdupq_n_s32(xp));")
+        elif eff.unsigned_x:
+            w("__m256i vx = _mm256_xor_si256(_mm256_set1_epi32(xp), "
+              "vflip);")
+        else:
+            w("__m256i vx = _mm256_set1_epi32(xp);")
+
+    def _tiled_acc_line(self, eff: QISA, g: int, wname: str,
+                        off: int) -> str:
+        if eff.name == "avx_vnni":
+            return (f"acc{g} = _mm256_dpbusd_epi32(acc{g}, vx, "
+                    f"_mm256_loadu_si256((const __m256i *)"
+                    f"({wname} + {off})));")
+        if eff.name == "avx_ubs":
+            return (f"acc{g} = _mm256_add_epi32(acc{g}, _mm256_madd_epi16("
+                    f"_mm256_maddubs_epi16(vx, _mm256_loadu_si256("
+                    f"(const __m256i *)({wname} + {off}))), vone16));")
+        if eff.name == "avx":
+            return (f"acc{g} = _mm256_add_epi32(acc{g}, _mm256_madd_epi16("
+                    f"vx, _mm256_loadu_si256((const __m256i *)"
+                    f"({wname} + {off}))));")
+        if eff.name == "sse":
+            return (f"acc{g} = _mm_add_epi32(acc{g}, _mm_madd_epi16(vx, "
+                    f"_mm_loadu_si128((const __m128i *)({wname} + {off}))));")
+        if eff.name == "neon_dot":
+            return (f"acc{g} = vdotq_s32(acc{g}, vx, "
+                    f"vld1q_s8({wname} + {off}));")
+        return (f"acc{g} = vmlal_s16(acc{g}, vx, "
+                f"vld1_s16({wname} + {off}));")  # neon vmlal_s16
+
+    def _emit_tiled_layer(self, eff: QISA, *, src: str, dst: str, co: int,
+                          kh: int, row: int, wt: np.ndarray,
+                          bias_main: np.ndarray, bias_plain: np.ndarray,
+                          scales: np.ndarray, act: Optional[str],
+                          alpha: float, is_sink: bool, zp_out: int,
+                          xbase, xbase_var: str, oidx: str) -> None:
+        """The register-tiled channel-group kernel for one conv/dense
+        layer (caller has opened the output-position loops and resolved
+        padding).  Weight tiles are packed so each dot instruction feeds
+        ``group`` output-channel accumulators from one broadcast of the
+        input taps; accumulators stay in registers from the int32 bias
+        load to the fused requant store.  Channels past the last full
+        group run the per-channel rolled fallback (bit-identical: int32
+        sums are exact in any order)."""
+        w = self.w
+        G, L = eff.group, eff.lane_taps
+        ng = co // G
+        taps = kh * row
+        packed, P = _pack_qweights(wt, co, kh, row, G, L)
+        if L == 4:
+            wname = self.const_i8(f"w{self.uid()}", packed)
+        else:
+            wname = self.const_i16(f"w{self.uid()}", packed)
+        bname = self.const_i32(f"b{self.uid()}", bias_main[:ng * G])
+        mname = self.const_array(f"m{self.uid()}", scales)
+        k0 = ng * G
+        if k0 < co:
+            wtail = self.const_i8(f"wt{self.uid()}", wt[k0:])
+            btail = self.const_i32(f"bt{self.uid()}", bias_plain[k0:])
+        x86 = eff.arch == "x86"
+        for c0 in range(0, ng, _QTILE_MAX_GROUPS):
+            gs = list(range(c0, min(c0 + _QTILE_MAX_GROUPS, ng)))
+            w.open("")
+            for n in range(kh):
+                w(f"const signed char *xr{n} = {src} + {xbase(n)};")
+            if eff.unsigned_x:
+                w("const __m256i vflip = _mm256_set1_epi8(-128);")
+            if eff.name == "avx_ubs":
+                w("const __m256i vone16 = _mm256_set1_epi16(1);")
+            for g in gs:
+                if eff.name == "sse":
+                    w(f"__m128i acc{g} = _mm_loadu_si128((const __m128i *)"
+                      f"({bname} + {g * G}));")
+                elif x86:
+                    w(f"__m256i acc{g} = _mm256_loadu_si256("
+                      f"(const __m256i *)({bname} + {g * G}));")
+                else:
+                    w(f"int32x4_t acc{g} = vld1q_s32({bname} + {g * G});")
+            for n in range(kh):
+                for p in range(P):
+                    t0 = p * L
+                    real = min(L, row - t0)
+                    w.open("")
+                    self._tiled_x_block(eff, n, t0, real)
+                    for g in gs:
+                        off = ((n * P + p) * ng + g) * (G * L)
+                        w(self._tiled_acc_line(eff, g, wname, off))
+                    w.close()
+            for g in gs:
+                if x86:
+                    pfx = "_mm256" if eff.wide else "_mm"
+                    tf_init = f"{pfx}_cvtepi32_ps(acc{g})"
+                    mexpr = f"{pfx}_loadu_ps({mname} + {g * G})"
+                else:
+                    tf_init = f"vcvtq_f32_s32(acc{g})"
+                    mexpr = f"vld1q_f32({mname} + {g * G})"
+                dstp = (f"out + {oidx} + {g * G}" if is_sink
+                        else f"{dst} + {oidx} + {g * G}")
+                self._vec_requant(eff, tf_init, mexpr, act, alpha,
+                                  is_sink, zp_out, dstp)
+            w.close()
+        if k0 < co:
+            use_sse = x86 and row >= 16
+            w.open("")
+            w("int kk;")
+            w.open(f"for (kk = 0; kk < {co - k0}; ++kk)")
+            w.open("")
+            w(f"int acc = {btail}[kk];")
+            w("float t;" if is_sink else self._REQ_DECLS)
+            if use_sse:
+                w("__m128i vacc = _mm_setzero_si128();")
+            self.floop("n", kh)
+            self._dot_inner(src, wtail, row, use_sse, xbase_var,
+                            f"kk * {taps} + n * {row}")
+            self.fclose()
+            if use_sse:
+                self._hsum_sse()
+            w(f"t = (float)acc * {mname}[{k0} + kk];")
+            self._act_float(act, alpha)
+            if is_sink:
+                w(f"out[{oidx} + {k0} + kk] = t;")
+            else:
+                self._round_clamp(zp_out, f"{dst}[{oidx} + {k0} + kk]")
+            w.close()
+            w.close()
+            w.close()
+
     # -- weighted layers ------------------------------------------------------
 
     def emit_qconv(self, layer: Conv2D, in_shape, src: str, dst: str,
@@ -1380,15 +1776,33 @@ class QuantCGenerator(CGenerator):
         # taps of one output channel contiguous: (co, kh, kw, ci)
         wt = np.transpose(qg.weights[layer.name].w_q,
                           (3, 0, 1, 2)).reshape(co, taps)
-        use_patch = _qconv_use_patch(layer, self.opts)
-        # patch taps padded to the paired-madd granularity (2 vectors)
-        vstep16 = 16 if self.opts.simd == "avx" else 8
-        wtaps = (-(-taps // (2 * vstep16)) * (2 * vstep16)
-                 if use_patch else taps)
         scales = (qg.dequant_scales(layer) if is_sink
                   else qg.requant_scales(layer))
-        use_sse = self.opts.isa is not None and (use_patch or row >= 16)
-        if use_patch or taps >= 16:  # tiny-window branch uses literals
+        eff = self._layer_qisa(wt, co, kh, row)
+        use_sse = self._x86 and row >= 16
+        zp_out = 0 if is_sink else qg.out_qp(layer).zero_point
+        if eff is not None:
+            if eff.name != self.opts.simd:
+                w(f"/* {layer.name}: maddubsw saturation unprovable, "
+                  f"pair-madd variant */")
+            self.floop("i", oh)
+            self.floop("j", ow)
+            self._emit_tiled_layer(
+                eff, src=src, dst=dst, co=co, kh=kh, row=row, wt=wt,
+                bias_main=qg.effective_bias(
+                    layer, 128 if eff.unsigned_x else 0),
+                bias_plain=qg.effective_bias(layer), scales=scales,
+                act=act, alpha=layer.alpha, is_sink=is_sink,
+                zp_out=zp_out,
+                xbase=lambda n: (f"((i * {sh} + {n}) * {wdt} + "
+                                 f"j * {sw}) * {ci}"),
+                xbase_var=f"((i * {sh} + n) * {wdt} + j * {sw}) * {ci}",
+                oidx=f"(i * {ow} + j) * {co}")
+            self.fclose(2)
+            if is_sink and act == "softmax":
+                self.emit_softmax((oh, ow, co), "out")
+            return
+        if taps >= 16:  # tiny-window branch uses literals
             bname = self.const_i32(f"b{self.uid()}",
                                    qg.effective_bias(layer))
             mname = self.const_array(f"m{self.uid()}", scales)
@@ -1402,91 +1816,7 @@ class QuantCGenerator(CGenerator):
                 self._round_clamp(qg.out_qp(layer).zero_point,
                                   f"{dst}[{oidx}]")
 
-        if use_patch:
-            # im2row the window into a stack-local int16 patch (C89
-            # constant size, reentrant), zero-padded to a 16-multiple;
-            # weights are the same int8 codes pre-widened to int16, so
-            # the per-channel loop is pure _mm_madd_epi16 — the widened
-            # layout changes nothing numerically (int sums are exact)
-            wname = self.const_i16(
-                f"w{self.uid()}", np.pad(wt, ((0, 0), (0, wtaps - taps))))
-            w.open("")
-            w(f"short patch[{wtaps}];")
-            if wtaps > taps:  # the constant zero tail, filled once
-                w(_cfor("z", wtaps - taps, f"patch[{taps} + z] = 0;"))
-            self.floop("i", oh)
-            self.floop("j", ow)
-            self.floop("n", kh)
-            w(_cfor("z", row,
-                    f"patch[n * {row} + z] = "
-                    f"{src}[((i * {sh} + n) * {wdt} + j * {sw}) "
-                    f"* {ci} + z];"))
-            self.fclose()
-            # vector plumbing: 256-bit integer madd on AVX2 (16 int16
-            # MACs/op), 128-bit SSE2 otherwise
-            wide = self.opts.simd == "avx"
-            vstep = vstep16
-            vreg = "__m256i" if wide else "__m128i"
-            pfx = "_mm256" if wide else "_mm"
-            cast = "(const __m256i *)" if wide else "(const __m128i *)"
-            ld = (f"{pfx}_loadu_si256" if wide else f"{pfx}_loadu_si128")
-            zero = (f"{pfx}_setzero_si256()" if wide
-                    else f"{pfx}_setzero_si128()")
-            groups = wtaps // vstep
-            cache_regs = groups <= 10  # window fits the vector file
-            if cache_regs:
-                # hoist the widened window into registers once per
-                # output position — per channel only the weight loads
-                # and madds remain (straight-line, no loop control)
-                w.open("")
-                for gi in range(groups):
-                    w(f"const {vreg} x{gi} = {ld}("
-                      f"{cast}(patch + {gi * vstep}));")
-            self.floop("k", co)
-            w.open("")
-            w(f"int acc = {bname}[k];")
-            w("float t;" if is_sink else self._REQ_DECLS)
-            w(f"{vreg} v0 = {zero};")
-            w(f"{vreg} v1 = {zero};")
-            w(f"const short *wr = {wname} + k * {wtaps};")
-            if cache_regs:
-                for gi in range(groups):
-                    acc_reg = f"v{gi % 2}"
-                    w(f"{acc_reg} = {pfx}_add_epi32({acc_reg}, "
-                      f"{pfx}_madd_epi16(x{gi}, {ld}("
-                      f"{cast}(wr + {gi * vstep}))));")
-            else:
-                w.open("")
-                w("int z;")
-                w.open(f"for (z = 0; z < {wtaps}; z += {2 * vstep})")
-                w(f"v0 = {pfx}_add_epi32(v0, {pfx}_madd_epi16(")
-                w(f"    {ld}({cast}(patch + z)),")
-                w(f"    {ld}({cast}(wr + z))));")
-                w(f"v1 = {pfx}_add_epi32(v1, {pfx}_madd_epi16(")
-                w(f"    {ld}({cast}(patch + z + {vstep})),")
-                w(f"    {ld}({cast}(wr + z + {vstep}))));")
-                w.close()
-                w.close()
-            w(f"v0 = {pfx}_add_epi32(v0, v1);")
-            if wide:
-                w("{ __m128i s = _mm_add_epi32("
-                  "_mm256_castsi256_si128(v0), "
-                  "_mm256_extracti128_si256(v0, 1));")
-                w("s = _mm_add_epi32(s, _mm_srli_si128(s, 8));")
-                w("s = _mm_add_epi32(s, _mm_srli_si128(s, 4));")
-                w("acc += _mm_cvtsi128_si32(s); }")
-            else:
-                w("v0 = _mm_add_epi32(v0, _mm_srli_si128(v0, 8));")
-                w("v0 = _mm_add_epi32(v0, _mm_srli_si128(v0, 4));")
-                w("acc += _mm_cvtsi128_si32(v0);")
-            requant_one(f"(i * {ow} + j) * {co} + k")
-            w.close()
-            self.fclose()
-            if cache_regs:
-                w.close()
-            self.fclose(2)
-            w.close()
-        elif taps < 16:
+        if taps < 16:
             # tiny window (e.g. first conv on a 1-channel image):
             # straight-line taps with the int8 weight codes as literals
             # (P3) — no const arrays, no inner loop overhead
@@ -1593,13 +1923,29 @@ class QuantCGenerator(CGenerator):
         d_in, d_out = layer.weights.shape
         act = layer.activation
         w(f"/* QDense {layer.name}: {d_in}->{d_out} int8/int32 */")
-        wname = self.const_i8(f"w{self.uid()}",
-                              qg.weights[layer.name].w_q.T)  # (d_out, d_in)
-        bname = self.const_i32(f"b{self.uid()}", qg.effective_bias(layer))
+        wt = qg.weights[layer.name].w_q.T  # (d_out, d_in)
         scales = (qg.dequant_scales(layer) if is_sink
                   else qg.requant_scales(layer))
+        eff = self._layer_qisa(wt, d_out, 1, d_in)
+        if eff is not None:
+            if eff.name != self.opts.simd:
+                w(f"/* {layer.name}: maddubsw saturation unprovable, "
+                  f"pair-madd variant */")
+            self._emit_tiled_layer(
+                eff, src=src, dst=dst, co=d_out, kh=1, row=d_in, wt=wt,
+                bias_main=qg.effective_bias(
+                    layer, 128 if eff.unsigned_x else 0),
+                bias_plain=qg.effective_bias(layer), scales=scales,
+                act=act, alpha=layer.alpha, is_sink=is_sink,
+                zp_out=0 if is_sink else qg.out_qp(layer).zero_point,
+                xbase=lambda n: "0", xbase_var="0", oidx="0")
+            if is_sink and act == "softmax":
+                self.emit_softmax((1, 1, d_out), "out")
+            return
+        wname = self.const_i8(f"w{self.uid()}", wt)
+        bname = self.const_i32(f"b{self.uid()}", qg.effective_bias(layer))
         mname = self.const_array(f"m{self.uid()}", scales)
-        use_sse = self.opts.isa is not None and d_in >= 16
+        use_sse = self._x86 and d_in >= 16
         self.floop("k", d_out)
         w.open("")
         w(f"int acc = {bname}[k];")
@@ -1642,17 +1988,64 @@ class QuantCGenerator(CGenerator):
             return (f"((i * {sh} + {n}) * {wdt} + (j * {sw} + {m})) "
                     f"* {c} + k")
 
+        def scalar_max(qv: str) -> None:
+            w(f"signed char {qv} = {src}[{idx(0, 0)}];")
+            for n in range(kh):
+                for m in range(kw_):
+                    if n == 0 and m == 0:
+                        continue
+                    w(f"{qv} = {src}[{idx(n, m)}] > {qv} ? "
+                      f"{src}[{idx(n, m)}] : {qv};")
+            w(f"{dst}[(i * {ow} + j) * {co} + k] = {qv};")
+
+        q = self.qisa
+        if q is not None and c >= 16:
+            self.floop("i", oh)
+            self.floop("j", ow)
+            w.open("")
+            w("int k;")
+            w.open(f"for (k = 0; k + 16 <= {c}; k += 16)")
+            w.open("")
+            if q.arch == "x86":
+                # pmaxsb needs SSE4.1 — xor 0x80 / max_epu8 / xor is
+                # the SSE2-safe signed byte max
+                w("const __m128i vf = _mm_set1_epi8(-128);")
+                w(f"__m128i mx = _mm_xor_si128(_mm_loadu_si128("
+                  f"(const __m128i *)({src} + {idx(0, 0)})), vf);")
+                for n in range(kh):
+                    for m in range(kw_):
+                        if n == 0 and m == 0:
+                            continue
+                        w(f"mx = _mm_max_epu8(mx, _mm_xor_si128("
+                          f"_mm_loadu_si128((const __m128i *)"
+                          f"({src} + {idx(n, m)})), vf));")
+                w(f"_mm_storeu_si128((__m128i *)({dst} + "
+                  f"(i * {ow} + j) * {co} + k), _mm_xor_si128(mx, vf));")
+            else:
+                w(f"int8x16_t mx = vld1q_s8({src} + {idx(0, 0)});")
+                for n in range(kh):
+                    for m in range(kw_):
+                        if n == 0 and m == 0:
+                            continue
+                        w(f"mx = vmaxq_s8(mx, "
+                          f"vld1q_s8({src} + {idx(n, m)}));")
+                w(f"vst1q_s8({dst} + (i * {ow} + j) * {co} + k, mx);")
+            w.close()
+            w.close()
+            if c % 16:
+                w.open(f"for (; k < {c}; ++k)")
+                w.open("")
+                scalar_max("qv")
+                w.close()
+                w.close()
+            w.close()
+            self.fclose(2)
+            return
         self.floop("i", oh)
         self.floop("j", ow)
         self.floop("k", c)
         w.open("")
-        w(f"signed char q = {src}[{idx(0, 0)}];")
-        for n in range(kh):
-            for m in range(kw_):
-                if n == 0 and m == 0:
-                    continue
-                w(f"q = {src}[{idx(n, m)}] > q ? {src}[{idx(n, m)}] : q;")
-        w(f"{dst}[(i * {ow} + j) * {co} + k] = q;")
+        scalar_max("q")
         w.close()
         self.fclose(3)
 
@@ -1719,7 +2112,40 @@ class QuantCGenerator(CGenerator):
         act = layer.activation
         w(f"/* QAdd {layer.name}: {len(srcs)} inputs, {shape}, "
           f"act={act} */")
+        q = self.qisa
+        zp_out = qg.out_qp(layer).zero_point
+        nf = (n // 8) * 8
+        if q is not None and q.arch == "x86" and q.wide and nf:
+            # widen 8 codes, dequant per input, sum left-associated in
+            # source order (same float op order as the scalar loop),
+            # then the fused epilogue
+            tf = None
+            for i, s in enumerate(srcs):
+                qp = qg.in_qp(layer, i)
+                term = (f"_mm256_mul_ps(_mm256_cvtepi32_ps("
+                        f"_mm256_sub_epi32(_mm256_cvtepi8_epi32("
+                        f"_mm_loadl_epi64((const __m128i *)({s} + z))), "
+                        f"_mm256_set1_epi32({qp.zero_point}))), "
+                        f"_mm256_set1_ps({_flit(qg.rescale(layer, i))}))")
+                tf = term if tf is None else f"_mm256_add_ps({tf}, {term})"
+            w.open("")
+            w("int z;")
+            w.open(f"for (z = 0; z < {nf}; z += 8)")
+            self._vec_requant(q, tf, None, act, layer.alpha, False,
+                              zp_out, f"{dst} + z")
+            w.close()
+            w.open(f"for (z = {nf}; z < {n}; ++z)")
+            self._qadd_scalar_body(layer, srcs, dst, act, zp_out)
+            w.close()
+            w.close()
+            return
         self.floop("z", n)
+        self._qadd_scalar_body(layer, srcs, dst, act, zp_out)
+        self.fclose()
+
+    def _qadd_scalar_body(self, layer: Add, srcs: List[str], dst: str,
+                          act: Optional[str], zp_out: int) -> None:
+        qg, w = self.qg, self.w
         w.open("")
         w(self._REQ_DECLS)
         for i, s in enumerate(srcs):
@@ -1728,9 +2154,8 @@ class QuantCGenerator(CGenerator):
             w(f"t {op} (float)({s}[z] - {qp.zero_point}) * "
               f"{_flit(qg.rescale(layer, i))};")
         self._act_float(act, layer.alpha)
-        self._round_clamp(qg.out_qp(layer).zero_point, f"{dst}[z]")
+        self._round_clamp(zp_out, f"{dst}[z]")
         w.close()
-        self.fclose()
 
     def emit_qconcat(self, layer: Concat, in_shapes, srcs: List[str],
                      dst: str) -> None:
@@ -1815,15 +2240,34 @@ class QuantCGenerator(CGenerator):
 
         # input quantization: float x -> int8 codes
         in_qp = self.qg.input_qp
+        q = self.qisa
+        n_in = int(np.prod(g.input_shape))
         w(f"/* quantize input: q = floor(x * {in_qp.inv_scale} + 0.5) "
           f"+ {in_qp.zero_point} */")
-        self.floop("z", int(np.prod(g.input_shape)))
+        nf = (n_in // q.group) * q.group if q is not None else 0
         w.open("")
-        w(self._REQ_DECLS)
-        w(f"t = x[z] * {_flit(in_qp.inv_scale)};")
-        self._round_clamp(in_qp.zero_point, f"{_cname('xq')}[z]")
+        w("int z;")
+        if nf:
+            if q.arch == "x86":
+                pfx = "_mm256" if q.wide else "_mm"
+                tf_init = f"{pfx}_loadu_ps(x + z)"
+                mexpr = f"{pfx}_set1_ps({_flit(in_qp.inv_scale)})"
+            else:
+                tf_init = "vld1q_f32(x + z)"
+                mexpr = f"vdupq_n_f32({_flit(in_qp.inv_scale)})"
+            w.open(f"for (z = 0; z < {nf}; z += {q.group})")
+            self._vec_requant(q, tf_init, mexpr, None, 0.0, False,
+                              in_qp.zero_point, f"{_cname('xq')} + z")
+            w.close()
+        if nf < n_in:
+            w.open(f"for (z = {nf}; z < {n_in}; ++z)")
+            w.open("")
+            w(self._REQ_DECLS)
+            w(f"t = x[z] * {_flit(in_qp.inv_scale)};")
+            self._round_clamp(in_qp.zero_point, f"{_cname('xq')}[z]")
+            w.close()
+            w.close()
         w.close()
-        self.fclose()
 
         for layer in g.layers:
             if isinstance(layer, IDENTITY_LAYERS):
@@ -1911,8 +2355,10 @@ class QuantCGenerator(CGenerator):
         hdr(f" * int8 arena {plan.total_bytes} B "
             f"(float32 intermediates would be ~4x) */")
         hdr("#include <math.h>")
-        if opts.isa is not None:
-            hdr(f"#include <{opts.isa.header}>")
+        if q is not None:
+            hdr(f"#include <{q.header}>")
+            hdr("#include <string.h>")  # memcpy: strict-aliasing-safe
+                                        # unaligned 4-byte load/store
         hdr("#if defined(__STDC_VERSION__) && __STDC_VERSION__ >= 199901L")
         hdr("#define NNCG_RESTRICT restrict")
         hdr("#else")

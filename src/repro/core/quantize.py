@@ -339,13 +339,19 @@ class QuantizedGraph:
                                     layer.pad_amounts(in_shape))
         return np.float32(s_in / (s_out * counts.astype(np.float64)))
 
-    def effective_bias(self, layer) -> np.ndarray:
+    def effective_bias(self, layer, x_offset: int = 0) -> np.ndarray:
         """(c_out,) int32: bias with the input zero-point correction
         folded in (``b_q[k] - zp_in * sum_taps w_q[...,k]``), so the C
         inner loop is a plain raw-code dot product — padding an int8
-        feature map with the zero code then cancels exactly."""
+        feature map with the zero code then cancels exactly.
+
+        ``x_offset=128`` is the u8·s8 kernel variant's view
+        (``vpmaddubsw``/``vpdpbusd`` take *unsigned* activations): the
+        emitter re-biases every int8 code by +128 (one XOR of the sign
+        bit), and this fold subtracts the matching ``128 * sum(w)`` —
+        the int32 accumulator is bit-identical to the signed kernels'."""
         lq = self.weights[layer.name]
-        zp = self.in_qp(layer).zero_point
+        zp = self.in_qp(layer).zero_point + x_offset
         w = lq.w_q.astype(np.int64)
         if isinstance(layer, Conv2D):
             wsum = w.sum(axis=(0, 1, 2))

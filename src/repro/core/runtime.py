@@ -8,14 +8,16 @@ tests/benchmarks can call it directly against the JAX oracle.
 """
 from __future__ import annotations
 
+import contextlib
 import ctypes
 import hashlib
 import os
+import platform
 import subprocess
 import tempfile
 import time
-from dataclasses import dataclass
-from typing import Optional, Sequence
+from dataclasses import dataclass, replace
+from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -75,9 +77,11 @@ def compile_c(source: str, *, simd: str = "sse",
     with open(c_path, "w") as f:
         f.write(source)
     flags = ["-O3", "-fPIC", "-shared", "-std=c99"]
-    from .cgen import ISAS
+    from .cgen import ISAS, QISAS
     if simd in ISAS:
         flags.extend(ISAS[simd].cc_flags)
+    elif simd in QISAS:
+        flags.extend(QISAS[simd].cc_flags)
     cmd = [_cc(), *flags, *extra_flags, c_path, "-o", so_path, "-lm"]
     t0 = time.time()
     COMPILE_STATS["cc_invocations"] += 1
@@ -116,6 +120,8 @@ class CompiledNet:
     per_layer_live_bytes: Optional[dict] = None
     precision: str = "fp32"          # 'fp32' | 'int8'
     workspace_bytes: int = 0         # int8 builds: arena size in bytes
+    simd: str = "sse"                # the variant actually compiled
+                                     # (post CPU-feature fallback)
 
     def __post_init__(self):
         lib = ctypes.CDLL(self.so_path)
@@ -245,6 +251,9 @@ def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
           extra_flags: Sequence[str] = ()) -> CompiledNet:
     """graph -> C -> .so -> callable."""
     opts = opts or CodegenOptions()
+    actual = resolve_float_simd(opts.simd)
+    if actual != opts.simd:
+        opts = replace(opts, simd=actual)
     gen = CGenerator(graph, opts)
     src = gen.generate()
     so = compile_c(src, simd=opts.simd, extra_flags=extra_flags)
@@ -261,6 +270,7 @@ def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
         arena_buffer_sum_bytes=plan.buffer_sum_bytes,
         per_layer_live_bytes={k: v * 4
                               for k, v in plan.per_layer_live.items()},
+        simd=opts.simd,
     )
 
 
@@ -270,9 +280,16 @@ def build_quantized(qgraph, opts: Optional[CodegenOptions] = None,
 
     ``qgraph`` is a :class:`repro.core.quantize.QuantizedGraph`; the
     compiled net's workspace is the byte-planned int8 arena (~4x
-    smaller than the float build's)."""
+    smaller than the float build's).  The requested kernel variant is
+    resolved against the host's CPU features first (walking the QISA
+    fallback chain), so e.g. an AVX-512-VNNI .so is never built — let
+    alone loaded — on a non-VNNI host; ``CompiledNet.simd`` reports
+    what actually ran."""
     from .cgen import QuantCGenerator
     opts = opts or CodegenOptions()
+    actual = resolve_int8_simd(opts.simd)
+    if actual != opts.simd:
+        opts = replace(opts, simd=actual)
     gen = QuantCGenerator(qgraph, opts)
     src = gen.generate()
     so = compile_c(src, simd=opts.simd, extra_flags=extra_flags)
@@ -292,15 +309,64 @@ def build_quantized(qgraph, opts: Optional[CodegenOptions] = None,
                               for k, v in plan.per_layer_live.items()},
         precision="int8",
         workspace_bytes=plan.total_bytes,
+        simd=opts.simd,
     )
 
 
+# -- runtime CPU-feature detection ----------------------------------------
+
+_CPU_FEATURES: Optional[frozenset] = None
+_FEATURE_OVERRIDE: Optional[frozenset] = None
+
+
+def cpu_features() -> frozenset:
+    """The host CPU's feature tokens — the union of every ``flags``
+    (x86) / ``Features`` (ARM) line in /proc/cpuinfo, split on
+    whitespace.  Token-based on purpose: a substring test would accept
+    ``avx512f`` as evidence of ``avx``-anything."""
+    if _FEATURE_OVERRIDE is not None:
+        return _FEATURE_OVERRIDE
+    global _CPU_FEATURES
+    if _CPU_FEATURES is None:
+        feats = set()
+        try:
+            with open("/proc/cpuinfo") as f:
+                for line in f:
+                    key, _, rest = line.partition(":")
+                    if key.strip().lower() in ("flags", "features"):
+                        feats.update(rest.split())
+        except OSError:  # pragma: no cover
+            pass
+        _CPU_FEATURES = frozenset(feats)
+    return _CPU_FEATURES
+
+
+@contextlib.contextmanager
+def force_cpu_features(feats: Optional[Sequence[str]]) -> Iterator[None]:
+    """Test hook: pretend the host advertises exactly ``feats``
+    (``None`` restores real detection).  Lets the fallback chain be
+    exercised on any machine without risking an actual SIGILL."""
+    global _FEATURE_OVERRIDE
+    prev = _FEATURE_OVERRIDE
+    _FEATURE_OVERRIDE = None if feats is None else frozenset(feats)
+    try:
+        yield
+    finally:
+        _FEATURE_OVERRIDE = prev
+
+
+def _machine_arch() -> str:
+    m = platform.machine().lower()
+    return "arm" if ("arm" in m or "aarch" in m) else "x86"
+
+
 def host_supports_ssse3() -> bool:
-    return _cpu_has("ssse3")
+    return "ssse3" in cpu_features()
 
 
 def host_supports_avx2() -> bool:
-    return _cpu_has("avx2") and _cpu_has("fma")
+    feats = cpu_features()
+    return "avx2" in feats and "fma" in feats
 
 
 def best_isa() -> str:
@@ -313,9 +379,39 @@ def best_isa() -> str:
     return "structured"
 
 
-def _cpu_has(flag: str) -> bool:
-    try:
-        with open("/proc/cpuinfo") as f:
-            return flag in f.read()
-    except OSError:  # pragma: no cover
+def resolve_float_simd(requested: str) -> str:
+    """Clamp a float-build SIMD request to what the host can run."""
+    if requested == "avx" and not host_supports_avx2():
+        requested = "sse"
+    if requested == "sse" and not host_supports_ssse3():
+        requested = "structured"
+    return requested
+
+
+def int8_simd_supported(name: str) -> bool:
+    """True when the host can execute int8 kernel variant ``name``."""
+    from .cgen import QISAS
+    q = QISAS.get(name)
+    if q is None:
+        return True  # generic / structured: plain C, runs anywhere
+    if q.arch != _machine_arch():
         return False
+    feats = cpu_features()
+    return all(f in feats for f in q.cpu_flags)
+
+
+def resolve_int8_simd(requested: str) -> str:
+    """Walk the QISA fallback chain down to the best variant the host
+    advertises support for (SIGILL guard for every int8 build)."""
+    from .cgen import QISAS
+    name = requested
+    while not int8_simd_supported(name):
+        q = QISAS.get(name)
+        name = q.fallback if q is not None and q.fallback else "generic"
+    return name
+
+
+def supported_int8_simds() -> List[str]:
+    """Every int8 kernel variant this host can run, best-first."""
+    order = ["avx_vnni", "avx_ubs", "avx", "sse", "neon_dot", "neon"]
+    return [n for n in order if int8_simd_supported(n)] + ["generic"]

@@ -20,7 +20,7 @@ import json
 import os
 import tempfile
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -187,6 +187,22 @@ class Autotuner:
             })
         return TuneResult(levels=levels, us_per_call=best, from_cache=False,
                           term_cap=self.term_cap)
+
+
+def int8_variant_candidates(qgraph=None) -> List[str]:
+    """The int8 kernel variants worth timing on this host, best-first.
+
+    Starts from :func:`runtime.supported_int8_simds` (the CPU-feature
+    guard — a variant the host can't execute is never enumerated, let
+    alone loaded), then drops ``avx_ubs`` when no layer of ``qgraph``
+    passes the static ``vpmaddubsw`` saturation proof: that build
+    would demote every layer to the plain ``avx`` tile, so timing it
+    would only duplicate the ``avx`` candidate."""
+    cands = runtime.supported_int8_simds()
+    if qgraph is not None and "avx_ubs" in cands \
+            and not cgen.maddubsw_any_eligible(qgraph):
+        cands = [c for c in cands if c != "avx_ubs"]
+    return cands
 
 
 def tune_best_simd(graph: CNNGraph, simds, *,

@@ -24,6 +24,7 @@ from __future__ import annotations
 import abc
 import ctypes
 import time
+from dataclasses import replace
 from typing import Dict, List, Optional, Type
 
 import numpy as np
@@ -188,6 +189,10 @@ class CBackend(Backend):
             self.net = runtime.build_quantized(qgraph, self.opts)
         else:
             self.net = runtime.build(graph, self.opts)
+        if self.net.simd != self.opts.simd:
+            # the runtime CPU-feature guard demoted the requested
+            # variant; report what actually runs
+            self.opts = replace(self.opts, simd=self.net.simd)
 
     def predict_batch(self, x: np.ndarray) -> np.ndarray:
         n = x.shape[0]

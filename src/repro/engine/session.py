@@ -31,7 +31,8 @@ import numpy as np
 from repro.core import cgen, passes, quantize as quantize_mod, runtime
 from repro.core.graph import CNNGraph
 
-from .autotune import Autotuner, TuneResult, TuningCache, tune_best_simd
+from .autotune import (Autotuner, TuneResult, TuningCache,
+                       int8_variant_candidates, tune_best_simd)
 from .backends import (Backend, CBackend, QuantizedXLABackend, get_backend)
 from .config import CalibrationConfig, SessionConfig
 
@@ -251,11 +252,13 @@ class InferenceSession:
         if cfg.autotune:
             cands = candidates
             if not cands:
-                cands = ["generic"]
-                if runtime.host_supports_ssse3():
-                    cands.insert(0, "sse")
-                if runtime.host_supports_avx2():
-                    cands.insert(0, "avx")
+                cands = int8_variant_candidates(self.qgraph)
+            else:
+                # explicit simd_search lists still go through the
+                # runtime CPU-feature guard (no SIGILL, no duplicate
+                # builds after fallback collapses variants)
+                cands = list(dict.fromkeys(
+                    runtime.resolve_int8_simd(s) for s in cands))
             cache = self._tuning_cache()
             # the generated int8 C embeds the calibration-derived
             # qparams, so the cache key must carry them: a different
@@ -265,10 +268,10 @@ class InferenceSession:
                             extra=f"int8:{qdigest}:i{cfg.tune_iters}")
             rec = cache.get(key)
             if rec is not None and rec.get("simd") in cands:
-                self.simd = rec["simd"]
                 self._backend = CBackend(
-                    self.graph, simd=self.simd, func_name=cfg.func_name,
+                    self.graph, simd=rec["simd"], func_name=cfg.func_name,
                     threads=cfg.threads, qgraph=self.qgraph)
+                self.simd = self._backend.opts.simd
                 self.tuned = TuneResult(levels={}, us_per_call=float(
                     rec.get("us_per_call", 0.0)), from_cache=True)
                 return
@@ -283,16 +286,21 @@ class InferenceSession:
                                        warmup=max(10, cfg.tune_iters // 10))
                 if best is None or t < best[0]:
                     best = (t, simd, b)
-            _, self.simd, self._backend = best
+            _, _, self._backend = best
+            self.simd = self._backend.opts.simd
             cache.put(key, {"simd": self.simd,
                             "us_per_call": round(best[0], 3)})
             self.tuned = TuneResult(levels={}, us_per_call=best[0],
                                     from_cache=False)
         else:
-            self._backend = CBackend(self.graph, simd=self.simd,
+            # no autotune: honor an explicit simd= (post guard) or take
+            # the host's best int8 variant outright
+            simd = cfg.simd or runtime.supported_int8_simds()[0]
+            self._backend = CBackend(self.graph, simd=simd,
                                      func_name=cfg.func_name,
                                      threads=cfg.threads,
                                      qgraph=self.qgraph)
+            self.simd = self._backend.opts.simd
 
     # -- shapes --------------------------------------------------------------
 

@@ -1,0 +1,300 @@
+"""Tiled int8 dot-product kernels: the per-variant bit-exactness
+matrix (generic / madd16 / vpmaddubsw / VNNI, each vs the quantized
+jax reference with ``assert_array_equal``), channel counts that land
+on every vector-width tail, the static ``vpmaddubsw`` saturation
+proof, and the runtime CPU-feature guard (force-masked fallback
+chain — an unsupported variant is never built, let alone loaded).
+
+NEON is covered structurally here (codegen must produce the dot/mlal
+kernels); its *execution* parity runs cross-compiled under QEMU in CI
+via ``tools/cross_check.py``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import cgen, jax_exec, passes, quantize, runtime
+from repro.core.graph import (
+    Add, CNNGraph, Concat, Conv2D, Dense, DepthwiseConv2D, Flatten,
+    Input, MaxPool,
+)
+from repro.engine import autotune
+
+X86_VARIANTS = ["generic", "sse", "avx", "avx_ubs", "avx_vnni"]
+ARM_VARIANTS = ["neon", "neon_dot"]
+
+
+def _skip_unless_int8_simd(simd: str) -> None:
+    if not runtime.int8_simd_supported(simd):
+        pytest.skip(f"host cannot execute int8 variant {simd!r}")
+
+
+def _conv(rng, kh, kw, ci, co, **kw_args) -> Conv2D:
+    w = rng.normal(0, 0.5, (kh, kw, ci, co)).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Conv2D(weights=w, bias=b, **kw_args)
+
+
+def _kernel_zoo(seed=7) -> CNNGraph:
+    """Softmax-free net covering every tiled-kernel code path: strided
+    same-pad conv, group tails (co=19 and 33 are neither 4- nor
+    8-aligned), leaky/relu epilogues, MaxPool >= 16 channels (the
+    vectorized byte-max), a two-input Add (the fused vector requant on
+    merges), depthwise, and two Dense tails."""
+    rng = np.random.default_rng(seed)
+    dw_w = rng.normal(0, 0.5, (3, 3, 12, 1)).astype(np.float32)
+    dw_b = rng.normal(0, 0.1, (12,)).astype(np.float32)
+    return CNNGraph([
+        Input(shape=(11, 9, 3), name="in"),
+        _conv(rng, 3, 3, 3, 12, padding="same", activation="relu",
+              name="c1"),
+        DepthwiseConv2D(weights=dw_w, bias=dw_b, padding="same",
+                        activation="leaky_relu", name="dw"),
+        Add(name="add", inputs=["dw", "c1"], activation="relu"),
+        _conv(rng, 3, 3, 12, 19, strides=(2, 2), padding="same",
+              activation="leaky_relu", name="c2"),
+        MaxPool(size=(2, 2), padding="same", name="mp"),
+        _conv(rng, 2, 2, 19, 33, padding="valid", name="c3"),
+        Flatten(name="fl"),
+        Dense(weights=rng.normal(0, 0.2, (2 * 2 * 33, 21)).astype(
+                  np.float32),
+              bias=rng.normal(0, 0.1, (21,)).astype(np.float32),
+              activation="relu", name="d1"),
+        Dense(weights=rng.normal(0, 0.2, (21, 10)).astype(np.float32),
+              bias=rng.normal(0, 0.1, (10,)).astype(np.float32),
+              name="d2"),
+    ])
+
+
+def _quantized(graph: CNNGraph, seed=3):
+    g = passes.optimize(graph, simd_multiple=1)
+    xs = np.random.default_rng(seed).normal(
+        size=(8,) + tuple(g.input_shape)).astype(np.float32)
+    return g, xs, quantize.quantize(g, xs)
+
+
+# ---------------------------------------------- per-variant parity ----
+
+@pytest.mark.parametrize("simd", X86_VARIANTS)
+def test_tiled_kernel_bit_exact_vs_jax_reference(simd):
+    """Every kernel variant computes the identical int32 accumulator
+    (integer sums are exact in any order; the u8 re-bias folds into the
+    bias int32-exactly) and the identical fused requant epilogue (the
+    vector round/clamp mirrors the scalar trunc-fixup floor op by op)
+    — so outputs must be *equal*, not close, for every variant."""
+    _skip_unless_int8_simd(simd)
+    g, xs, qg = _quantized(_kernel_zoo())
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    net = runtime.build_quantized(qg, cgen.CodegenOptions(simd=simd))
+    assert net.simd == simd  # host supports it: no silent fallback
+    got = net.predict_batch(xs).reshape(ref.shape)
+    np.testing.assert_array_equal(got, ref)
+
+
+_TAIL_CHANNELS = [1, 3, 4, 5, 8, 9, 17]  # every co % 4 / co % 8 class
+
+
+@pytest.mark.parametrize("co", _TAIL_CHANNELS)
+def test_channel_tail_parity_all_variants(co):
+    """Output-channel counts straddling the group widths (4 for SSE,
+    8 for the AVX family): full tiles, partial per-channel tails, and
+    the sub-group co < G case must all be bit-exact."""
+    rng = np.random.default_rng(co)
+    g0 = CNNGraph([
+        Input(shape=(6, 5, 3), name="in"),
+        _conv(rng, 3, 3, 3, co, padding="same", activation="relu",
+              name="c1"),
+        _conv(rng, 1, 1, co, max(co // 2, 1), name="c2"),
+    ])
+    g, xs, qg = _quantized(g0, seed=co)
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    for simd in X86_VARIANTS:
+        if not runtime.int8_simd_supported(simd):
+            continue
+        net = runtime.build_quantized(qg, cgen.CodegenOptions(simd=simd))
+        got = net.predict_batch(xs).reshape(ref.shape)
+        np.testing.assert_array_equal(got, ref, err_msg=f"simd={simd}")
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=12, deadline=None)
+    @given(co=st.integers(min_value=1, max_value=36),
+           ci=st.integers(min_value=1, max_value=9))
+    def test_channel_sweep_parity_hypothesis(co, ci):
+        """Wider randomized sweep over (c_in, c_out): the row length
+        ci*kw decides the lane-tap tail inside each 4-byte quad, co the
+        group tail — both axes must stay exact everywhere."""
+        rng = np.random.default_rng(co * 100 + ci)
+        g0 = CNNGraph([
+            Input(shape=(5, 4, ci), name="in"),
+            Conv2D(weights=rng.normal(0, 0.5, (3, 2, ci, co)).astype(
+                       np.float32),
+                   bias=rng.normal(0, 0.1, (co,)).astype(np.float32),
+                   padding="same", activation="leaky_relu", name="c1"),
+        ])
+        g, xs, qg = _quantized(g0, seed=ci)
+        ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+        for simd in X86_VARIANTS:
+            if not runtime.int8_simd_supported(simd):
+                continue
+            net = runtime.build_quantized(
+                qg, cgen.CodegenOptions(simd=simd))
+            got = net.predict_batch(xs).reshape(ref.shape)
+            np.testing.assert_array_equal(got, ref, err_msg=f"simd={simd}")
+
+
+# ------------------------------------- maddubsw saturation proof ----
+
+def test_maddubsw_safe_bounds():
+    """The static proof is exactly the int16 saturation bound of
+    ``vpmaddubsw``: positive pair sum <= 128, negative >= -128 (255 *
+    128 = 32640 <= 32767, but 255 * 129 overflows)."""
+    def wt(pair):
+        a = np.zeros((8, 4), dtype=np.int64)
+        a[0, :2] = pair
+        return a
+
+    assert cgen.maddubsw_safe(wt((127, 1)), 8, 1, 4)
+    assert cgen.maddubsw_safe(wt((127, -127)), 8, 1, 4)
+    assert cgen.maddubsw_safe(wt((-127, -1)), 8, 1, 4)
+    assert not cgen.maddubsw_safe(wt((127, 2)), 8, 1, 4)
+    assert not cgen.maddubsw_safe(wt((65, 64)), 8, 1, 4)
+    assert not cgen.maddubsw_safe(wt((-127, -2)), 8, 1, 4)
+
+
+def _alternating_sign_conv(rng, kh, kw, ci, co, **kw_args) -> Conv2D:
+    """Float weights whose sign alternates along the tap axis: every
+    adjacent quantized pair is (one positive, one negative), so the
+    positive pair sum is <= 127 and the layer is provably maddubsw-safe
+    regardless of magnitudes."""
+    taps = np.arange(kh * kw * ci).reshape(kh, kw, ci)
+    sign = np.where(taps % 2 == 0, 1.0, -1.0)[..., None]
+    w = (rng.uniform(0.1, 1.0, (kh, kw, ci, co)) * sign).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Conv2D(weights=w, bias=b, **kw_args)
+
+
+def test_avx_ubs_eligible_layer_uses_maddubsw_and_stays_exact():
+    rng = np.random.default_rng(11)
+    g0 = CNNGraph([
+        Input(shape=(7, 6, 4), name="in"),
+        _alternating_sign_conv(rng, 3, 3, 4, 16, padding="same",
+                               activation="relu", name="c1"),
+        _conv(rng, 1, 1, 16, 8, name="c2"),
+    ])
+    g, xs, qg = _quantized(g0, seed=11)
+    assert cgen.maddubsw_any_eligible(qg)
+    src = cgen.generate_quantized_c(qg, cgen.CodegenOptions(simd="avx_ubs"))
+    assert "_mm256_maddubs_epi16" in src  # the u8*s8 scheme is emitted
+    if runtime.int8_simd_supported("avx_ubs"):
+        ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+        net = runtime.build_quantized(
+            qg, cgen.CodegenOptions(simd="avx_ubs"))
+        got = net.predict_batch(xs).reshape(ref.shape)
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_avx_ubs_ineligible_layer_demotes_to_pair_madd():
+    """A layer that cannot prove the saturation bound must not emit
+    maddubsw — it falls back to the always-exact pair-madd tile inside
+    the same build (per layer, not per net)."""
+    rng = np.random.default_rng(13)
+    g0 = CNNGraph([
+        Input(shape=(6, 6, 3), name="in"),
+        _conv(rng, 3, 3, 3, 16, padding="same", name="c1"),
+    ])
+    g, xs, qg = _quantized(g0, seed=13)
+    if cgen.maddubsw_any_eligible(qg):  # pragma: no cover
+        pytest.skip("random net happened to be maddubsw-safe")
+    src = cgen.generate_quantized_c(qg, cgen.CodegenOptions(simd="avx_ubs"))
+    assert "_mm256_maddubs_epi16" not in src
+    assert "_mm256_madd_epi16" in src
+
+
+# ------------------------------------------- NEON codegen structure ----
+
+@pytest.mark.parametrize("simd,marker", [("neon", "vmlal_s16"),
+                                         ("neon_dot", "vdotq_s32")])
+def test_neon_codegen_emits_dot_kernels(simd, marker):
+    """Structural check on any host; executed bit-exact under QEMU in
+    the CI cross-compile lane (tools/cross_check.py)."""
+    g, xs, qg = _quantized(_kernel_zoo())
+    src = cgen.generate_quantized_c(qg, cgen.CodegenOptions(simd=simd))
+    assert marker in src
+    assert "arm_neon.h" in src
+    assert "immintrin.h" not in src and "emmintrin.h" not in src
+
+
+# ------------------------------------------ runtime feature guard ----
+
+def test_force_masked_fallback_chain():
+    """The guard walks the QISA fallback chain down to what the masked
+    'host' advertises — never crossing an unsupported rung."""
+    with runtime.force_cpu_features(["sse2", "ssse3"]):
+        assert runtime.resolve_int8_simd("avx_vnni") == "sse"
+        assert runtime.resolve_int8_simd("avx_ubs") == "sse"
+        assert runtime.resolve_int8_simd("avx") == "sse"
+        assert runtime.resolve_int8_simd("sse") == "sse"
+        assert runtime.supported_int8_simds() == ["sse", "generic"]
+    with runtime.force_cpu_features([]):
+        assert runtime.resolve_int8_simd("avx_vnni") == "generic"
+        assert runtime.resolve_int8_simd("neon_dot") == "generic"
+        assert runtime.supported_int8_simds() == ["generic"]
+    with runtime.force_cpu_features(
+            ["avx2", "fma", "ssse3", "sse2"]):
+        # AVX2 but no VNNI: the VNNI request lands on the avx tile
+        assert runtime.resolve_int8_simd("avx_vnni") == "avx"
+        assert "avx_vnni" not in runtime.supported_int8_simds()
+
+
+def test_force_masked_build_never_loads_unsupported_so():
+    """Requesting VNNI on a masked SSE-only 'host' must produce an SSE
+    .so (bit-exact, runnable) — the AVX-512 binary is never built."""
+    g, xs, qg = _quantized(_kernel_zoo())
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    with runtime.force_cpu_features(["sse2", "ssse3"]):
+        net = runtime.build_quantized(
+            qg, cgen.CodegenOptions(simd="avx_vnni"))
+        assert net.simd == "sse"
+    got = net.predict_batch(xs).reshape(ref.shape)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_variant_candidates_respect_feature_mask():
+    g, xs, qg = _quantized(_kernel_zoo())
+    with runtime.force_cpu_features(["sse2", "ssse3"]):
+        assert autotune.int8_variant_candidates(qg) == ["sse", "generic"]
+    with runtime.force_cpu_features([]):
+        assert autotune.int8_variant_candidates(qg) == ["generic"]
+
+
+def test_cpu_features_are_tokens_not_substrings():
+    with runtime.force_cpu_features(["avx512f"]):
+        # substring matching would claim 'avx' here
+        assert not runtime.host_supports_avx2()
+        assert runtime.resolve_int8_simd("avx") == "generic"
+
+
+@pytest.mark.slow
+def test_cross_check_neon_under_qemu():
+    """Full ARM lane locally when the toolchain is around (CI always
+    runs it via tools/cross_check.py directly): cross-compile the NEON
+    variants, execute under qemu-aarch64, bit-compare vs jax."""
+    import subprocess
+    import sys
+
+    script = os.path.join(os.path.dirname(__file__), "..", "tools",
+                          "cross_check.py")
+    proc = subprocess.run([sys.executable, script],
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode == 2:
+        pytest.skip("aarch64 cross toolchain / qemu not installed")
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,223 @@
+#!/usr/bin/env python
+"""CI gate for the NEON int8 kernel variants: cross-compile, *execute*,
+bit-compare.
+
+For each check net (softmax-free — ``expf`` is libm-version dependent,
+the integer path is not) and each ARM variant (``generic`` as the
+cross-toolchain baseline, ``neon`` vmlal, ``neon_dot`` vdot):
+
+1. generate the int8 C + a tiny file-I/O ``main()`` harness,
+2. cross-compile with ``aarch64-linux-gnu-gcc -static`` (static link:
+   QEMU user mode needs no target sysroot),
+3. run the binary under ``qemu-aarch64 -cpu max`` (dotprod available),
+4. compare the raw float32 outputs byte-for-byte against
+   ``jax_exec.forward_quantized`` — the same hard oracle the x86
+   variants face in tests/test_int8_kernels.py.
+
+Also compiles the aarch64 ``generic`` build under the strict C89 gate
+(``-std=c89 -Wall -Wextra -Werror -pedantic-errors``), so the "plain
+ANSI C deploys on the robot" claim is checked with the robot's own
+toolchain, not just the host's.
+
+Exit codes: 0 all bit-exact, 1 mismatch/compile failure, 2 toolchain
+missing (CI installs it; locally tests skip on 2).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import cgen, jax_exec, passes, quantize  # noqa: E402
+from repro.core.graph import (  # noqa: E402
+    Add, CNNGraph, Conv2D, Dense, DepthwiseConv2D, Flatten, Input,
+    MaxPool,
+)
+
+ARM_VARIANTS = ["generic", "neon", "neon_dot"]
+STRICT_FLAGS = ["-std=c89", "-Wall", "-Wextra", "-Werror",
+                "-pedantic-errors"]
+
+_HARNESS = """
+#include <stdio.h>
+
+int main(int argc, char **argv)
+{{
+    static float x[{in_n}];
+    static float out[{out_n}];
+    FILE *fi;
+    FILE *fo;
+    if (argc != 3) {{
+        return 2;
+    }}
+    fi = fopen(argv[1], "rb");
+    fo = fopen(argv[2], "wb");
+    if (fi == NULL || fo == NULL) {{
+        return 2;
+    }}
+    while (fread(x, sizeof(float), {in_n}, fi) == (size_t){in_n}) {{
+        {func}(x, out);
+        fwrite(out, sizeof(float), {out_n}, fo);
+    }}
+    fclose(fi);
+    fclose(fo);
+    return 0;
+}}
+"""
+
+
+def _conv(rng, kh, kw, ci, co, **kw_args) -> Conv2D:
+    w = rng.normal(0, 0.5, (kh, kw, ci, co)).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Conv2D(weights=w, bias=b, **kw_args)
+
+
+def _kernel_zoo(seed=7) -> CNNGraph:
+    """Same construct coverage as tests/test_int8_kernels.py: tiled
+    convs with group tails, depthwise, Add, vectorized MaxPool, Dense."""
+    rng = np.random.default_rng(seed)
+    dw_w = rng.normal(0, 0.5, (3, 3, 12, 1)).astype(np.float32)
+    dw_b = rng.normal(0, 0.1, (12,)).astype(np.float32)
+    return CNNGraph([
+        Input(shape=(11, 9, 3), name="in"),
+        _conv(rng, 3, 3, 3, 12, padding="same", activation="relu",
+              name="c1"),
+        DepthwiseConv2D(weights=dw_w, bias=dw_b, padding="same",
+                        activation="leaky_relu", name="dw"),
+        Add(name="add", inputs=["dw", "c1"], activation="relu"),
+        _conv(rng, 3, 3, 12, 19, strides=(2, 2), padding="same",
+              activation="leaky_relu", name="c2"),
+        MaxPool(size=(2, 2), padding="same", name="mp"),
+        _conv(rng, 2, 2, 19, 33, padding="valid", name="c3"),
+        Flatten(name="fl"),
+        Dense(weights=rng.normal(0, 0.2, (2 * 2 * 33, 21)).astype(
+                  np.float32),
+              bias=rng.normal(0, 0.1, (21,)).astype(np.float32),
+              activation="relu", name="d1"),
+        Dense(weights=rng.normal(0, 0.2, (21, 10)).astype(np.float32),
+              bias=rng.normal(0, 0.1, (10,)).astype(np.float32),
+              name="d2"),
+    ])
+
+
+def _camera_conv_net(seed=9) -> CNNGraph:
+    """Robot-detector-shaped stack (no softmax head) so the CI lane
+    also runs a realistically-sized conv pyramid under emulation."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(30, 40, 3), name="in"),
+        _conv(rng, 5, 5, 3, 8, strides=(2, 2), padding="same",
+              activation="leaky_relu", name="c1"),
+        MaxPool(size=(2, 2), name="mp1"),
+        _conv(rng, 3, 3, 8, 16, padding="same", activation="leaky_relu",
+              name="c2"),
+        _conv(rng, 3, 3, 16, 20, padding="valid", activation="relu",
+              name="c3"),
+    ])
+
+
+def _find_tool(explicit, names):
+    if explicit:
+        return explicit if shutil.which(explicit) else None
+    for n in names:
+        if shutil.which(n):
+            return n
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cc", default=None,
+                    help="aarch64 cross compiler (default: autodetect)")
+    ap.add_argument("--qemu", default=None,
+                    help="qemu user-mode binary (default: autodetect)")
+    args = ap.parse_args()
+    cc = _find_tool(args.cc, ["aarch64-linux-gnu-gcc",
+                              "aarch64-unknown-linux-gnu-gcc"])
+    qemu = _find_tool(args.qemu, ["qemu-aarch64", "qemu-aarch64-static"])
+    if cc is None or qemu is None:
+        print(f"cross_check: toolchain missing (cc={cc}, qemu={qemu})",
+              file=sys.stderr)
+        return 2
+
+    nets = {"zoo": _kernel_zoo(), "camera": _camera_conv_net()}
+    failures = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, g0 in nets.items():
+            g = passes.optimize(g0, simd_multiple=1)
+            rng = np.random.default_rng(3)
+            xs = rng.normal(size=(8,) + tuple(g.input_shape)).astype(
+                np.float32)
+            qg = quantize.quantize(g, xs)
+            ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+            in_n = int(np.prod(g.input_shape))
+            out_n = ref.size // len(xs)
+            x_path = os.path.join(tmp, f"{name}_x.bin")
+            xs.astype("<f4").tofile(x_path)
+            for simd in ARM_VARIANTS:
+                opts = cgen.CodegenOptions(simd=simd)
+                src = cgen.generate_quantized_c(qg, opts)
+                src += _HARNESS.format(in_n=in_n, out_n=out_n,
+                                       func=opts.func_name)
+                c_path = os.path.join(tmp, f"{name}_{simd}.c")
+                with open(c_path, "w") as f:
+                    f.write(src)
+                exe = os.path.join(tmp, f"{name}_{simd}")
+                flags = list(cgen.QISAS[simd].cc_flags) \
+                    if simd in cgen.QISAS else []
+                cmd = [cc, "-O2", "-static", *flags, c_path, "-o", exe,
+                       "-lm"]
+                proc = subprocess.run(cmd, capture_output=True, text=True)
+                tag = f"{name}/{simd}"
+                if proc.returncode != 0:
+                    failures += 1
+                    print(f"cross_check: {tag}: CROSS-COMPILE FAILED\n"
+                          f"{proc.stderr[:4000]}", file=sys.stderr)
+                    continue
+                o_path = os.path.join(tmp, f"{name}_{simd}_out.bin")
+                proc = subprocess.run(
+                    [qemu, "-cpu", "max", exe, x_path, o_path],
+                    capture_output=True, text=True, timeout=600)
+                if proc.returncode != 0:
+                    failures += 1
+                    print(f"cross_check: {tag}: QEMU RUN FAILED "
+                          f"(rc={proc.returncode})\n{proc.stderr[:2000]}",
+                          file=sys.stderr)
+                    continue
+                got = np.fromfile(o_path, dtype="<f4").reshape(ref.shape)
+                if np.array_equal(got, ref):
+                    print(f"cross_check: {tag}: BIT-EXACT "
+                          f"({len(xs)} images, {out_n} outputs each)")
+                else:
+                    failures += 1
+                    bad = int((got != ref).sum())
+                    print(f"cross_check: {tag}: MISMATCH "
+                          f"({bad}/{ref.size} values differ)",
+                          file=sys.stderr)
+            # strict ANSI gate with the robot's toolchain: the generic
+            # int8 build must survive -std=c89 -Werror on aarch64 too
+            strict_c = os.path.join(tmp, f"{name}_strict.c")
+            with open(strict_c, "w") as f:
+                f.write(cgen.generate_quantized_c(
+                    qg, cgen.CodegenOptions(simd="generic")))
+            proc = subprocess.run(
+                [cc, *STRICT_FLAGS, "-c", strict_c, "-o",
+                 strict_c + ".o"], capture_output=True, text=True)
+            if proc.returncode == 0:
+                print(f"cross_check: {name}/strict-c89(aarch64): OK")
+            else:
+                failures += 1
+                print(f"cross_check: {name}/strict-c89(aarch64): FAILED\n"
+                      f"{proc.stderr[:4000]}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
