@@ -123,9 +123,9 @@ def _saturated(sess: InferenceSession, frames: np.ndarray,
         sess.predict(frames[i % nf])
     seq_qps = n_requests / (time.perf_counter() - t0)
 
-    srv = InferenceServer(sess, config=ServerConfig(
-        workers=1, max_batch=64, max_queue=8192,
-        batch_deadline_ms=5.0, request_timeout_ms=None))
+    cfg = ServerConfig(workers=1, max_batch=64, max_queue=8192,
+                       batch_deadline_ms=5.0, request_timeout_ms=None)
+    srv = InferenceServer(sess, config=cfg)
     for i in range(200):
         srv.submit(frames[i % nf])
     time.sleep(0.1)                           # warm the batch path
@@ -149,6 +149,11 @@ def _saturated(sess: InferenceSession, frames: np.ndarray,
         "speedup_vs_sequential": round(sat_qps / seq_qps, 3),
         "batch_occupancy": round(occ, 3),
         "requests": n_requests,
+        # the serving topology the numbers were taken under — a row
+        # without these is unreproducible (a 1-worker and a 4-worker
+        # saturated run are different experiments)
+        "workers": cfg.workers,
+        "max_batch": cfg.max_batch,
     }
 
 
@@ -162,20 +167,25 @@ def bench_net(name: str, *, duration_s: float, quick: bool) -> dict:
     lat_us = sess.benchmark(frames[0], iters=200 if quick else 1000)
     capacity = 1e6 / lat_us
     rows = []
+    open_cfg = ServerConfig(workers=1, max_batch=16, max_queue=4096,
+                            batch_deadline_ms=2.0,
+                            request_timeout_ms=5000.0)
     for frac in RATE_FRACTIONS:
         rate = min(frac * capacity, MAX_OFFERED_QPS)
-        srv = InferenceServer(sess, config=ServerConfig(
-            workers=1, max_batch=16, max_queue=4096,
-            batch_deadline_ms=2.0, request_timeout_ms=5000.0))
+        srv = InferenceServer(sess, config=open_cfg)
         row = _open_loop(srv, frames, rate, duration_s)
         srv.close()
         row["capacity_fraction"] = frac
+        row["workers"] = open_cfg.workers
+        row["max_batch"] = open_cfg.max_batch
         rows.append(row)
         print(f"serve_{name}_rate{frac},{row['p50_us']:.1f},"
               f"p99={row['p99_us']:.1f},qps={row['achieved_qps']:.0f}")
 
     out = {"single_image_us": round(lat_us, 3),
            "capacity_qps": round(capacity, 1),
+           "pipeline_stages": sess.backend.describe().get(
+               "pipeline_stages", 1),
            "rates": rows}
     if name == "pedestrian":
         out["saturated"] = _saturated(

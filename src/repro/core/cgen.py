@@ -72,11 +72,13 @@ from .graph import (
     pool_window_counts,
 )
 
+from .schedule import Schedule, make_schedule  # noqa: F401  (re-export)
+
 Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
 
 # bump whenever the emitted C changes for the same (graph, options) —
 # cached artifacts measured on older generated code must not be reused
-CODEGEN_VERSION = 6
+CODEGEN_VERSION = 7
 
 # the single source of truth for the unroll/icache emission budget
 # (both CodegenOptions.term_budget and choose_levels read it)
@@ -259,6 +261,20 @@ class CodegenOptions:
         return self.func_name + "_ws"
 
     @property
+    def pipeline_func_name(self) -> str:
+        """Multi-stage entry: `<func>_pipeline(x, out, ws, nstages)` —
+        emitted when the schedule has more than one stage."""
+        return self.func_name + "_pipeline"
+
+    @property
+    def pipeline_nstages_func_name(self) -> str:
+        return self.func_name + "_pipeline_nstages"
+
+    def stage_func_name(self, s: int) -> str:
+        """Per-stage function of the pipelined build."""
+        return f"{self.func_name}_stage{s}"
+
+    @property
     def ws_size_func_name(self) -> str:
         return self.func_name + "_workspace_floats"
 
@@ -429,11 +445,17 @@ class ArenaPlan:
         return max(self.per_layer_live.values(), default=0)
 
 
-def _value_map(graph: CNNGraph, quantized: bool = False) -> Dict[str, str]:
+def _value_map(graph: CNNGraph, quantized: bool = False,
+               schedule: Optional[Schedule] = None) -> Dict[str, str]:
     """Layer name -> the value (buffer) holding its output. Identity
     layers alias their producer; Input aliases the ``x`` argument — in
     quantized mode the input is itself quantized into an arena buffer
-    (``xq``), so Input *defines* a value."""
+    (``xq``), so Input *defines* a value.
+
+    Under a fusing ``schedule``, a fused producer writes straight into
+    its Add's buffer — its own tensor never exists, so its name aliases
+    the Add's value.  (No identity layer can alias a fused producer:
+    the fusion predicate requires the Add to be its sole consumer.)"""
     val: Dict[str, str] = {}
     for l in graph.layers:
         if isinstance(l, Input):
@@ -442,6 +464,9 @@ def _value_map(graph: CNNGraph, quantized: bool = False) -> Dict[str, str]:
             val[l.name] = val[l.inputs[0]]
         else:
             val[l.name] = l.name
+    if schedule is not None:
+        for p, a in schedule.fused_adds:
+            val[p] = val[a]
     return val
 
 
@@ -530,7 +555,8 @@ def maddubsw_any_eligible(qgraph) -> bool:
 
 def plan_arena(graph: CNNGraph,
                opts: Optional[CodegenOptions] = None,
-               *, quantized: bool = False) -> ArenaPlan:
+               *, quantized: bool = False,
+               schedule: Optional[Schedule] = None) -> ArenaPlan:
     """Liveness-planned packing of every intermediate tensor.
 
     A value is live from the step of its defining layer to the step of
@@ -544,11 +570,19 @@ def plan_arena(graph: CNNGraph,
     buffering, for DAGs the skip edges extend lifetimes exactly as long
     as needed.  Quantized plans are in int8 elements (1 byte each), the
     ~4x memory win the int8 path exists for.
+
+    Under a fusing ``schedule`` a fused producer *defines* its Add's
+    value (the store happens inside the producer's loop), so the
+    interval starts at the producer's step; the fused Add's own step
+    only extends lifetimes (the other operands are read there in the
+    unfused reference semantics, and reading them during the producer's
+    loop is covered because their intervals span it).
     """
     opts = opts or CodegenOptions()
     smap = graph.shape_map()
-    val = _value_map(graph, quantized)
+    val = _value_map(graph, quantized, schedule)
     out_value = val[graph.sink.name]
+    fused_by_p = schedule.fused_by_producer if schedule is not None else {}
 
     defs: Dict[str, int] = {}
     last: Dict[str, int] = {}
@@ -560,7 +594,8 @@ def plan_arena(graph: CNNGraph,
             sizes["xq"] = int(np.prod(smap[layer.name]))
         elif not isinstance(layer, IDENTITY_LAYERS):
             v = val[layer.name]
-            if v == layer.name:  # defines a fresh value
+            defines = v == layer.name or fused_by_p.get(layer.name) == v
+            if defines and v not in defs:  # first (producer) def wins
                 defs[v] = i
                 sizes[v] = int(np.prod(smap[layer.name]))
             scratch = _pad_scratch_elems(layer, smap[layer.inputs[0]],
@@ -618,14 +653,33 @@ def _cname(value: str) -> str:
     return "t_" + re.sub(r"[^0-9A-Za-z_]", "_", value)
 
 
+@dataclass
+class _FuseCtx:
+    """Active epilogue fusion while one producer's loops are emitted:
+    the Add folded into the store site, the producer's position in the
+    Add's (order-significant) input list, and the resolved source
+    expressions of every Add operand."""
+
+    add: Add
+    pos: int
+    srcs: List[str]
+
+
 class CGenerator:
-    def __init__(self, graph: CNNGraph, opts: CodegenOptions):
+    def __init__(self, graph: CNNGraph, opts: CodegenOptions,
+                 schedule: Optional[Schedule] = None):
         self.g = graph
         self.opts = opts
+        self.schedule = schedule if schedule is not None else \
+            make_schedule(graph, fusion=True, nstages=1)
         self.w = _W()
         self.decls = _W()
         self._uid = 0
+        self._fuse: Optional[_FuseCtx] = None
         self.plan: Optional[ArenaPlan] = None  # filled by generate()
+        self.ws_total_elems: int = 0           # arena + stage interfaces
+        self.iface_elems: Tuple[int, ...] = ()
+        self.stage_syms: Tuple[str, ...] = ()
 
     # -- helpers ------------------------------------------------------------
 
@@ -669,6 +723,49 @@ class CGenerator:
             # max(x, a*x) == leaky_relu(x) for 0 < a < 1 — branch-free
             return [f"{reg} = {isa.vmax(reg, isa.mul(reg, isa.set1(_flit(alpha))))};"]
         return []
+
+    # -- fused stores (graph-level epilogue fusion) --------------------------
+    #
+    # With an active _FuseCtx the producer's store site performs the
+    # downstream Add: the activated accumulator is substituted at the
+    # producer's position in the Add's left-associated input-order sum,
+    # then the Add's activation is applied — the exact float op order
+    # of the unfused graph (emit_add), so fusion is bitwise identical.
+
+    def _fused_rhs(self, layer, expr: str, oidx: str) -> str:
+        """RHS stored for output element ``oidx`` of ``layer`` given
+        its (pre-activation) accumulator expression."""
+        act = layer.activation if layer.activation != "softmax" else None
+        term = self.act_scalar(expr, act, layer.alpha)
+        fc = self._fuse
+        if fc is None:
+            return term
+        terms = [term if i == fc.pos else f"{s}[{oidx}]"
+                 for i, s in enumerate(fc.srcs)]
+        return self.act_scalar(" + ".join(terms), fc.add.activation,
+                               fc.add.alpha)
+
+    def _store_scalar(self, layer, expr: str, oidx: str, dst: str) -> None:
+        self.w(f"{dst}[{oidx}] = {self._fused_rhs(layer, expr, oidx)};")
+
+    def _store_vec(self, layer, reg: str, oidx: str, dst: str) -> None:
+        """Vector store of ``reg`` (one ISA-width channel group at flat
+        output index ``oidx``), with the producer's activation and, when
+        fusing, the Add chain + Add activation applied in-register."""
+        w, isa = self.w, self.opts.isa
+        act = layer.activation if layer.activation != "softmax" else None
+        for ln in self.act_sse(reg, act, layer.alpha):
+            w(ln)
+        fc = self._fuse
+        if fc is not None:
+            expr = None
+            for i, s in enumerate(fc.srcs):
+                t = reg if i == fc.pos else isa.load(f"{s}[{oidx}]")
+                expr = t if expr is None else isa.add(expr, t)
+            w(f"{reg} = {expr};")
+            for ln in self.act_sse(reg, fc.add.activation, fc.add.alpha):
+                w(ln)
+        w(isa.store(f"{dst}[{oidx}]", reg))
 
     # -- padding ------------------------------------------------------------
 
@@ -808,9 +905,8 @@ class CGenerator:
                 wv = f"{wname}[((n * {kw_} + m) * {ci} + o) * {co} + k]"
                 w(f"acc = {isa.fmadd(isa.set1(xv), isa.load(wv), 'acc')};")
                 self.fclose(3)
-                for ln in self.act_sse("acc", act, layer.alpha):
-                    w(ln)
-                w(isa.store(f"{dst}[(i * {ow} + j) * {co} + k]", "acc"))
+                self._store_vec(layer, "acc", f"(i * {ow} + j) * {co} + k",
+                                dst)
                 self.fclose()
             ks = range(co4, co)
         elif self.opts.simd == "structured":
@@ -829,7 +925,7 @@ class CGenerator:
             self.fclose(3)
             w(_cfor("k", co,
                     f"{dst}[(i * {ow} + j) * {co} + k] = "
-                    f"{self.act_scalar('acc[k]', act, layer.alpha)};"))
+                    f"{self._fused_rhs(layer, 'acc[k]', f'(i * {ow} + j) * {co} + k')};"))
             w.close()
             ks = ()
         else:
@@ -841,8 +937,8 @@ class CGenerator:
             w(f"acc += {wname}[((n * {kw_} + m) * {ci} + o) * {co} + k] * "
               f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];")
             self.fclose(3)
-            w(f"{dst}[(i * {ow} + j) * {co} + k] = "
-              f"{self.act_scalar('acc', act, layer.alpha)};")
+            self._store_scalar(layer, "acc", f"(i * {ow} + j) * {co} + k",
+                               dst)
             self.fclose()
             ks = ()
         # scalar tail for sse mode
@@ -854,8 +950,8 @@ class CGenerator:
                 f"acc += {wname}[((n * {kw_} + m) * {ci} + o) * {co} + {k}] * "
                 f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];"
             ))))
-            w(f"{dst}[(i * {ow} + j) * {co} + {k}] = "
-              f"{self.act_scalar('acc', act, layer.alpha)};")
+            self._store_scalar(layer, "acc",
+                               f"(i * {ow} + j) * {co} + {k}", dst)
             w.close()
 
     # unrolled bodies --------------------------------------------------------
@@ -885,8 +981,7 @@ class CGenerator:
                       else f"{wname}[{((n * layer.kw + m) * layer.c_in + o) * co + k}]")
                 w(f"a{k} += {xv} * {wv};")
         for k in range(co):
-            w(f"{dst}[{out_index(i, j, k)}] = "
-              f"{self.act_scalar(f'a{k}', act, layer.alpha)};")
+            self._store_scalar(layer, f"a{k}", out_index(i, j, k), dst)
         w.close()
 
     def _conv_body_sse(self, layer, W_, B_, wname, bname, literals,
@@ -917,9 +1012,7 @@ class CGenerator:
                 w(f"  v{kg} = {isa.fmadd('xb', wreg, f'v{kg}')};")
             w("}")
         for kg in range(0, co4, vw):
-            for ln in self.act_sse(f"v{kg}", act, layer.alpha):
-                w(ln)
-            w(isa.store(f"{dst}[{out_index(i, j, kg)}]", f"v{kg}"))
+            self._store_vec(layer, f"v{kg}", out_index(i, j, kg), dst)
         # scalar tail, each channel in its own block (C89: decls first)
         for k in range(co4, co):
             bias = _flit(B_[k]) if literals else f"{bname}[{k}]"
@@ -930,8 +1023,7 @@ class CGenerator:
                 wv = (_flit(W_[n, m, o, k]) if literals
                       else f"{wname}[{((n * layer.kw + m) * layer.c_in + o) * co + k}]")
                 w(f"t{k} += {xv} * {wv};")
-            w(f"{dst}[{out_index(i, j, k)}] = "
-              f"{self.act_scalar(f't{k}', act, layer.alpha)};")
+            self._store_scalar(layer, f"t{k}", out_index(i, j, k), dst)
             w.close()
         w.close()
 
@@ -965,8 +1057,9 @@ class CGenerator:
                 f"acc += {src}[((i * {sh} + n) * {wdt} + "
                 f"(j * {sw} + m)) * {ci} + c] * "
                 f"{wname}[((n * {kw_} + m) * {ci} + c) * {mult} + {m_}];")))
-            w(f"{dst}[(i * {ow} + j) * {co} + c * {mult} + {m_}] = "
-              f"{self.act_scalar('acc', act, layer.alpha)};")
+            self._store_scalar(layer, "acc",
+                               f"(i * {ow} + j) * {co} + c * {mult} + {m_}",
+                               dst)
             w.close()
         self.fclose(3)
         if layer.activation == "softmax":
@@ -1236,19 +1329,260 @@ class CGenerator:
         self.floop("k", d_out)
         w(f"float acc = {bname}[k];")
         w(_cfor("z", d_in, f"acc += {src}[z] * {wname}[z * {d_out} + k];"))
-        w(f"{dst}[k] = {self.act_scalar('acc', act, layer.alpha)};")
+        self._store_scalar(layer, "acc", "k", dst)
         self.fclose()
         if layer.activation == "softmax":
             self.emit_softmax((1, 1, d_out), dst)
 
     # -- driver ---------------------------------------------------------------
 
+    _elem = "float"       # arena / intermediate element C type
+    _quantized = False
+
+    def _emit_layer(self, layer, smap, val, ref, plan) -> None:
+        """Emit one layer's code with sources/destination resolved by
+        ``ref`` — shared by the monolithic body and the stage bodies."""
+        w = self.w
+        ishs = [smap[n] for n in layer.inputs]
+        srcs = [ref(val[n]) for n in layer.inputs]
+        dst = ref(val[layer.name])
+        pad_buf = (_cname(layer.name + "__pad")
+                   if layer.name + "__pad" in plan.offsets else None)
+        if isinstance(layer, Conv2D):
+            self.emit_conv(layer, ishs[0], srcs[0], dst, pad_buf)
+        elif isinstance(layer, DepthwiseConv2D):
+            self.emit_depthwise(layer, ishs[0], srcs[0], dst, pad_buf)
+        elif isinstance(layer, MaxPool):
+            self.emit_maxpool(layer, ishs[0], srcs[0], dst, pad_buf)
+        elif isinstance(layer, AvgPool):
+            self.emit_avgpool(layer, ishs[0], srcs[0], dst, pad_buf)
+        elif isinstance(layer, GlobalAvgPool):
+            self.emit_global_avgpool(layer, ishs[0], srcs[0], dst)
+        elif isinstance(layer, Add):
+            self.emit_add(layer, smap[layer.name], srcs, dst)
+        elif isinstance(layer, Concat):
+            self.emit_concat(layer, ishs, srcs, dst)
+        elif isinstance(layer, ReLU):
+            self.emit_elementwise(ishs[0], srcs[0], dst, "relu", 0.0)
+        elif isinstance(layer, LeakyReLU):
+            self.emit_elementwise(ishs[0], srcs[0], dst, "leaky_relu",
+                                  layer.alpha)
+        elif isinstance(layer, Softmax):
+            if srcs[0] != dst:
+                w(_cfor("z", int(np.prod(ishs[0])),
+                        f"{dst}[z] = {srcs[0]}[z];"))
+            self.emit_softmax(ishs[0], dst)
+        elif isinstance(layer, BatchNorm):
+            self.emit_batchnorm(layer, ishs[0], srcs[0], dst)
+        elif isinstance(layer, Dense):
+            self.emit_dense(layer, ishs[0], srcs[0], dst)
+        else:  # pragma: no cover
+            raise TypeError(f"cgen: unhandled layer {type(layer).__name__}")
+
+    def _emit_graph_body(self, layers, smap, val, ref, plan) -> None:
+        """Emit ``layers`` in order, skipping identity layers and fused
+        Adds, arming the fusion context around fused producers."""
+        g = self.g
+        fused_by_p = self.schedule.fused_by_producer
+        fused_adds = set(self.schedule.fused_by_add)
+        for layer in layers:
+            if isinstance(layer, IDENTITY_LAYERS) or \
+                    layer.name in fused_adds:
+                continue
+            a = fused_by_p.get(layer.name)
+            if a is not None:
+                add = g.layer(a)
+                self._fuse = _FuseCtx(
+                    add=add, pos=add.inputs.index(layer.name),
+                    srcs=[ref(val[n]) for n in add.inputs])
+            try:
+                self._emit_layer(layer, smap, val, ref, plan)
+            finally:
+                self._fuse = None
+
+    # -- pipeline emission ---------------------------------------------------
+
+    def _emit_pipeline(self, smap, val, out_value, plan) -> None:
+        """Emit one function per schedule stage plus the
+        ``<func>_pipeline`` driver.
+
+        Stage ``s`` is ``void <func>_stage<s>(in, out, ws)``: ``in`` is
+        the interface buffer written by stage ``s-1`` (the raw network
+        input for stage 0), ``out`` the interface it feeds stage ``s+1``
+        (the network output for the last stage), ``ws`` the ordinary
+        arena for values that never cross a stage boundary (plus pad
+        scratch).  A value defined in one stage and consumed two or more
+        stages later is forwarded by memcpy through every interface in
+        between.  The sequential driver carves the interfaces from the
+        tail of one workspace; ``runtime.PipelineRunner`` instead
+        double-buffers each interface and runs the stages on separate
+        threads for batch-1 stream throughput."""
+        g, opts, w, sched = self.g, self.opts, self.w, self.schedule
+        elem = self._elem
+        quantized = self._quantized
+        S = sched.nstages
+        stage_of = {u: s for s, us in enumerate(sched.stages) for u in us}
+        fused_by_add = sched.fused_by_add
+
+        def eff_stage(name: str) -> int:
+            """Stage where layer ``name``'s reads/writes actually run."""
+            if name in fused_by_add:
+                return stage_of[fused_by_add[name]]
+            return stage_of[name]
+
+        # def/last-use stages per value; sizes in elements
+        def_stage: Dict[str, int] = {}
+        vsizes: Dict[str, int] = {}
+        if quantized:
+            def_stage["xq"] = 0  # the input-quant prologue runs in stage 0
+            vsizes["xq"] = int(np.prod(g.input_shape))
+        else:
+            def_stage["x"] = -1  # the caller's input argument
+            vsizes["x"] = int(np.prod(g.input_shape))
+        for u in stage_of:
+            v = val[u]
+            if v not in def_stage:
+                def_stage[v] = stage_of[u]
+                vsizes[v] = int(np.prod(smap[u]))
+        last_stage: Dict[str, int] = {}
+        for layer in g.layers:
+            if isinstance(layer, IDENTITY_LAYERS):
+                continue
+            s_l = eff_stage(layer.name)
+            for n in layer.inputs:
+                v = val[n]
+                if v in def_stage:
+                    last_stage[v] = max(last_stage.get(v, s_l), s_l)
+
+        def crosses(v: str, b: int) -> bool:
+            """Value ``v`` is transported over boundary ``b`` (between
+            stage ``b`` and ``b+1``)."""
+            return def_stage[v] <= b < last_stage.get(v, def_stage[v])
+
+        iface_vals: List[List[str]] = []
+        iface_off: List[Dict[str, int]] = []
+        iface_sz: List[int] = []
+        for b in range(S - 1):
+            vs = sorted(v for v in def_stage if crosses(v, b))
+            offs, cum = {}, 0
+            for v in vs:
+                offs[v] = cum
+                cum += vsizes[v]
+            iface_vals.append(vs)
+            iface_off.append(offs)
+            iface_sz.append(cum)
+        self.iface_elems = tuple(iface_sz)
+
+        copy_n = (f"{{n}} * sizeof(float)" if not quantized else "{n}")
+        for s in range(S):
+            in_ty = "const float" if s == 0 or not quantized \
+                else f"const {elem}"
+            out_ty = "float" if s == S - 1 else elem
+            units = sched.stages[s]
+            layers = [g.layer(u) for u in units]
+
+            # every value touched in this stage, in a stable order
+            used: List[str] = []
+
+            def need(v: str) -> None:
+                if v not in used:
+                    used.append(v)
+            pads: List[str] = []
+            for layer in layers:
+                need(val[layer.name])
+                for n in layer.inputs:
+                    need(val[n])
+                a = self.schedule.fused_by_producer.get(layer.name)
+                if a is not None:
+                    for n in g.layer(a).inputs:
+                        need(val[n])
+                if layer.name + "__pad" in plan.offsets:
+                    pads.append(layer.name + "__pad")
+            passthrough = [] if s == S - 1 else \
+                [v for v in iface_vals[s] if def_stage[v] != s]
+            for v in passthrough:
+                need(v)
+            if quantized and s == 0:
+                need("xq")
+
+            names: Dict[str, str] = {}
+            decls: List[str] = []
+            uses_ws = bool(pads)
+            for v in sorted(used):
+                if not quantized and v == "x" and s == 0:
+                    names[v] = "in"
+                elif v == out_value and s == S - 1:
+                    names[v] = "out"
+                elif def_stage[v] == s:
+                    names[v] = _cname(v)
+                    if s < S - 1 and crosses(v, s):
+                        decls.append(f"{out_ty} *const {names[v]} = "
+                                     f"out + {iface_off[s][v]};")
+                    else:
+                        decls.append(f"{elem} *const {names[v]} = "
+                                     f"ws + {plan.offsets[v]};")
+                        uses_ws = True
+                else:  # defined in an earlier stage: read the in iface
+                    names[v] = _cname(v)
+                    decls.append(f"{in_ty} *const {names[v]} = "
+                                 f"in + {iface_off[s - 1][v]};")
+
+            w.open(f"void {opts.stage_func_name(s)}("
+                   f"{in_ty} *NNCG_RESTRICT in, "
+                   f"{out_ty} *NNCG_RESTRICT out, "
+                   f"{elem} *NNCG_RESTRICT ws)")
+            for d in decls:
+                w(d)
+            for p in pads:
+                w(f"{elem} *const {_cname(p)} = ws + {plan.offsets[p]};")
+            if not uses_ws:
+                w("(void) ws;")
+            for v in passthrough:
+                src = names[v]  # "in" for x at stage 0, a decl otherwise
+                w(f"memcpy(out + {iface_off[s][v]}, {src}, "
+                  f"{copy_n.format(n=vsizes[v])});")
+            if quantized and s == 0:
+                self._emit_input_quant("in")
+            self._emit_graph_body(layers, smap, val,
+                                  lambda v: names[v], plan)
+            w.close()
+            w("")
+
+        # sequential driver: interfaces carved from the workspace tail,
+        # every stage sharing one arena (interface and arena subranges
+        # are disjoint, so the restrict contract holds)
+        w.open(f"void {opts.pipeline_func_name}("
+               f"const float *NNCG_RESTRICT x, "
+               f"float *NNCG_RESTRICT out, "
+               f"{elem} *NNCG_RESTRICT ws, int nstages)")
+        cum = plan.total_floats
+        for b in range(S - 1):
+            w(f"{elem} *const iface{b} = ws + {cum}; "
+              f"/* stage {b} -> {b + 1}: {iface_sz[b]} elems */")
+            cum += iface_sz[b]
+        w("(void) nstages;")
+        for s in range(S):
+            a = "x" if s == 0 else f"iface{s - 1}"
+            o = "out" if s == S - 1 else f"iface{s}"
+            w(f"{opts.stage_func_name(s)}({a}, {o}, ws);")
+        w.close()
+        w("")
+        w.open(f"long {opts.pipeline_nstages_func_name}(void)")
+        w(f"return {S}L;")
+        w.close()
+        w("")
+        self.ws_total_elems = cum
+        self.stage_syms = tuple(opts.stage_func_name(s) for s in range(S))
+
     def generate(self) -> str:
         g, opts, w = self.g, self.opts, self.w
+        sched = self.schedule
         smap = g.shape_map()
-        plan = self.plan = plan_arena(g, opts)
-        val = _value_map(g)
+        plan = self.plan = plan_arena(g, opts, schedule=sched)
+        val = _value_map(g, schedule=sched)
         out_value = val[g.sink.name]
+        S = sched.nstages
+        self.ws_total_elems = plan.total_floats
 
         def ref(v: str) -> str:
             if v == "x":
@@ -1257,61 +1591,32 @@ class CGenerator:
                 return "out"
             return _cname(v)
 
+        if S > 1:
+            self._emit_pipeline(smap, val, out_value, plan)
+
         w.open(f"void {opts.ws_func_name}(const float *NNCG_RESTRICT x, "
                f"float *NNCG_RESTRICT out, float *NNCG_RESTRICT ws)")
-        # workspace carving: all pointer declarations first (C89)
-        for iv in sorted(plan.intervals, key=lambda iv: (iv.offset, iv.value)):
-            w(f"float *const {_cname(iv.value)} = ws + {iv.offset}; "
-              f"/* {iv.size} floats, live layers "
-              f"[{iv.start}, {iv.end}] */")
-        if not plan.intervals:
-            w("(void) ws;")
-        for layer in g.layers:
-            if isinstance(layer, IDENTITY_LAYERS):
-                continue
-            ishs = [smap[n] for n in layer.inputs]
-            srcs = [ref(val[n]) for n in layer.inputs]
-            v = val[layer.name]
-            dst = "out" if v == out_value else _cname(v)
-            pad_buf = (_cname(layer.name + "__pad")
-                       if layer.name + "__pad" in plan.offsets else None)
-            if isinstance(layer, Conv2D):
-                self.emit_conv(layer, ishs[0], srcs[0], dst, pad_buf)
-            elif isinstance(layer, DepthwiseConv2D):
-                self.emit_depthwise(layer, ishs[0], srcs[0], dst, pad_buf)
-            elif isinstance(layer, MaxPool):
-                self.emit_maxpool(layer, ishs[0], srcs[0], dst, pad_buf)
-            elif isinstance(layer, AvgPool):
-                self.emit_avgpool(layer, ishs[0], srcs[0], dst, pad_buf)
-            elif isinstance(layer, GlobalAvgPool):
-                self.emit_global_avgpool(layer, ishs[0], srcs[0], dst)
-            elif isinstance(layer, Add):
-                self.emit_add(layer, smap[layer.name], srcs, dst)
-            elif isinstance(layer, Concat):
-                self.emit_concat(layer, ishs, srcs, dst)
-            elif isinstance(layer, ReLU):
-                self.emit_elementwise(ishs[0], srcs[0], dst, "relu", 0.0)
-            elif isinstance(layer, LeakyReLU):
-                self.emit_elementwise(ishs[0], srcs[0], dst, "leaky_relu",
-                                      layer.alpha)
-            elif isinstance(layer, Softmax):
-                if srcs[0] != dst:
-                    w(_cfor("z", int(np.prod(ishs[0])),
-                            f"{dst}[z] = {srcs[0]}[z];"))
-                self.emit_softmax(ishs[0], dst)
-            elif isinstance(layer, BatchNorm):
-                self.emit_batchnorm(layer, ishs[0], srcs[0], dst)
-            elif isinstance(layer, Dense):
-                self.emit_dense(layer, ishs[0], srcs[0], dst)
-            else:  # pragma: no cover
-                raise TypeError(f"cgen: unhandled layer {type(layer).__name__}")
-        if out_value == "x":  # degenerate identity graph
-            w(_cfor("z", int(np.prod(g.input_shape)), "out[z] = x[z];"))
+        if S > 1:
+            # the layer code lives in the stage functions exactly once;
+            # the classic entry routes through the sequential driver
+            w(f"{opts.pipeline_func_name}(x, out, ws, {S});")
+        else:
+            # workspace carving: all pointer declarations first (C89)
+            for iv in sorted(plan.intervals,
+                             key=lambda iv: (iv.offset, iv.value)):
+                w(f"float *const {_cname(iv.value)} = ws + {iv.offset}; "
+                  f"/* {iv.size} floats, live layers "
+                  f"[{iv.start}, {iv.end}] */")
+            if not plan.intervals:
+                w("(void) ws;")
+            self._emit_graph_body(g.layers, smap, val, ref, plan)
+            if out_value == "x":  # degenerate identity graph
+                w(_cfor("z", int(np.prod(g.input_shape)), "out[z] = x[z];"))
         w.close()
 
         # static-arena wrapper: the paper's embedded single-image entry
         arena = f"{opts.func_name}_arena"
-        self.decls(f"static float {arena}[{max(plan.total_floats, 1)}];")
+        self.decls(f"static float {arena}[{max(self.ws_total_elems, 1)}];")
         w("")
         w.open(f"void {opts.func_name}(const float *NNCG_RESTRICT x, "
                f"float *NNCG_RESTRICT out)")
@@ -1319,7 +1624,7 @@ class CGenerator:
         w.close()
         w("")
         w.open(f"long {opts.ws_size_func_name}(void)")
-        w(f"return {plan.total_floats}L;")
+        w(f"return {self.ws_total_elems}L;")
         w.close()
 
         if opts.emit_batch:
@@ -1352,8 +1657,11 @@ class CGenerator:
         hdr(f" * net: in {g.input_shape} -> out {smap[g.sink.name]}, "
             f"{g.param_count()} params, simd={opts.simd},")
         hdr(f" * arena {plan.total_bytes} B "
-            f"(one-buffer-per-layer would be {plan.buffer_sum_bytes} B) */")
+            f"(one-buffer-per-layer would be {plan.buffer_sum_bytes} B)"
+            f"{f', pipeline stages={S}' if S > 1 else ''} */")
         hdr("#include <math.h>")
+        if S > 1:
+            hdr("#include <string.h>")  # stage pass-through memcpy
         if opts.isa is not None:
             hdr(f"#include <{opts.isa.header}>")
         hdr("#if defined(__STDC_VERSION__) && __STDC_VERSION__ >= 199901L")
@@ -1366,9 +1674,28 @@ class CGenerator:
         return hdr.text() + self.decls.text() + "\n" + self.w.text()
 
 
+# one warning per process, shared by both legacy entry points
+_LEGACY_WARNED = [False]
+
+
+def _warn_legacy(fn: str) -> None:
+    if not _LEGACY_WARNED[0]:
+        _LEGACY_WARNED[0] = True
+        import warnings
+        warnings.warn(
+            f"{fn}() is deprecated; use repro.core.codegen.compile() — "
+            f"it returns a GeneratedSource with entry symbols, workspace "
+            f"sizes and the schedule", DeprecationWarning, stacklevel=3)
+
+
 def generate_c(graph: CNNGraph, opts: Optional[CodegenOptions] = None) -> str:
-    """Generate the single ANSI C file for a trained CNN."""
-    return CGenerator(graph, opts or CodegenOptions()).generate()
+    """Deprecated: use :func:`repro.core.codegen.compile`.
+
+    Kept as a byte-compatible shim: emits the pre-schedule (unfused,
+    single-stage) code exactly as before."""
+    _warn_legacy("generate_c")
+    return CGenerator(graph, opts or CodegenOptions(),
+                      schedule=make_schedule(graph, fusion=False)).generate()
 
 
 # ---------------------------------------------------------------------------
@@ -1396,8 +1723,12 @@ class QuantCGenerator(CGenerator):
     path (CI-enforced).
     """
 
-    def __init__(self, qgraph, opts: CodegenOptions):
-        super().__init__(qgraph.graph, opts)
+    _elem = "signed char"
+    _quantized = True
+
+    def __init__(self, qgraph, opts: CodegenOptions,
+                 schedule: Optional[Schedule] = None):
+        super().__init__(qgraph.graph, opts, schedule)
         self.qg = qgraph
 
     # -- const emitters -------------------------------------------------------
@@ -1426,6 +1757,119 @@ class QuantCGenerator(CGenerator):
     # -- shared emission fragments -------------------------------------------
 
     _REQ_DECLS = "float t; float u; int q;"
+
+    @property
+    def _req_decls(self) -> str:
+        """Requant scratch decls for a weighted layer's store block —
+        fused stores additionally hold the producer's own int8 code in
+        ``qf`` before dequantizing it into the Add."""
+        return self._REQ_DECLS + (" signed char qf;" if self._fuse else "")
+
+    def _q_store(self, zp_out: int, oidx: str, dst: str) -> None:
+        """Store the requant result ``t`` as the int8 code of output
+        element ``oidx``.  Unfused: the ordinary round/clamp into
+        ``dst``.  Fused: requantize to the producer's own code first
+        (``qf`` — exactly the value the unfused kernel would have
+        written to memory), then run the Add's per-edge dequant sum,
+        activation and output requant, bit-exact with
+        :meth:`_qadd_scalar_body` on the unfused graph."""
+        fc = self._fuse
+        if fc is None:
+            self._round_clamp(zp_out, f"{dst}[{oidx}]")
+            return
+        qg, w, add = self.qg, self.w, fc.add
+        self._round_clamp(zp_out, "qf")
+        for i, s in enumerate(fc.srcs):
+            op = "=" if i == 0 else "+="
+            qp = qg.in_qp(add, i)
+            sref = "qf" if i == fc.pos else f"{s}[{oidx}]"
+            w(f"t {op} (float)({sref} - {qp.zero_point}) * "
+              f"{_flit(qg.rescale(add, i))};")
+        self._act_float(add.activation, add.alpha)
+        self._round_clamp(qg.out_qp(add).zero_point, f"{dst}[{oidx}]")
+
+    def _fused_lane_loop(self, G: int, base: str, dst: str) -> None:
+        """Fused-Add epilogue after a vector requant into ``qtmp``: for
+        each of the ``G`` just-produced producer codes, dequantize every
+        Add operand (the producer from ``qtmp``, the rest from memory),
+        sum in input order, activate and requantize — the scalar
+        reference arithmetic, so the tiled kernels stay bit-exact."""
+        fc = self._fuse
+        qg, w, add = self.qg, self.w, fc.add
+        w.open("")
+        w("int lz; float t; float u; int q;")
+        w.open(f"for (lz = 0; lz < {G}; ++lz)")
+        for i, s in enumerate(fc.srcs):
+            op = "=" if i == 0 else "+="
+            qp = qg.in_qp(add, i)
+            sref = "qtmp[lz]" if i == fc.pos else f"{s}[{base} + lz]"
+            w(f"t {op} (float)({sref} - {qp.zero_point}) * "
+              f"{_flit(qg.rescale(add, i))};")
+        self._act_float(add.activation, add.alpha)
+        self._round_clamp(qg.out_qp(add).zero_point, f"{dst}[{base} + lz]")
+        w.close()
+        w.close()
+
+    def _vec_requant_fused(self, eff: QISA, tf_init: str, mexpr: str,
+                           act: Optional[str], alpha: float, zp_mid: int,
+                           base: str, dst: str) -> None:
+        """Wide-x86 vector form of the fused-Add epilogue: requantize
+        the producer vector to its int8 codes in-register (same
+        trunc+fixup floor, with an explicit min/max standing in for the
+        pack instruction's saturation), then run the Add's per-edge
+        dequant sum, activation and output requant on the whole group.
+        Bit-exact with :meth:`_fused_lane_loop` — mul and add stay
+        separate intrinsics, so no contraction can change a rounding —
+        which remains the fallback for the 128-bit variants (the SSE2
+        tier has no ``_mm_min_epi32``) and NEON."""
+        fc = self._fuse
+        qg, w, add = self.qg, self.w, fc.add
+        w.open("")
+        w(f"__m256 tf = {tf_init};")
+        w(f"tf = _mm256_mul_ps(tf, {mexpr});")
+        if act == "relu":
+            w("tf = _mm256_max_ps(tf, _mm256_setzero_ps());")
+        elif act == "leaky_relu":
+            w(f"tf = _mm256_max_ps(tf, _mm256_mul_ps(tf, "
+              f"_mm256_set1_ps({_flit(alpha)})));")
+        w("__m256 uf = _mm256_add_ps(tf, _mm256_set1_ps(0.5f));")
+        w("__m256i qi = _mm256_cvttps_epi32(uf);")
+        w("qi = _mm256_add_epi32(qi, _mm256_castps_si256("
+          "_mm256_cmp_ps(_mm256_cvtepi32_ps(qi), uf, _CMP_GT_OQ)));")
+        w(f"qi = _mm256_add_epi32(qi, _mm256_set1_epi32({zp_mid}));")
+        w("qi = _mm256_min_epi32(_mm256_max_epi32(qi, "
+          "_mm256_set1_epi32(-128)), _mm256_set1_epi32(127));")
+        for i, s in enumerate(fc.srcs):
+            qp = qg.in_qp(add, i)
+            if i == fc.pos:
+                vi = f"_mm256_sub_epi32(qi, _mm256_set1_epi32({qp.zero_point}))"
+            else:
+                w(f"__m256i v{i} = _mm256_cvtepi8_epi32(_mm_loadl_epi64("
+                  f"(const __m128i *)({s} + {base})));")
+                vi = (f"_mm256_sub_epi32(v{i}, "
+                      f"_mm256_set1_epi32({qp.zero_point}))")
+            term = (f"_mm256_mul_ps(_mm256_cvtepi32_ps({vi}), "
+                    f"_mm256_set1_ps({_flit(qg.rescale(add, i))}))")
+            w(f"tf = {term};" if i == 0
+              else f"tf = _mm256_add_ps(tf, {term});")
+        if add.activation == "relu":
+            w("tf = _mm256_max_ps(tf, _mm256_setzero_ps());")
+        elif add.activation == "leaky_relu":
+            w(f"tf = _mm256_max_ps(tf, _mm256_mul_ps(tf, "
+              f"_mm256_set1_ps({_flit(add.alpha)})));")
+        w("uf = _mm256_add_ps(tf, _mm256_set1_ps(0.5f));")
+        w("qi = _mm256_cvttps_epi32(uf);")
+        w("qi = _mm256_add_epi32(qi, _mm256_castps_si256("
+          "_mm256_cmp_ps(_mm256_cvtepi32_ps(qi), uf, _CMP_GT_OQ)));")
+        w(f"qi = _mm256_add_epi32(qi, "
+          f"_mm256_set1_epi32({qg.out_qp(add).zero_point}));")
+        w.open("")
+        w("__m128i pk = _mm_packs_epi32(_mm256_castsi256_si128(qi), "
+          "_mm256_extracti128_si256(qi, 1));")
+        w("pk = _mm_packs_epi16(pk, pk);")
+        w(f"_mm_storel_epi64((__m128i *)({dst} + {base}), pk);")
+        w.close()
+        w.close()
 
     def _round_clamp(self, zp_out: int, dst_expr: str) -> None:
         """``t`` (float, s_out units) -> int8 code at ``dst_expr``;
@@ -1703,6 +2147,12 @@ class QuantCGenerator(CGenerator):
                       f"(const __m256i *)({bname} + {g * G}));")
                 else:
                     w(f"int32x4_t acc{g} = vld1q_s32({bname} + {g * G});")
+            if self._fuse is not None and not (x86 and eff.wide):
+                # fused Add epilogue, narrow-vector fallback: the vector
+                # requant packs the producer's codes here, the scalar
+                # lane loop then runs the Add arithmetic (bit-exact
+                # with the unfused path)
+                w(f"signed char qtmp[{G}];")
             for n in range(kh):
                 for p in range(P):
                     t0 = p * L
@@ -1721,10 +2171,19 @@ class QuantCGenerator(CGenerator):
                 else:
                     tf_init = f"vcvtq_f32_s32(acc{g})"
                     mexpr = f"vld1q_f32({mname} + {g * G})"
-                dstp = (f"out + {oidx} + {g * G}" if is_sink
-                        else f"{dst} + {oidx} + {g * G}")
-                self._vec_requant(eff, tf_init, mexpr, act, alpha,
-                                  is_sink, zp_out, dstp)
+                if self._fuse is not None and x86 and eff.wide:
+                    self._vec_requant_fused(eff, tf_init, mexpr, act,
+                                            alpha, zp_out,
+                                            f"{oidx} + {g * G}", dst)
+                elif self._fuse is not None:
+                    self._vec_requant(eff, tf_init, mexpr, act, alpha,
+                                      False, zp_out, "qtmp")
+                    self._fused_lane_loop(G, f"{oidx} + {g * G}", dst)
+                else:
+                    dstp = (f"out + {oidx} + {g * G}" if is_sink
+                            else f"{dst} + {oidx} + {g * G}")
+                    self._vec_requant(eff, tf_init, mexpr, act, alpha,
+                                      is_sink, zp_out, dstp)
             w.close()
         if k0 < co:
             use_sse = x86 and row >= 16
@@ -1733,7 +2192,7 @@ class QuantCGenerator(CGenerator):
             w.open(f"for (kk = 0; kk < {co - k0}; ++kk)")
             w.open("")
             w(f"int acc = {btail}[kk];")
-            w("float t;" if is_sink else self._REQ_DECLS)
+            w("float t;" if is_sink else self._req_decls)
             if use_sse:
                 w("__m128i vacc = _mm_setzero_si128();")
             self.floop("n", kh)
@@ -1747,7 +2206,7 @@ class QuantCGenerator(CGenerator):
             if is_sink:
                 w(f"out[{oidx} + {k0} + kk] = t;")
             else:
-                self._round_clamp(zp_out, f"{dst}[{oidx} + {k0} + kk]")
+                self._q_store(zp_out, f"{oidx} + {k0} + kk", dst)
             w.close()
             w.close()
             w.close()
@@ -1813,8 +2272,7 @@ class QuantCGenerator(CGenerator):
             if is_sink:
                 w(f"out[{oidx}] = t;")
             else:
-                self._round_clamp(qg.out_qp(layer).zero_point,
-                                  f"{dst}[{oidx}]")
+                self._q_store(qg.out_qp(layer).zero_point, oidx, dst)
 
         if taps < 16:
             # tiny window (e.g. first conv on a 1-channel image):
@@ -1826,7 +2284,7 @@ class QuantCGenerator(CGenerator):
             for k in range(co):
                 w.open("")
                 w(f"int acc = {int(bias_eff[k])};")
-                w("float t;" if is_sink else self._REQ_DECLS)
+                w("float t;" if is_sink else self._req_decls)
                 for n in range(kh):
                     for m in range(kw_):
                         for o in range(ci):
@@ -1840,9 +2298,8 @@ class QuantCGenerator(CGenerator):
                 if is_sink:
                     w(f"out[(i * {ow} + j) * {co} + {k}] = t;")
                 else:
-                    self._round_clamp(
-                        qg.out_qp(layer).zero_point,
-                        f"{dst}[(i * {ow} + j) * {co} + {k}]")
+                    self._q_store(qg.out_qp(layer).zero_point,
+                                  f"(i * {ow} + j) * {co} + {k}", dst)
                 w.close()
             self.fclose(2)
         else:
@@ -1852,7 +2309,7 @@ class QuantCGenerator(CGenerator):
             self.floop("k", co)
             w.open("")
             w(f"int acc = {bname}[k];")
-            w("float t;" if is_sink else self._REQ_DECLS)
+            w("float t;" if is_sink else self._req_decls)
             if use_sse:
                 w("__m128i vacc = _mm_setzero_si128();")
             self.floop("n", kh)
@@ -1898,7 +2355,7 @@ class QuantCGenerator(CGenerator):
         for m_ in range(mult):
             w.open("")
             w(f"int acc = {bname}[c * {mult} + {m_}];")
-            w("float t;" if is_sink else self._REQ_DECLS)
+            w("float t;" if is_sink else self._req_decls)
             w(_cfor("n", kh, _cfor(
                 "m", kw_,
                 f"acc += {src}[((i * {sh} + n) * {wdt} + "
@@ -1910,8 +2367,7 @@ class QuantCGenerator(CGenerator):
             if is_sink:
                 w(f"out[{oidx}] = t;")
             else:
-                self._round_clamp(qg.out_qp(layer).zero_point,
-                                  f"{dst}[{oidx}]")
+                self._q_store(qg.out_qp(layer).zero_point, oidx, dst)
             w.close()
         self.fclose(3)
         if is_sink and act == "softmax":
@@ -1949,7 +2405,7 @@ class QuantCGenerator(CGenerator):
         self.floop("k", d_out)
         w.open("")
         w(f"int acc = {bname}[k];")
-        w("float t;" if is_sink else self._REQ_DECLS)
+        w("float t;" if is_sink else self._req_decls)
         if use_sse:
             w("__m128i vacc = _mm_setzero_si128();")
         self._dot_inner(src, wname, d_in, use_sse, "0", f"k * {d_in}")
@@ -1960,7 +2416,7 @@ class QuantCGenerator(CGenerator):
         if is_sink:
             w("out[k] = t;")
         else:
-            self._round_clamp(qg.out_qp(layer).zero_point, f"{dst}[k]")
+            self._q_store(qg.out_qp(layer).zero_point, "k", dst)
         w.close()
         self.fclose()
         if is_sink and act == "softmax":
@@ -2217,28 +2673,10 @@ class QuantCGenerator(CGenerator):
 
     # -- driver ---------------------------------------------------------------
 
-    def generate(self) -> str:
-        g, opts, w = self.g, self.opts, self.w
-        smap = g.shape_map()
-        plan = self.plan = plan_arena(g, opts, quantized=True)
-        val = _value_map(g, quantized=True)
-        sink = g.sink
-        out_value = val[sink.name]
-        assert out_value != "xq", "degenerate identity graph"
-
-        def ref(v: str) -> str:
-            return "out" if v == out_value else _cname(v)
-
-        w.open(f"void {opts.ws_func_name}(const float *NNCG_RESTRICT x, "
-               f"float *NNCG_RESTRICT out, "
-               f"signed char *NNCG_RESTRICT ws)")
-        for iv in sorted(plan.intervals, key=lambda iv: (iv.offset, iv.value)):
-            w(f"signed char *const {_cname(iv.value)} = ws + {iv.offset}; "
-              f"/* {iv.size} bytes, live layers [{iv.start}, {iv.end}] */")
-        if not plan.intervals:
-            w("(void) ws;")
-
-        # input quantization: float x -> int8 codes
+    def _emit_input_quant(self, xsrc: str) -> None:
+        """Input quantization prologue: float ``xsrc`` -> int8 codes in
+        the ``xq`` arena value (vectorized when a QISA is active)."""
+        g, w = self.g, self.w
         in_qp = self.qg.input_qp
         q = self.qisa
         n_in = int(np.prod(g.input_shape))
@@ -2250,10 +2688,10 @@ class QuantCGenerator(CGenerator):
         if nf:
             if q.arch == "x86":
                 pfx = "_mm256" if q.wide else "_mm"
-                tf_init = f"{pfx}_loadu_ps(x + z)"
+                tf_init = f"{pfx}_loadu_ps({xsrc} + z)"
                 mexpr = f"{pfx}_set1_ps({_flit(in_qp.inv_scale)})"
             else:
-                tf_init = "vld1q_f32(x + z)"
+                tf_init = f"vld1q_f32({xsrc} + z)"
                 mexpr = f"vdupq_n_f32({_flit(in_qp.inv_scale)})"
             w.open(f"for (z = 0; z < {nf}; z += {q.group})")
             self._vec_requant(q, tf_init, mexpr, None, 0.0, False,
@@ -2263,58 +2701,92 @@ class QuantCGenerator(CGenerator):
             w.open(f"for (z = {nf}; z < {n_in}; ++z)")
             w.open("")
             w(self._REQ_DECLS)
-            w(f"t = x[z] * {_flit(in_qp.inv_scale)};")
+            w(f"t = {xsrc}[z] * {_flit(in_qp.inv_scale)};")
             self._round_clamp(in_qp.zero_point, f"{_cname('xq')}[z]")
             w.close()
             w.close()
         w.close()
 
-        for layer in g.layers:
-            if isinstance(layer, IDENTITY_LAYERS):
-                continue
-            ishs = [smap[n] for n in layer.inputs]
-            srcs = [ref(val[n]) for n in layer.inputs]
-            v = val[layer.name]
-            is_sink = layer is sink
-            dst = "out" if v == out_value else _cname(v)
-            pad_buf = (_cname(layer.name + "__pad")
-                       if layer.name + "__pad" in plan.offsets else None)
-            if isinstance(layer, Conv2D):
-                self.emit_qconv(layer, ishs[0], srcs[0], dst, pad_buf,
-                                is_sink)
-            elif isinstance(layer, DepthwiseConv2D):
-                self.emit_qdepthwise(layer, ishs[0], srcs[0], dst,
-                                     pad_buf, is_sink)
-            elif isinstance(layer, Dense):
-                self.emit_qdense(layer, ishs[0], srcs[0], dst, is_sink)
-            elif isinstance(layer, MaxPool):
-                self.emit_qmaxpool(layer, ishs[0], srcs[0], dst, pad_buf)
-            elif isinstance(layer, AvgPool):
-                self.emit_qavgpool(layer, ishs[0], srcs[0], dst, pad_buf)
-            elif isinstance(layer, GlobalAvgPool):
-                self.emit_qglobal_avgpool(layer, ishs[0], srcs[0], dst)
-            elif isinstance(layer, Add):
-                self.emit_qadd(layer, smap[layer.name], srcs, dst)
-            elif isinstance(layer, Concat):
-                self.emit_qconcat(layer, ishs, srcs, dst)
-            elif isinstance(layer, ReLU):
-                self.emit_qrelu(layer, ishs[0], srcs[0], dst, "relu", 0.0)
-            elif isinstance(layer, LeakyReLU):
-                self.emit_qrelu(layer, ishs[0], srcs[0], dst, "leaky_relu",
-                                layer.alpha)
-            elif isinstance(layer, Softmax):
-                assert is_sink, "standalone Softmax only supported as sink"
-                self.emit_qsoftmax_sink(layer, ishs[0], srcs[0])
-            else:
-                raise TypeError(
-                    f"quantized cgen: unhandled layer "
-                    f"{type(layer).__name__} "
-                    f"(run passes.optimize before quantizing)")
+    def _emit_layer(self, layer, smap, val, ref, plan) -> None:
+        ishs = [smap[n] for n in layer.inputs]
+        srcs = [ref(val[n]) for n in layer.inputs]
+        dst = ref(val[layer.name])
+        is_sink = layer is self.g.sink
+        pad_buf = (_cname(layer.name + "__pad")
+                   if layer.name + "__pad" in plan.offsets else None)
+        if isinstance(layer, Conv2D):
+            self.emit_qconv(layer, ishs[0], srcs[0], dst, pad_buf,
+                            is_sink)
+        elif isinstance(layer, DepthwiseConv2D):
+            self.emit_qdepthwise(layer, ishs[0], srcs[0], dst,
+                                 pad_buf, is_sink)
+        elif isinstance(layer, Dense):
+            self.emit_qdense(layer, ishs[0], srcs[0], dst, is_sink)
+        elif isinstance(layer, MaxPool):
+            self.emit_qmaxpool(layer, ishs[0], srcs[0], dst, pad_buf)
+        elif isinstance(layer, AvgPool):
+            self.emit_qavgpool(layer, ishs[0], srcs[0], dst, pad_buf)
+        elif isinstance(layer, GlobalAvgPool):
+            self.emit_qglobal_avgpool(layer, ishs[0], srcs[0], dst)
+        elif isinstance(layer, Add):
+            self.emit_qadd(layer, smap[layer.name], srcs, dst)
+        elif isinstance(layer, Concat):
+            self.emit_qconcat(layer, ishs, srcs, dst)
+        elif isinstance(layer, ReLU):
+            self.emit_qrelu(layer, ishs[0], srcs[0], dst, "relu", 0.0)
+        elif isinstance(layer, LeakyReLU):
+            self.emit_qrelu(layer, ishs[0], srcs[0], dst, "leaky_relu",
+                            layer.alpha)
+        elif isinstance(layer, Softmax):
+            assert is_sink, "standalone Softmax only supported as sink"
+            self.emit_qsoftmax_sink(layer, ishs[0], srcs[0])
+        else:
+            raise TypeError(
+                f"quantized cgen: unhandled layer "
+                f"{type(layer).__name__} "
+                f"(run passes.optimize before quantizing)")
+
+    def generate(self) -> str:
+        g, opts, w = self.g, self.opts, self.w
+        sched = self.schedule
+        smap = g.shape_map()
+        plan = self.plan = plan_arena(g, opts, quantized=True,
+                                      schedule=sched)
+        val = _value_map(g, quantized=True, schedule=sched)
+        sink = g.sink
+        out_value = val[sink.name]
+        assert out_value != "xq", "degenerate identity graph"
+        S = sched.nstages
+        self.ws_total_elems = plan.total_floats
+        q = self.qisa
+
+        def ref(v: str) -> str:
+            return "out" if v == out_value else _cname(v)
+
+        if S > 1:
+            self._emit_pipeline(smap, val, out_value, plan)
+
+        w.open(f"void {opts.ws_func_name}(const float *NNCG_RESTRICT x, "
+               f"float *NNCG_RESTRICT out, "
+               f"signed char *NNCG_RESTRICT ws)")
+        if S > 1:
+            w(f"{opts.pipeline_func_name}(x, out, ws, {S});")
+        else:
+            for iv in sorted(plan.intervals,
+                             key=lambda iv: (iv.offset, iv.value)):
+                w(f"signed char *const {_cname(iv.value)} = "
+                  f"ws + {iv.offset}; "
+                  f"/* {iv.size} bytes, live layers "
+                  f"[{iv.start}, {iv.end}] */")
+            if not plan.intervals:
+                w("(void) ws;")
+            self._emit_input_quant("x")
+            self._emit_graph_body(g.layers, smap, val, ref, plan)
         w.close()
 
         arena = f"{opts.func_name}_arena"
         self.decls(f"static signed char {arena}"
-                   f"[{max(plan.total_floats, 1)}];")
+                   f"[{max(self.ws_total_elems, 1)}];")
         w("")
         w.open(f"void {opts.func_name}(const float *NNCG_RESTRICT x, "
                f"float *NNCG_RESTRICT out)")
@@ -2322,7 +2794,7 @@ class QuantCGenerator(CGenerator):
         w.close()
         w("")
         w.open(f"long {opts.ws_bytes_func_name}(void)")
-        w(f"return {plan.total_bytes}L;")
+        w(f"return {self.ws_total_elems}L;")
         w.close()
 
         if opts.emit_batch:
@@ -2353,12 +2825,15 @@ class QuantCGenerator(CGenerator):
         hdr(f" * calibration={getattr(self.qg, 'method', 'minmax')} "
             f"(per-branch activation qparams on multi-input edges),")
         hdr(f" * int8 arena {plan.total_bytes} B "
-            f"(float32 intermediates would be ~4x) */")
+            f"(float32 intermediates would be ~4x)"
+            f"{f', pipeline stages={S}' if S > 1 else ''} */")
         hdr("#include <math.h>")
         if q is not None:
             hdr(f"#include <{q.header}>")
+        if q is not None or S > 1:
             hdr("#include <string.h>")  # memcpy: strict-aliasing-safe
-                                        # unaligned 4-byte load/store
+                                        # unaligned loads + stage
+                                        # pass-through forwarding
         hdr("#if defined(__STDC_VERSION__) && __STDC_VERSION__ >= 199901L")
         hdr("#define NNCG_RESTRICT restrict")
         hdr("#else")
@@ -2371,5 +2846,12 @@ class QuantCGenerator(CGenerator):
 
 def generate_quantized_c(qgraph,
                          opts: Optional[CodegenOptions] = None) -> str:
-    """Generate the single ANSI C file for a calibrated int8 net."""
-    return QuantCGenerator(qgraph, opts or CodegenOptions()).generate()
+    """Deprecated: use :func:`repro.core.codegen.compile`.
+
+    Kept as a shim; emits the legacy (unfused, single-stage) code so
+    existing structural expectations hold byte-for-byte.
+    """
+    _warn_legacy("generate_quantized_c")
+    return QuantCGenerator(
+        qgraph, opts or CodegenOptions(),
+        schedule=make_schedule(qgraph.graph, fusion=False)).generate()

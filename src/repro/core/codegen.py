@@ -1,0 +1,140 @@
+"""Unified codegen front-end: one ``compile()`` for both precisions.
+
+``generate_c`` / ``generate_quantized_c`` returned a bare source string
+and every caller re-derived entry symbols, workspace sizes and arena
+stats from the options object by hand.  :func:`compile` replaces that
+with a single call returning a frozen :class:`GeneratedSource` value
+object — source text plus everything a loader, cache key or report
+needs — mirroring the ``SessionConfig`` consolidation one layer up.
+
+A :class:`~repro.core.schedule.Schedule` (epilogue fusion + pipeline
+stage assignment) rides along: the default schedule fuses every
+eligible Add epilogue (bitwise-identical output, smaller arena) and
+emits a single stage; pass ``schedule=make_schedule(g, nstages=k)``
+for the layer-pipelined build.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .cgen import (CODEGEN_VERSION, CGenerator, CodegenOptions,
+                   QuantCGenerator)
+from .schedule import Schedule, make_schedule
+
+__all__ = ["GeneratedSource", "compile", "CodegenOptions", "Schedule",
+           "make_schedule", "CODEGEN_VERSION"]
+
+
+@dataclass(frozen=True)
+class GeneratedSource:
+    """One generated C translation unit plus its ABI and plan summary.
+
+    ``workspace_elems`` is the size (in ``elem_bytes``-sized elements)
+    of the caller-supplied workspace for the ``entry_ws`` /
+    ``entry_batch_ws`` / ``entry_pipeline`` entries: the liveness-packed
+    arena (``arena_elems``) plus, for pipelined builds, the stage
+    interface buffers (``iface_elems``, one per stage boundary).
+    """
+
+    source: str
+    func_name: str
+    precision: str                       # 'fp32' | 'int8'
+    simd: str
+    codegen_version: int
+    schedule: Schedule
+    # entry symbols (None when not emitted for this build)
+    entry: str
+    entry_ws: str
+    entry_batch: Optional[str]
+    entry_batch_ws: Optional[str]
+    entry_pipeline: Optional[str]        # None for single-stage builds
+    stage_entries: Tuple[str, ...] = ()
+    # sizes (elements are floats for fp32, bytes for int8)
+    workspace_elems: int = 0
+    elem_bytes: int = 4
+    arena_elems: int = 0
+    iface_elems: Tuple[int, ...] = ()
+    in_elems: int = 0
+    out_elems: int = 0
+    # arena plan summary (bytes)
+    arena_bytes: int = 0
+    arena_buffer_sum_bytes: int = 0
+    peak_live_bytes: int = 0
+    per_layer_live_bytes: Optional[Dict[str, int]] = None
+
+    @property
+    def workspace_bytes(self) -> int:
+        return self.workspace_elems * self.elem_bytes
+
+    @property
+    def nstages(self) -> int:
+        return self.schedule.nstages
+
+    def describe(self) -> Dict[str, object]:
+        """JSON-able summary (no source text) for info()/telemetry."""
+        return {
+            "func_name": self.func_name,
+            "precision": self.precision,
+            "simd": self.simd,
+            "codegen_version": self.codegen_version,
+            "schedule": self.schedule.describe(),
+            "entry_pipeline": self.entry_pipeline,
+            "workspace_bytes": self.workspace_bytes,
+            "arena_bytes": self.arena_bytes,
+            "iface_elems": list(self.iface_elems),
+        }
+
+
+def compile(graph_or_qgraph, opts: Optional[CodegenOptions] = None,
+            schedule: Optional[Schedule] = None) -> GeneratedSource:
+    """Generate ANSI C for a float :class:`~repro.core.graph.CNNGraph`
+    or a calibrated :class:`~repro.core.quantize.QuantizedGraph`.
+
+    ``schedule=None`` builds the default: every eligible Add epilogue
+    fused (output bitwise identical to the unfused graph, arena never
+    larger), single stage.  ``make_schedule(g, fusion=False)``
+    reproduces the legacy layout byte-for-byte;
+    ``make_schedule(g, nstages=k)`` adds the ``<func>_stage<i>`` /
+    ``<func>_pipeline`` entries for layer-pipelined execution.
+    """
+    from .quantize import QuantizedGraph  # lazy: quantize imports jax
+    opts = opts or CodegenOptions()
+    quantized = isinstance(graph_or_qgraph, QuantizedGraph)
+    graph = graph_or_qgraph.graph if quantized else graph_or_qgraph
+    if schedule is None:
+        schedule = make_schedule(graph, fusion=True, nstages=1)
+    gen = (QuantCGenerator(graph_or_qgraph, opts, schedule=schedule)
+           if quantized else CGenerator(graph, opts, schedule=schedule))
+    source = gen.generate()
+    plan = gen.plan
+    S = schedule.nstages
+    peak = max(plan.per_layer_live.values(), default=0) * plan.elem_bytes
+    return GeneratedSource(
+        source=source,
+        func_name=opts.func_name,
+        precision="int8" if quantized else "fp32",
+        simd=opts.simd,
+        codegen_version=CODEGEN_VERSION,
+        schedule=schedule,
+        entry=opts.func_name,
+        entry_ws=opts.ws_func_name,
+        entry_batch=opts.batch_func_name if opts.emit_batch else None,
+        entry_batch_ws=(opts.batch_ws_func_name if opts.emit_batch
+                        else None),
+        entry_pipeline=opts.pipeline_func_name if S > 1 else None,
+        stage_entries=gen.stage_syms,
+        workspace_elems=gen.ws_total_elems,
+        elem_bytes=plan.elem_bytes,
+        arena_elems=plan.total_floats,
+        iface_elems=gen.iface_elems,
+        in_elems=int(np.prod(graph.input_shape)),
+        out_elems=int(np.prod(graph.output_shape)),
+        arena_bytes=gen.ws_total_elems * plan.elem_bytes,
+        arena_buffer_sum_bytes=plan.buffer_sum_bytes,
+        peak_live_bytes=peak,
+        per_layer_live_bytes={k: v * plan.elem_bytes
+                              for k, v in plan.per_layer_live.items()},
+    )

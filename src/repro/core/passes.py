@@ -12,6 +12,10 @@ Adds, Concats) are rewritten correctly:
   folded into the sole producing Conv2D/DepthwiseConv2D/Dense/Add so one
   loop nest computes both (enables the P2 ternary emission in the same
   code line).
+* ``reorder_for_fusion`` — emission-order canonicalization: a
+  sole-consumer Conv/DW/Dense feeding a residual Add is moved to just
+  before the Add so ``schedule.fusable_adds`` can fold the Add into its
+  output loop (pure permutation — numerics unchanged).
 * ``align_channels`` — paper P4: pad conv output channels to a SIMD
   multiple (4 for SSSE3, 128 for TPU lanes) with zero filters; downstream
   layers are widened consistently so numerics are unchanged.
@@ -126,6 +130,55 @@ def fuse_activations(graph: CNNGraph) -> CNNGraph:
     return graph.replace(layers)
 
 
+# Add activations the fused epilogue supports (must match
+# repro.core.schedule's predicate — softmax needs the whole channel
+# vector after the sum)
+_FUSABLE_EPILOGUE_ACTS = (None, "relu", "leaky_relu")
+
+
+def reorder_for_fusion(graph: CNNGraph) -> CNNGraph:
+    """Emission-order canonicalization for epilogue fusion.
+
+    ``schedule.fusable_adds`` folds an Add into a producer only when
+    that producer is the *topologically last* of the Add's inputs
+    (every other operand must already be in memory when the producer's
+    loop runs).  When an Add's last input isn't fusable but another
+    input is a sole-consumer Conv2D/DepthwiseConv2D/Dense, moving that
+    producer's emission to just before the Add makes it last — a pure
+    reorder: edges, weights and numerics are untouched (the float
+    left-associated sum follows the Add's *input list* order, not
+    emission order), only the layer list is permuted.  Moving is safe
+    because the producer's sole consumer is the Add itself, so nothing
+    between its old and new position reads it."""
+    layers = _copy_layers(graph)
+    sink = graph.sink.name
+    for add in [l for l in layers if isinstance(l, Add)]:
+        if add.name == sink or add.activation not in _FUSABLE_EPILOGUE_ACTS:
+            continue
+        order = {l.name: i for i, l in enumerate(layers)}
+        cons = _consumer_map(layers)
+
+        def fusable(l: Layer) -> bool:
+            return (isinstance(l, (Conv2D, DepthwiseConv2D, Dense))
+                    and l.activation != "softmax"
+                    and cons[l.name] == [add])
+
+        last = layers[order[max(add.inputs, key=lambda n: order[n])]]
+        if fusable(last):
+            continue  # already in fusable position
+        cands = [layers[order[n]] for n in set(add.inputs)
+                 if fusable(layers[order[n]])]
+        if not cands:
+            continue
+        # the heaviest candidate: its materialized buffer is the most
+        # expensive round-trip to eliminate (any choice is numerically
+        # equivalent)
+        mv = max(cands, key=lambda l: int(np.prod(np.shape(l.weights))))
+        layers.remove(mv)
+        layers.insert(layers.index(add), mv)
+    return graph.replace(layers)
+
+
 _CHANNEL_PRESERVING = (ReLU, LeakyReLU, MaxPool, AvgPool, BatchNorm, Dropout)
 
 
@@ -186,6 +239,7 @@ def optimize(graph: CNNGraph, simd_multiple: int = 4) -> CNNGraph:
     g = remove_dropout(graph)
     g = fold_batchnorm(g)
     g = fuse_activations(g)
+    g = reorder_for_fusion(g)
     if simd_multiple > 1:
         g = align_channels(g, simd_multiple)
     return g

@@ -15,14 +15,17 @@ import os
 import platform
 import subprocess
 import tempfile
+import threading
 import time
 from dataclasses import dataclass, replace
-from typing import Iterator, List, Optional, Sequence
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cgen import CGenerator, CodegenOptions
+from .cgen import CodegenOptions
+from .codegen import compile as compile_graph
 from .graph import CNNGraph
+from .schedule import Schedule
 
 _CACHE_DIR = os.path.join(tempfile.gettempdir(), "nncg_cache")
 
@@ -57,16 +60,20 @@ def cc_fingerprint() -> str:
 
 
 def compile_c(source: str, *, simd: str = "sse",
-              extra_flags: Sequence[str] = ()) -> str:
+              extra_flags: Sequence[str] = (),
+              key_extra: str = "") -> str:
     """Compile C source to a shared object; returns the .so path.
 
     The output is cached by content hash over (source, simd, flags,
     compiler), so an identical build never re-invokes the compiler and
-    a toolchain change never serves a stale binary.
+    a toolchain change never serves a stale binary.  ``key_extra``
+    folds additional provenance (e.g. the schedule digest) into the
+    key; the source hash already subsumes it, but an explicit key keeps
+    cache entries self-describing if codegen ever becomes ambiguous.
     """
     os.makedirs(_CACHE_DIR, exist_ok=True)
     key = hashlib.sha256(
-        (source + repr(simd) + repr(tuple(extra_flags))
+        (source + repr(simd) + repr(tuple(extra_flags)) + key_extra
          + cc_fingerprint()).encode()
     ).hexdigest()[:16]
     so_path = os.path.join(_CACHE_DIR, f"nncg_{key}.so")
@@ -119,9 +126,19 @@ class CompiledNet:
     arena_buffer_sum_bytes: int = 0
     per_layer_live_bytes: Optional[dict] = None
     precision: str = "fp32"          # 'fp32' | 'int8'
-    workspace_bytes: int = 0         # int8 builds: arena size in bytes
+    workspace_bytes: int = 0         # int8 builds: workspace in bytes
     simd: str = "sse"                # the variant actually compiled
                                      # (post CPU-feature fallback)
+    # layer-pipelined builds (schedule.nstages > 1)
+    pipeline_func_name: Optional[str] = None
+    stage_func_names: Tuple[str, ...] = ()
+    iface_elems: Tuple[int, ...] = ()
+    arena_elems: int = 0             # per-stage private arena size
+    schedule_digest: str = ""
+
+    @property
+    def nstages(self) -> int:
+        return max(len(self.stage_func_names), 1)
 
     def __post_init__(self):
         lib = ctypes.CDLL(self.so_path)
@@ -161,6 +178,22 @@ class CompiledNet:
             self._batch_ws_fn.restype = None
             self._batch_ws_fn.argtypes = [FLOATP, FLOATP, ctypes.c_int,
                                           ctypes.POINTER(self._ws_ctype)]
+        # pipelined builds: one function per stage + sequential driver
+        self._stage_fns = []
+        for sym in self.stage_func_names:
+            fn = getattr(lib, sym)
+            fn.restype = None
+            # (in, out, ws) — element types vary per stage boundary;
+            # bind as void* and pass raw buffer addresses
+            fn.argtypes = [ctypes.c_void_p] * 3
+            self._stage_fns.append(fn)
+        self._pipeline_fn = None
+        if self.pipeline_func_name:
+            self._pipeline_fn = getattr(lib, self.pipeline_func_name)
+            self._pipeline_fn.restype = None
+            self._pipeline_fn.argtypes = [FLOATP, FLOATP,
+                                          ctypes.POINTER(self._ws_ctype),
+                                          ctypes.c_int]
 
     def _alloc_workspace(self) -> np.ndarray:
         if self.precision == "int8":
@@ -183,13 +216,20 @@ class CompiledNet:
         foreign call).  ``threads=k`` partitions the batch over k Python
         threads, each driving the reentrant ``<func>_ws`` entry with its
         own workspace — ctypes releases the GIL during the call, so this
-        is true parallelism on the same .so."""
+        is true parallelism on the same .so.
+
+        A layer-pipelined build (``nstages > 1``) streams the batch
+        through :class:`PipelineRunner` instead when ``threads`` is not
+        given: stage ``s`` of frame ``i`` overlaps stage ``s-1`` of
+        frame ``i+1`` on separate cores."""
         x = np.ascontiguousarray(x, dtype=np.float32)
         assert x.size % self.in_size == 0, (x.size, self.in_size)
         n = x.size // self.in_size
         out = np.empty(n * self.out_size, dtype=np.float32)
-        if threads is not None and threads > 1 and self._ws_fn is not None \
-                and n > 1:
+        if self._stage_fns and n > 1 and threads is None:
+            PipelineRunner(self).run(x, out, n)
+        elif threads is not None and threads > 1 \
+                and self._ws_fn is not None and n > 1:
             self._predict_batch_threaded(x, out, n, threads)
         elif self._batch_fn is not None:
             self._batch_fn(
@@ -247,35 +287,111 @@ class CompiledNet:
         return (time.perf_counter() - t0) / iters * 1e6
 
 
+class PipelineRunner:
+    """Stream frames through a layer-pipelined build, one thread per
+    stage.
+
+    Stage ``s`` of frame ``i`` runs concurrently with stage ``s-1`` of
+    frame ``i+1``: each stage boundary has two interface buffers
+    (double buffering, ``free``/``full`` semaphore pair) and each stage
+    thread owns a private arena, so a frame flows buffer-to-buffer
+    without ever blocking the stage behind it for more than one frame.
+    ctypes releases the GIL around each stage call — the overlap is
+    real core parallelism on the same .so."""
+
+    def __init__(self, net: CompiledNet):
+        if not net._stage_fns:
+            raise ValueError("not a pipelined build (nstages == 1)")
+        self.net = net
+
+    def run(self, x: np.ndarray, out: np.ndarray, n: int) -> None:
+        net = self.net
+        S = len(net._stage_fns)
+        dt = np.int8 if net.precision == "int8" else np.float32
+        bufs = [np.empty((2, max(sz, 1)), dtype=dt)
+                for sz in net.iface_elems]
+        wss = [np.empty(max(net.arena_elems, 1), dtype=dt)
+               for _ in range(S)]
+        free = [threading.Semaphore(2) for _ in range(S - 1)]
+        full = [threading.Semaphore(0) for _ in range(S - 1)]
+        xf = x.reshape(-1)
+        in_n, out_n = net.in_size, net.out_size
+        errors: list = []
+
+        def worker(s: int) -> None:
+            fn = net._stage_fns[s]
+            ws_p = wss[s].ctypes.data
+            try:
+                for i in range(n):
+                    if s > 0:
+                        full[s - 1].acquire()
+                    if s < S - 1:
+                        free[s].acquire()
+                    src = (xf[i * in_n:(i + 1) * in_n] if s == 0
+                           else bufs[s - 1][i & 1])
+                    dst = (out[i * out_n:(i + 1) * out_n] if s == S - 1
+                           else bufs[s][i & 1])
+                    fn(src.ctypes.data, dst.ctypes.data, ws_p)
+                    if s > 0:
+                        free[s - 1].release()
+                    if s < S - 1:
+                        full[s].release()
+            except BaseException as e:  # pragma: no cover - defensive
+                errors.append(e)
+                # unblock neighbours so every thread terminates
+                if s > 0:
+                    free[s - 1].release()
+                if s < S - 1:
+                    full[s].release()
+
+        threads = [threading.Thread(target=worker, args=(s,), daemon=True)
+                   for s in range(S)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:  # pragma: no cover - defensive
+            raise errors[0]
+
+
 def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
-          extra_flags: Sequence[str] = ()) -> CompiledNet:
-    """graph -> C -> .so -> callable."""
+          extra_flags: Sequence[str] = (),
+          schedule: Optional[Schedule] = None) -> CompiledNet:
+    """graph -> C -> .so -> callable.
+
+    ``schedule=None`` uses the default (epilogue fusion on, single
+    stage); pass ``make_schedule(g, nstages=k)`` for the pipelined
+    build."""
     opts = opts or CodegenOptions()
     actual = resolve_float_simd(opts.simd)
     if actual != opts.simd:
         opts = replace(opts, simd=actual)
-    gen = CGenerator(graph, opts)
-    src = gen.generate()
-    so = compile_c(src, simd=opts.simd, extra_flags=extra_flags)
-    plan = gen.plan  # the exact plan the emitted code was carved from
+    gs = compile_graph(graph, opts, schedule=schedule)
+    so = compile_c(gs.source, simd=opts.simd, extra_flags=extra_flags,
+                   key_extra="sched:" + gs.schedule.digest())
     return CompiledNet(
         so_path=so,
-        func_name=opts.func_name,
-        in_size=int(np.prod(graph.input_shape)),
-        out_size=int(np.prod(graph.output_shape)),
-        c_source_bytes=len(src),
-        batch_func_name=opts.batch_func_name if opts.emit_batch else None,
-        workspace_floats=plan.total_floats,
-        arena_bytes=plan.total_bytes,
-        arena_buffer_sum_bytes=plan.buffer_sum_bytes,
-        per_layer_live_bytes={k: v * 4
-                              for k, v in plan.per_layer_live.items()},
+        func_name=gs.func_name,
+        in_size=gs.in_elems,
+        out_size=gs.out_elems,
+        c_source_bytes=len(gs.source),
+        batch_func_name=gs.entry_batch,
+        workspace_floats=gs.workspace_elems,
+        arena_bytes=gs.arena_bytes,
+        arena_buffer_sum_bytes=gs.arena_buffer_sum_bytes,
+        per_layer_live_bytes=gs.per_layer_live_bytes,
         simd=opts.simd,
+        pipeline_func_name=gs.entry_pipeline,
+        stage_func_names=gs.stage_entries,
+        iface_elems=gs.iface_elems,
+        arena_elems=gs.arena_elems,
+        schedule_digest=gs.schedule.digest(),
     )
 
 
 def build_quantized(qgraph, opts: Optional[CodegenOptions] = None,
-                    extra_flags: Sequence[str] = ()) -> CompiledNet:
+                    extra_flags: Sequence[str] = (),
+                    schedule: Optional[Schedule] = None) -> CompiledNet:
     """Calibrated int8 graph -> C -> .so -> callable (float32 in/out).
 
     ``qgraph`` is a :class:`repro.core.quantize.QuantizedGraph`; the
@@ -285,31 +401,32 @@ def build_quantized(qgraph, opts: Optional[CodegenOptions] = None,
     fallback chain), so e.g. an AVX-512-VNNI .so is never built — let
     alone loaded — on a non-VNNI host; ``CompiledNet.simd`` reports
     what actually ran."""
-    from .cgen import QuantCGenerator
     opts = opts or CodegenOptions()
     actual = resolve_int8_simd(opts.simd)
     if actual != opts.simd:
         opts = replace(opts, simd=actual)
-    gen = QuantCGenerator(qgraph, opts)
-    src = gen.generate()
-    so = compile_c(src, simd=opts.simd, extra_flags=extra_flags)
-    plan = gen.plan
-    graph = qgraph.graph
+    gs = compile_graph(qgraph, opts, schedule=schedule)
+    so = compile_c(gs.source, simd=opts.simd, extra_flags=extra_flags,
+                   key_extra="sched:" + gs.schedule.digest())
     return CompiledNet(
         so_path=so,
-        func_name=opts.func_name,
-        in_size=int(np.prod(graph.input_shape)),
-        out_size=int(np.prod(graph.output_shape)),
-        c_source_bytes=len(src),
-        batch_func_name=opts.batch_func_name if opts.emit_batch else None,
+        func_name=gs.func_name,
+        in_size=gs.in_elems,
+        out_size=gs.out_elems,
+        c_source_bytes=len(gs.source),
+        batch_func_name=gs.entry_batch,
         workspace_floats=0,
-        arena_bytes=plan.total_bytes,
-        arena_buffer_sum_bytes=plan.buffer_sum_bytes,
-        per_layer_live_bytes={k: v * plan.elem_bytes
-                              for k, v in plan.per_layer_live.items()},
+        arena_bytes=gs.arena_bytes,
+        arena_buffer_sum_bytes=gs.arena_buffer_sum_bytes,
+        per_layer_live_bytes=gs.per_layer_live_bytes,
         precision="int8",
-        workspace_bytes=plan.total_bytes,
+        workspace_bytes=gs.workspace_elems,
         simd=opts.simd,
+        pipeline_func_name=gs.entry_pipeline,
+        stage_func_names=gs.stage_entries,
+        iface_elems=gs.iface_elems,
+        arena_elems=gs.arena_elems,
+        schedule_digest=gs.schedule.digest(),
     )
 
 

@@ -1,0 +1,285 @@
+"""Graph-level schedule: epilogue fusion + pipeline stage assignment.
+
+The paper specializes code *within* one layer loop; this module decides
+how layers are scheduled *across* the graph, one level above the
+emitters in ``cgen.py``:
+
+* **Epilogue fusion** — a residual ``Add`` whose last-computed input is
+  a ``Conv2D``/``DepthwiseConv2D``/``Dense`` that feeds nothing else can
+  be folded into that producer's output loop: at the store site the
+  producer's freshly computed value is summed with the already-computed
+  other branches (and the Add's activation applied) instead of being
+  materialized first.  The producer's output tensor never exists, so its
+  arena slot disappears.  Float fusion is *bitwise identical* to the
+  unfused graph (same left-associated sum order as the jax oracle);
+  int8 fusion is bit-exact (the producer's accumulator is requantized to
+  its own int8 code first, exactly as the unfused kernel would store it,
+  then dequantized into the Add — no double-rounding shortcut).
+* **Stage partition** — the topologically ordered emission units are
+  split into contiguous stages balanced by static per-layer cost
+  estimates (the same MAC counts the autotuner's variant enumeration
+  reasons about).  ``cgen`` emits one C function per stage plus a
+  ``<func>_pipeline`` driver; ``runtime.PipelineRunner`` overlaps stages
+  of consecutive frames across threads for batch-1 stream throughput.
+
+A :class:`Schedule` is a frozen value object so it can key caches
+(tuning records, compiled ``.so`` files) the same way
+``SessionConfig``/``CodegenOptions`` do.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from .graph import (
+    Add,
+    AvgPool,
+    BatchNorm,
+    CNNGraph,
+    Concat,
+    Conv2D,
+    Dense,
+    DepthwiseConv2D,
+    Dropout,
+    Flatten,
+    GlobalAvgPool,
+    Input,
+    MaxPool,
+)
+
+# Add activations the fused epilogue can apply (softmax needs the whole
+# channel vector after the sum — never fused into a producer store).
+_FUSABLE_ADD_ACTS = (None, "relu", "leaky_relu")
+
+# layers that emit no code of their own (cgen aliases their value to the
+# producer's buffer) — they are not pipeline units
+_ALIAS_LAYERS = (Dropout, Flatten)
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Fusion decisions + pipeline stage assignment for one graph.
+
+    ``fused_adds`` holds ``(producer_name, add_name)`` pairs: the Add's
+    arithmetic runs inside the producer's output loop and the producer's
+    tensor is never materialized.  ``stages`` lists the emission units
+    (layer names, topological order, fused Adds folded into their
+    producer's unit) per pipeline stage; a single-stage schedule is the
+    ordinary monolithic function.
+    """
+
+    fused_adds: Tuple[Tuple[str, str], ...] = ()
+    stages: Tuple[Tuple[str, ...], ...] = field(default=((),))
+
+    @property
+    def nstages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def fused_by_producer(self) -> Dict[str, str]:
+        """producer name -> the Add fused into its output loop."""
+        return {p: a for p, a in self.fused_adds}
+
+    @property
+    def fused_by_add(self) -> Dict[str, str]:
+        """fused Add name -> its producer."""
+        return {a: p for p, a in self.fused_adds}
+
+    def digest(self) -> str:
+        """Short stable hash for cache keys (tuning records, .so names)."""
+        blob = repr((self.fused_adds, self.stages)).encode()
+        return hashlib.sha256(blob).hexdigest()[:12]
+
+    def describe(self) -> Dict[str, object]:
+        return {
+            "fused_adds": [list(p) for p in self.fused_adds],
+            "nstages": self.nstages,
+            "stages": [list(s) for s in self.stages],
+            "digest": self.digest(),
+        }
+
+
+def fusable_adds(graph: CNNGraph) -> List[Tuple[str, str]]:
+    """All ``(producer, add)`` pairs where the Add can run inside the
+    producer's output loop without changing numerics.
+
+    Conditions: the producer is a Conv2D/DepthwiseConv2D/Dense feeding
+    *only* this Add (exactly one edge — a doubled ``[p, p]`` input is
+    two edges and disqualifies); it is the topologically last of the
+    Add's inputs, so every other operand is already in memory when the
+    producer's loop runs; its own activation is not softmax (relu /
+    leaky_relu are applied to the producer term before the sum, exactly
+    as the unfused graph would); the Add's activation is relu-family or
+    absent; and the Add is not the graph sink (the quantized sink path
+    dequantizes into the float ``out`` buffer — sink Adds take the
+    ordinary unfused path so both precisions share one predicate).
+    """
+    order = {l.name: i for i, l in enumerate(graph.layers)}
+    cons = graph.consumers()
+    sink = graph.sink.name
+    pairs: List[Tuple[str, str]] = []
+    for add in graph.layers:
+        if not isinstance(add, Add):
+            continue
+        if add.name == sink:
+            continue
+        if add.activation not in _FUSABLE_ADD_ACTS:
+            continue
+        last = max(add.inputs, key=lambda n: order[n])
+        p = graph.layer(last)
+        if not isinstance(p, (Conv2D, DepthwiseConv2D, Dense)):
+            continue
+        if p.activation == "softmax":
+            continue
+        if cons[p.name] != [add]:  # sole consumer, exactly one edge
+            continue
+        pairs.append((p.name, add.name))
+    return pairs
+
+
+def layer_costs(graph: CNNGraph) -> Dict[str, int]:
+    """Static per-layer cost estimate (MACs, or element count for
+    memory-bound layers) used to balance pipeline stages."""
+    smap = graph.shape_map()
+    costs: Dict[str, int] = {}
+    for l in graph.layers:
+        oh, ow, oc = smap[l.name]
+        if isinstance(l, Input) or isinstance(l, _ALIAS_LAYERS):
+            costs[l.name] = 0
+        elif isinstance(l, Conv2D):
+            costs[l.name] = oh * ow * oc * l.kh * l.kw * l.c_in
+        elif isinstance(l, DepthwiseConv2D):
+            costs[l.name] = oh * ow * oc * l.kh * l.kw
+        elif isinstance(l, Dense):
+            costs[l.name] = int(l.weights.shape[0]) * int(l.weights.shape[1])
+        elif isinstance(l, (MaxPool, AvgPool)):
+            costs[l.name] = oh * ow * oc * l.size[0] * l.size[1]
+        elif isinstance(l, GlobalAvgPool):
+            h, w, c = smap[l.inputs[0]]
+            costs[l.name] = h * w * c
+        elif isinstance(l, (Add, Concat, BatchNorm)):
+            costs[l.name] = oh * ow * oc * max(len(l.inputs), 1)
+        else:  # activations, softmax, anything elementwise
+            costs[l.name] = oh * ow * oc
+    return costs
+
+
+def emission_units(graph: CNNGraph,
+                   fused: Tuple[Tuple[str, str], ...]) -> List[str]:
+    """Topologically ordered unit names: every code-emitting layer,
+    with fused Adds absorbed into their producer's unit."""
+    fused_add_names = {a for _, a in fused}
+    return [l.name for l in graph.layers
+            if not isinstance(l, Input)
+            and not isinstance(l, _ALIAS_LAYERS)
+            and l.name not in fused_add_names]
+
+
+def _partition(costs: List[int], nstages: int) -> List[int]:
+    """Contiguous linear partition of ``costs`` into ``nstages`` chunks
+    minimizing the maximum chunk sum (classic O(n^2 * S) DP).  Returns
+    the chunk *lengths*; every chunk is non-empty."""
+    n = len(costs)
+    prefix = [0]
+    for c in costs:
+        prefix.append(prefix[-1] + c)
+    inf = float("inf")
+    dp = [[inf] * (n + 1) for _ in range(nstages + 1)]
+    cut = [[0] * (n + 1) for _ in range(nstages + 1)]
+    dp[0][0] = 0.0
+    for s in range(1, nstages + 1):
+        for i in range(s, n + 1):
+            for j in range(s - 1, i):
+                cand = max(dp[s - 1][j], prefix[i] - prefix[j])
+                if cand < dp[s][i]:
+                    dp[s][i] = cand
+                    cut[s][i] = j
+    lengths: List[int] = []
+    i = n
+    for s in range(nstages, 0, -1):
+        j = cut[s][i]
+        lengths.append(i - j)
+        i = j
+    lengths.reverse()
+    return lengths
+
+
+def _prune_arena_regressions(
+        graph: CNNGraph,
+        fused: Tuple[Tuple[str, str], ...]) -> Tuple[Tuple[str, str], ...]:
+    """Drop fused pairs until the packed arena is no larger than the
+    unfused plan's.
+
+    Fusing an Add eliminates its producer's buffer and can only shrink
+    the *peak live* set, but the arena packer is first-fit over interval
+    interference and first-fit is not monotone: removing a buffer moves
+    later buffers to different offsets, which on branchy graphs can
+    fragment the packing and *grow* the total.  Rather than weaken the
+    "fusion never costs memory" contract, fusion decisions are made
+    memory-aware here: greedily drop the pair whose removal shrinks the
+    plan most until fused <= unfused (the empty set gives exact
+    equality, so this always terminates).  The plan depends on the
+    emission style — rolled loops add padding-scratch intervals that
+    full unroll handles inline — and on the element width, so the
+    invariant is enforced across both uniform unroll styles in float
+    and int8 (per-layer mixed-unroll builds sit between the two
+    extremes and are not individually checked).
+    """
+    if not fused:
+        return fused
+    from . import cgen  # runtime import: cgen imports this module
+
+    plans = [(cgen.CodegenOptions(unroll=u), q)
+             for u in (0, None) for q in (False, True)]
+
+    def totals(pairs: Tuple[Tuple[str, str], ...]) -> Tuple[int, ...]:
+        sched = Schedule(fused_adds=pairs,
+                         stages=(tuple(emission_units(graph, pairs)),))
+        return tuple(
+            cgen.plan_arena(graph, opts, quantized=q,
+                            schedule=sched).total_floats
+            for opts, q in plans)
+
+    base = totals(())
+    keep = list(fused)
+
+    def excess(pairs: Tuple[Tuple[str, str], ...]) -> int:
+        return sum(max(0, t - b) for t, b in zip(totals(pairs), base))
+
+    while keep and excess(tuple(keep)) > 0:
+        best = min(range(len(keep)),
+                   key=lambda i: excess(tuple(keep[:i] + keep[i + 1:])))
+        keep.pop(best)
+    return tuple(keep)
+
+
+def make_schedule(graph: CNNGraph, *, nstages: int = 1,
+                  fusion: bool = True) -> Schedule:
+    """Build a :class:`Schedule` for ``graph``.
+
+    ``fusion=True`` fuses every eligible Add epilogue whose fusion does
+    not grow the packed arena (output is bitwise identical either way;
+    see :func:`_prune_arena_regressions` for why packing can regress).
+    ``nstages`` > 1 partitions the units into that many balanced
+    pipeline stages (clamped to the unit count).
+    """
+    fused = _prune_arena_regressions(
+        graph, tuple(fusable_adds(graph))) if fusion else ()
+    units = emission_units(graph, fused)
+    if not units:
+        return Schedule(fused_adds=fused, stages=((),))
+    costs = layer_costs(graph)
+    fused_by_p = {p: a for p, a in fused}
+    unit_costs = [costs[u] + costs.get(fused_by_p.get(u, ""), 0)
+                  for u in units]
+    s = max(1, min(int(nstages), len(units)))
+    if s == 1:
+        return Schedule(fused_adds=fused, stages=(tuple(units),))
+    lengths = _partition(unit_costs, s)
+    stages: List[Tuple[str, ...]] = []
+    i = 0
+    for ln in lengths:
+        stages.append(tuple(units[i:i + ln]))
+        i += ln
+    return Schedule(fused_adds=fused, stages=tuple(stages))

@@ -19,6 +19,7 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -27,6 +28,7 @@ import numpy as np
 from repro.core import cgen, runtime
 from repro.core.graph import CNNGraph
 from repro.core.runtime import cc_fingerprint  # part of the cache key
+from repro.core.schedule import Schedule, make_schedule
 
 DEFAULT_CACHE_DIR = os.path.join(tempfile.gettempdir(), "nncg_cache",
                                  "tuning")
@@ -115,17 +117,26 @@ class Autotuner:
 
     def __init__(self, simd: str, *, start_budget: int = 20_000,
                  term_cap: int = 200_000, iters: int = 300,
-                 repeats: int = 3, cache: Optional[TuningCache] = None):
+                 repeats: int = 3, cache: Optional[TuningCache] = None,
+                 schedule: Optional[Schedule] = None):
         self.simd = simd
         self.start_budget = start_budget
         self.term_cap = term_cap
         self.iters = iters
         self.repeats = max(1, repeats)
         self.cache = cache
+        # the graph-level schedule (fusion + stage partition) the
+        # deployed build will use: tuned levels are measured under the
+        # same generated code, and the digest keys the cached record —
+        # a different schedule is a different program to tune
+        self.schedule = schedule
 
     def _params_key(self) -> str:
-        return (f"b{self.start_budget}:t{self.term_cap}:i{self.iters}"
-                f":r{self.repeats}")
+        key = (f"b{self.start_budget}:t{self.term_cap}:i{self.iters}"
+               f":r{self.repeats}")
+        if self.schedule is not None:
+            key += f":sched:{self.schedule.digest()}"
+        return key
 
     def _time(self, graph: CNNGraph, levels: Dict[str, cgen.Level],
               x: np.ndarray) -> float:
@@ -134,7 +145,7 @@ class Autotuner:
         # demote deep levels and make distinct trials identical code)
         net = runtime.build(graph, cgen.CodegenOptions(
             simd=self.simd, unroll=dict(levels),
-            term_budget=self.term_cap))
+            term_budget=self.term_cap), schedule=self.schedule)
         # min over repeats: robust to scheduler noise, which would
         # otherwise persist a wrong selection into the tuning cache
         return min(
@@ -203,6 +214,67 @@ def int8_variant_candidates(qgraph=None) -> List[str]:
             and not cgen.maddubsw_any_eligible(qgraph):
         cands = [c for c in cands if c != "avx_ubs"]
     return cands
+
+
+def pipeline_stage_candidates(max_stages: int = 4) -> List[int]:
+    """Stage counts worth timing on this host: layer pipelining trades
+    one inter-stage hand-off per frame for stage-level core
+    parallelism, so counts beyond the core budget only add overhead —
+    a single-core host gets ``[1]`` and times nothing."""
+    cores = os.cpu_count() or 1
+    return [1] + [s for s in range(2, max_stages + 1) if s <= cores]
+
+
+def tune_pipeline_stages(graph: CNNGraph, *, simd: str, qgraph=None,
+                         cache: Optional[TuningCache] = None,
+                         fusion: bool = True, iters: int = 32,
+                         func_name: str = "nncg_net",
+                         candidates: Optional[List[int]] = None) -> int:
+    """Third variant axis: the pipeline stage count.
+
+    Times a batch-1 frame *stream* (the pipeline's target workload —
+    per-frame latency through ``predict_batch``) for every viable stage
+    count and returns the fastest; the winner persists in the tuning
+    cache keyed alongside the fusion flag, host core count, simd and
+    precision, so a repeat session streams nothing."""
+    if candidates is None:
+        candidates = pipeline_stage_candidates()
+    if len(candidates) == 1:
+        return candidates[0]
+    cache = cache or TuningCache()
+    extra = (f"pipe:{'+'.join(map(str, candidates))}:f{int(fusion)}"
+             f":i{iters}:c{os.cpu_count() or 1}"
+             + (":int8" if qgraph is not None else ""))
+    key = cache.key(graph, simd, extra=extra)
+    rec = cache.get(key)
+    if rec is not None and rec.get("nstages") in candidates:
+        return int(rec["nstages"])
+    n = max(8, int(iters))
+    x = np.random.default_rng(0).normal(
+        size=(n,) + tuple(graph.input_shape)).astype(np.float32)
+    # rolled loops for the stage-count trials: the relative stage
+    # balance survives the emission style, and candidate builds at the
+    # default full unroll would dwarf the measurement in compile time
+    opts = cgen.CodegenOptions(simd=simd, func_name=func_name,
+                               unroll=None)
+    best = None
+    for S in candidates:
+        sched = make_schedule(graph, nstages=S, fusion=fusion)
+        net = (runtime.build_quantized(qgraph, opts, schedule=sched)
+               if qgraph is not None
+               else runtime.build(graph, opts, schedule=sched))
+        net.predict_batch(x[:min(4, n)])  # warm caches + threads
+        t = None
+        for _ in range(2):  # min over repeats: scheduler-noise guard
+            t0 = time.perf_counter()
+            net.predict_batch(x)
+            dt = time.perf_counter() - t0
+            t = dt if t is None else min(t, dt)
+        if best is None or t < best[0]:
+            best = (t, S)
+    cache.put(key, {"nstages": best[1],
+                    "stream_us_per_frame": round(best[0] / n * 1e6, 3)})
+    return best[1]
 
 
 def tune_best_simd(graph: CNNGraph, simds, *,

@@ -144,6 +144,11 @@ class _CArenaWorker(Backend):
         net = self._net
         x = np.ascontiguousarray(x, dtype=np.float32)
         n = x.size // net.in_size
+        if net._stage_fns and n > 1:
+            # layer-pipelined build: stream the batch stage-overlapped
+            # (the runner allocates its own buffers — reentrant across
+            # concurrent server workers)
+            return net.predict_batch(x).reshape((n,) + self.out_shape)
         out = np.empty(n * net.out_size, dtype=np.float32)
         FLOATP = ctypes.POINTER(ctypes.c_float)
         if net._batch_ws_fn is not None:
@@ -177,18 +182,20 @@ class CBackend(Backend):
                  unroll=0, func_name: str = "nncg_net",
                  term_budget: Optional[int] = None,
                  threads: Optional[int] = None,
-                 qgraph=None):
+                 qgraph=None, schedule=None):
         super().__init__(graph)
         kw = {} if term_budget is None else {"term_budget": term_budget}
         self.opts = cgen.CodegenOptions(simd=simd, unroll=unroll,
                                         func_name=func_name, **kw)
         self.threads = threads
         self.qgraph = qgraph
+        self.schedule = schedule
         if qgraph is not None:
             self.precision = "int8"
-            self.net = runtime.build_quantized(qgraph, self.opts)
+            self.net = runtime.build_quantized(qgraph, self.opts,
+                                               schedule=schedule)
         else:
-            self.net = runtime.build(graph, self.opts)
+            self.net = runtime.build(graph, self.opts, schedule=schedule)
         if self.net.simd != self.opts.simd:
             # the runtime CPU-feature guard demoted the requested
             # variant; report what actually runs
@@ -207,7 +214,9 @@ class CBackend(Backend):
                  arena_bytes=self.net.arena_bytes,
                  arena_buffer_sum_bytes=self.net.arena_buffer_sum_bytes,
                  per_layer_live_bytes=dict(
-                     self.net.per_layer_live_bytes or {}))
+                     self.net.per_layer_live_bytes or {}),
+                 pipeline_stages=self.net.nstages,
+                 schedule_digest=self.net.schedule_digest)
         return d
 
     def worker(self) -> Backend:

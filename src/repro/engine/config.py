@@ -105,6 +105,13 @@ class SessionConfig:
     func_name: str = "nncg_net"
     precision: str = "fp32"
     calibration: CalibrationConfig = field(default_factory=CalibrationConfig)
+    # graph-level schedule (C backend): epilogue fusion on/off
+    # (None = auto = on; output is bitwise identical either way) and
+    # pipeline stage count (1 = monolithic, k>1 = layer-pipelined
+    # build streaming batches across k cores, 0 = auto: the autotuner
+    # times the host's viable stage counts and keeps the fastest)
+    fusion: Optional[bool] = None
+    pipeline_stages: int = 1
 
     def __post_init__(self):
         if self.precision not in _PRECISIONS:
@@ -112,6 +119,10 @@ class SessionConfig:
                 f"precision {self.precision!r}; expected one of {_PRECISIONS}")
         if self.tune_iters < 1:
             raise ValueError(f"tune_iters {self.tune_iters} < 1")
+        if self.pipeline_stages < 0:
+            raise ValueError(
+                f"pipeline_stages {self.pipeline_stages} < 0 "
+                f"(0 = auto, 1 = single stage, k = k stages)")
         # normalize the container-ish fields so equality and to_dict()
         # are stable regardless of how the caller spelled them
         object.__setattr__(self, "calibration",

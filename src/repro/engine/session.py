@@ -30,9 +30,11 @@ import numpy as np
 
 from repro.core import cgen, passes, quantize as quantize_mod, runtime
 from repro.core.graph import CNNGraph
+from repro.core.schedule import Schedule, make_schedule
 
 from .autotune import (Autotuner, TuneResult, TuningCache,
-                       int8_variant_candidates, tune_best_simd)
+                       int8_variant_candidates, tune_best_simd,
+                       tune_pipeline_stages)
 from .backends import (Backend, CBackend, QuantizedXLABackend, get_backend)
 from .config import CalibrationConfig, SessionConfig
 
@@ -167,6 +169,7 @@ class InferenceSession:
                       if config.optimize else graph)
         self.tuned: Optional[TuneResult] = None
         self.qgraph = None
+        self.schedule: Optional[Schedule] = None
 
         if config.precision == "int8":
             calibration = config.calibration.data
@@ -181,15 +184,16 @@ class InferenceSession:
             return
 
         if config.backend == "c":
+            self.schedule = self._resolve_schedule()
             if config.autotune:
                 cache = self._tuning_cache()
                 if candidates:
                     self.simd, self.tuned = tune_best_simd(
                         self.graph, candidates, cache=cache,
-                        iters=config.tune_iters)
+                        iters=config.tune_iters, schedule=self.schedule)
                 else:
                     tuner = Autotuner(self.simd, iters=config.tune_iters,
-                                      cache=cache)
+                                      cache=cache, schedule=self.schedule)
                     self.tuned = tuner.tune(self.graph)
                 unroll_cfg = self.tuned.levels
             elif config.unroll == "auto":
@@ -203,7 +207,7 @@ class InferenceSession:
             self._backend: Backend = CBackend(
                 self.graph, simd=self.simd, unroll=unroll_cfg,
                 func_name=config.func_name, term_budget=term_budget,
-                threads=config.threads)
+                threads=config.threads, schedule=self.schedule)
         else:
             self._backend = get_backend(config.backend)(self.graph)
 
@@ -212,6 +216,26 @@ class InferenceSession:
     def _tuning_cache(self) -> TuningCache:
         tc = self.config.tune_cache
         return tc if isinstance(tc, TuningCache) else TuningCache(tc)
+
+    def _resolve_schedule(self, qgraph=None) -> Schedule:
+        """The graph-level schedule this session deploys: epilogue
+        fusion per ``config.fusion`` (auto = on — output is bitwise
+        identical and the arena never grows; int8 autotune additionally
+        times the unfused build and may deploy it, see
+        :meth:`_init_int8`) and the pipeline stage count per
+        ``config.pipeline_stages`` (0 = auto: the autotuner times the
+        host's viable stage counts on a frame stream and the winner
+        persists in the tuning cache)."""
+        cfg = self.config
+        fusion = True if cfg.fusion is None else cfg.fusion
+        s = cfg.pipeline_stages
+        if s == 0:
+            s = tune_pipeline_stages(
+                self.graph, simd=self.simd, qgraph=qgraph,
+                cache=self._tuning_cache(), fusion=fusion,
+                iters=max(8, cfg.tune_iters // 8),
+                func_name=cfg.func_name)
+        return make_schedule(self.graph, nstages=s, fusion=fusion)
 
     def _default_calibration(self) -> np.ndarray:
         """Representative frames for int8 calibration when the caller
@@ -249,6 +273,7 @@ class InferenceSession:
             raise ValueError(
                 f"precision='int8' supports backends 'c' and 'xla', "
                 f"not {cfg.backend!r}")
+        sched = self.schedule = self._resolve_schedule(self.qgraph)
         if cfg.autotune:
             cands = candidates
             if not cands:
@@ -259,18 +284,34 @@ class InferenceSession:
                 # builds after fallback collapses variants)
                 cands = list(dict.fromkeys(
                     runtime.resolve_int8_simd(s) for s in cands))
+            # fusion is a variant axis too when the config leaves it to
+            # auto: fused output is bit-identical, but on layers with
+            # channel-group tails the fused requant epilogue can lose
+            # more than the skipped memory round-trip buys, so it is
+            # timed like any other code version rather than assumed
+            scheds = [sched]
+            if cfg.fusion is None and sched.fused_adds:
+                scheds.append(make_schedule(self.graph,
+                                            nstages=len(sched.stages),
+                                            fusion=False))
             cache = self._tuning_cache()
             # the generated int8 C embeds the calibration-derived
             # qparams, so the cache key must carry them: a different
-            # calibration set/method is a different program
+            # calibration set/method is a different program — and so
+            # is a different schedule (fusion + stage partition)
             qdigest = quantize_mod.qparams_digest(self.qgraph)
             key = cache.key(self.graph, "+".join(cands),
-                            extra=f"int8:{qdigest}:i{cfg.tune_iters}")
+                            extra=f"int8:{qdigest}:i{cfg.tune_iters}:sched:"
+                                  + "+".join(s.digest() for s in scheds))
             rec = cache.get(key)
             if rec is not None and rec.get("simd") in cands:
+                self.schedule = next(
+                    (s for s in scheds if s.digest() == rec.get("sched")),
+                    sched)
                 self._backend = CBackend(
                     self.graph, simd=rec["simd"], func_name=cfg.func_name,
-                    threads=cfg.threads, qgraph=self.qgraph)
+                    threads=cfg.threads, qgraph=self.qgraph,
+                    schedule=self.schedule)
                 self.simd = self._backend.opts.simd
                 self.tuned = TuneResult(levels={}, us_per_call=float(
                     rec.get("us_per_call", 0.0)), from_cache=True)
@@ -279,16 +320,23 @@ class InferenceSession:
                 size=self.graph.input_shape).astype(np.float32)
             best = None
             for simd in cands:
-                b = CBackend(self.graph, simd=simd,
-                             func_name=cfg.func_name,
-                             threads=cfg.threads, qgraph=self.qgraph)
-                t = b.time_per_call_us(x, iters=cfg.tune_iters,
-                                       warmup=max(10, cfg.tune_iters // 10))
-                if best is None or t < best[0]:
-                    best = (t, simd, b)
-            _, _, self._backend = best
+                for sc in scheds:
+                    b = CBackend(self.graph, simd=simd,
+                                 func_name=cfg.func_name,
+                                 threads=cfg.threads, qgraph=self.qgraph,
+                                 schedule=sc)
+                    # min over repeats: scheduler noise must not persist
+                    # a wrong variant/schedule into the tuning cache
+                    t = min(b.time_per_call_us(
+                        x, iters=cfg.tune_iters,
+                        warmup=max(10, cfg.tune_iters // 10))
+                        for _ in range(3))
+                    if best is None or t < best[0]:
+                        best = (t, simd, sc, b)
+            _, _, self.schedule, self._backend = best
             self.simd = self._backend.opts.simd
             cache.put(key, {"simd": self.simd,
+                            "sched": self.schedule.digest(),
                             "us_per_call": round(best[0], 3)})
             self.tuned = TuneResult(levels={}, us_per_call=best[0],
                                     from_cache=False)
@@ -299,7 +347,8 @@ class InferenceSession:
             self._backend = CBackend(self.graph, simd=simd,
                                      func_name=cfg.func_name,
                                      threads=cfg.threads,
-                                     qgraph=self.qgraph)
+                                     qgraph=self.qgraph,
+                                     schedule=sched)
             self.simd = self._backend.opts.simd
 
     # -- shapes --------------------------------------------------------------
@@ -376,6 +425,9 @@ class InferenceSession:
             d["calibration_method"] = self.qgraph.method
             if self.qgraph.method == "percentile":
                 d["calibration_percentile"] = self.qgraph.percentile
+        if self.schedule is not None:
+            # fusion decisions + stage partition of the deployed build
+            d["schedule"] = self.schedule.describe()
         if self.tuned is not None:
             d.update(levels=self.tuned.levels,
                      tuned_us_per_call=self.tuned.us_per_call,

@@ -171,6 +171,13 @@ class InferenceServer:
         self.session = (session if isinstance(session, InferenceSession)
                         else None)
         self.in_shape = tuple(self._backend.graph.input_shape)
+        # graph-level schedule fact, surfaced in stats(): a layer-
+        # pipelined C build streams each aggregated batch through its
+        # stage threads (the worker handle routes batches >1 to the
+        # pipeline runner), so batch occupancy is also the pipeline's
+        # fill — operators need to see both to read the numbers
+        self._pipeline_stages = int(
+            self._backend.describe().get("pipeline_stages") or 1)
         self._queue: "queue.Queue[InferenceResult]" = queue.Queue(
             maxsize=config.max_queue)
         self.stats_ = ServerStats(window=config.stats_window)
@@ -223,6 +230,7 @@ class InferenceServer:
         d["queue_depth"] = self._queue.qsize()
         d["workers"] = self.config.workers
         d["max_batch"] = self.config.max_batch
+        d["pipeline_stages"] = self._pipeline_stages
         if d["batches"]:
             d["batch_occupancy"] = (d["batch_size_mean"]
                                     / self.config.max_batch)

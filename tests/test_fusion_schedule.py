@@ -1,0 +1,406 @@
+"""Graph-level scheduling: epilogue fusion (residual Adds folded into
+their producer's output loop, float and int8), the unified
+``repro.core.codegen.compile()`` API and its deprecation shims, the
+layer-pipelined multi-core builds, and the engine knobs that select a
+schedule."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+try:  # hypothesis widens the branchy-graph sweep; a fixed grid runs without
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.cnn_paper import residual_cnn
+from repro.core import cgen, codegen, jax_exec, passes, quantize, runtime
+from repro.core.graph import (
+    Add, CNNGraph, Conv2D, Dense, Flatten, Input, MaxPool,
+)
+from repro.core.schedule import fusable_adds, make_schedule
+from repro.engine import InferenceSession, SessionConfig
+from repro.engine.autotune import (
+    pipeline_stage_candidates, tune_pipeline_stages,
+)
+
+
+def _conv(rng, kh, kw, ci, co, **kw_args) -> Conv2D:
+    w = rng.normal(0, 0.5, (kh, kw, ci, co)).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Conv2D(weights=w, bias=b, **kw_args)
+
+
+def _dense(rng, ci, co, **kw_args) -> Dense:
+    w = rng.normal(0, 0.3, (ci, co)).astype(np.float32)
+    b = rng.normal(0, 0.1, (co,)).astype(np.float32)
+    return Dense(weights=w, bias=b, **kw_args)
+
+
+def _conv_add_net(seed=0, add_act="relu", c=6) -> CNNGraph:
+    """Conv + residual Add (+ activation) with a conv head so the Add
+    is not the sink — the canonical fused-epilogue shape."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(8, 8, 3), name="in"),
+        _conv(rng, 3, 3, 3, c, padding="same", activation="relu",
+              name="c1"),
+        _conv(rng, 3, 3, c, c, padding="same", name="c2"),
+        Add(name="add", inputs=["c2", "c1"], activation=add_act),
+        _conv(rng, 1, 1, c, 4, name="head"),
+    ])
+
+
+def _dense_add_net(seed=1) -> CNNGraph:
+    """Dense (leaky_relu) + residual Add — the fused epilogue on the
+    dot-product kernel family."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(4, 4, 2), name="in"),
+        Flatten(name="fl"),
+        _dense(rng, 32, 16, activation="relu", name="d1"),
+        _dense(rng, 16, 16, activation="leaky_relu", name="d2"),
+        Add(name="add", inputs=["d2", "d1"], activation="relu"),
+        _dense(rng, 16, 5, name="head"),
+    ])
+
+
+def _float_simds():
+    simds = ["generic"]
+    if runtime.host_supports_ssse3():
+        simds.append("sse")
+    if runtime.host_supports_avx2():
+        simds.append("avx")
+    return simds
+
+
+def _int8_simds():
+    want = ("generic", "sse", "avx", "avx_vnni")
+    return [s for s in runtime.supported_int8_simds() if s in want]
+
+
+def _build(g, simd, fusion, nstages=1):
+    # rolled loops: scheduling decisions are orthogonal to the unroll
+    # level (the fused store is the same expression at every level, and
+    # a dedicated straight-line test covers it) and the default full
+    # unroll turns each tiny test net into a multi-minute -O3 compile
+    return runtime.build(
+        g, cgen.CodegenOptions(simd=simd, unroll=None),
+        schedule=make_schedule(g, fusion=fusion, nstages=nstages))
+
+
+# ------------------------------------------------- fusion predicate ----
+
+def test_fusable_adds_predicate():
+    g = _conv_add_net()
+    assert fusable_adds(g) == [("c2", "add")]
+    # the sink Add is never fused: the fused store would need the
+    # caller's out pointer inside the producer's loop
+    rng = np.random.default_rng(0)
+    sink = CNNGraph([
+        Input(shape=(6, 6, 3), name="in"),
+        _conv(rng, 3, 3, 3, 4, padding="same", activation="relu",
+              name="c1"),
+        _conv(rng, 3, 3, 4, 4, padding="same", name="c2"),
+        Add(name="add", inputs=["c2", "c1"], activation="relu"),
+    ])
+    assert fusable_adds(sink) == []
+    # softmax producers keep their materialized buffer (the epilogue
+    # runs per-element; softmax needs the whole channel vector)
+    sm = _conv_add_net()
+    sm.layers[2].activation = "softmax"
+    assert fusable_adds(sm) == []
+
+
+def test_schedule_digest_distinguishes_programs():
+    g = _conv_add_net()
+    digests = {make_schedule(g).digest(),
+               make_schedule(g, fusion=False).digest(),
+               make_schedule(g, nstages=2).digest()}
+    assert len(digests) == 3
+    # deterministic: same knobs, same digest
+    assert make_schedule(g).digest() == make_schedule(g).digest()
+
+
+# --------------------------------------------- fused parity (float) ----
+
+@pytest.mark.parametrize("simd", _float_simds())
+def test_fusion_parity_matrix_float(simd):
+    """Conv+Add(+relu/leaky) and Dense+Add epilogues: the fused build
+    must match the unfused build bitwise (same left-associated sum,
+    same activation code) and the jax oracle to float tolerance."""
+    for g in (_conv_add_net(add_act="relu"),
+              _conv_add_net(seed=3, add_act="leaky_relu"),
+              _dense_add_net()):
+        assert fusable_adds(g), "net must exercise the fused path"
+        x = np.random.default_rng(7).normal(
+            size=(3,) + tuple(g.input_shape)).astype(np.float32)
+        fused = _build(g, simd, True).predict_batch(x)
+        unfused = _build(g, simd, False).predict_batch(x)
+        np.testing.assert_array_equal(fused, unfused)
+        ref = np.stack([np.asarray(jax_exec.predict(g, xi)) for xi in x])
+        np.testing.assert_allclose(
+            fused.reshape(ref.shape), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_store_in_unrolled_emission():
+    """Full unroll (weights as literals, straight-line code) substitutes
+    the same fused store expression — parity must hold there too."""
+    rng = np.random.default_rng(12)
+    g = CNNGraph([
+        Input(shape=(4, 4, 2), name="in"),
+        _conv(rng, 3, 3, 2, 3, padding="same", activation="relu",
+              name="c1"),
+        _conv(rng, 3, 3, 3, 3, padding="same", name="c2"),
+        Add(name="add", inputs=["c2", "c1"], activation="relu"),
+        _conv(rng, 1, 1, 3, 2, name="head"),
+    ])
+    assert fusable_adds(g) == [("c2", "add")]
+    x = np.random.default_rng(0).normal(
+        size=(2,) + tuple(g.input_shape)).astype(np.float32)
+    opts = cgen.CodegenOptions(simd="generic", unroll=0)
+    sched_f, sched_u = make_schedule(g), make_schedule(g, fusion=False)
+    np.testing.assert_array_equal(
+        runtime.build(g, opts, schedule=sched_f).predict_batch(x),
+        runtime.build(g, opts, schedule=sched_u).predict_batch(x))
+
+
+def test_residual_dag_fused_parity():
+    """The shipped residual config (depthwise + Add + Concat) through
+    the optimizer: fused == unfused, and the fused arena never grows."""
+    g = passes.optimize(residual_cnn(), simd_multiple=1)
+    assert fusable_adds(g), "optimized residual net must fuse its Add"
+    simd = runtime.best_isa()
+    x = np.random.default_rng(5).normal(
+        size=(2,) + tuple(g.input_shape)).astype(np.float32)
+    np.testing.assert_array_equal(
+        _build(g, simd, True).predict_batch(x),
+        _build(g, simd, False).predict_batch(x))
+    opts = cgen.CodegenOptions(simd=simd, unroll=None)
+    gs_f = codegen.compile(g, opts, schedule=make_schedule(g))
+    gs_u = codegen.compile(g, opts,
+                           schedule=make_schedule(g, fusion=False))
+    assert gs_f.arena_bytes < gs_u.arena_bytes  # one buffer eliminated
+
+
+# ---------------------------------------------- fused parity (int8) ----
+
+@pytest.mark.parametrize("simd", _int8_simds())
+def test_fusion_parity_int8_bitexact(simd):
+    """Int8 Conv+Add+requant epilogue: fused and unfused builds must
+    both match the jax integer-path reference bit-for-bit."""
+    g = _conv_add_net(seed=2)
+    xs = np.random.default_rng(0).normal(
+        size=(8,) + tuple(g.input_shape)).astype(np.float32)
+    qg = quantize.quantize(g, xs)
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    opts = cgen.CodegenOptions(simd=simd)
+    for fusion in (True, False):
+        net = runtime.build_quantized(
+            qg, opts, schedule=make_schedule(g, fusion=fusion))
+        got = net.predict_batch(xs).reshape(ref.shape)
+        np.testing.assert_array_equal(got, ref)
+
+
+# ------------------------------------------- branchy graph sweep -------
+
+def _branchy_net(seed: int, c: int, add_act) -> CNNGraph:
+    """A diamond with a pooled side branch and two chained Adds — the
+    shapes epilogue fusion must never get wrong."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(6, 6, 2), name="in"),
+        _conv(rng, 3, 3, 2, c, padding="same", activation="relu",
+              name="s"),
+        _conv(rng, 3, 3, c, c, padding="same", name="b1"),
+        _conv(rng, 1, 1, c, c, activation="leaky_relu", name="b2",
+              inputs=["s"]),
+        Add(name="a1", inputs=["b1", "b2"], activation=add_act),
+        _conv(rng, 3, 3, c, c, padding="same", name="b3"),
+        Add(name="a2", inputs=["b3", "a1"], activation="relu"),
+        MaxPool(size=(2, 2), name="mp"),
+        _conv(rng, 1, 1, c, 3, name="head"),
+    ])
+
+
+def _assert_fused_matches_unfused(seed, c, add_act):
+    g = _branchy_net(seed, c, add_act)
+    x = np.random.default_rng(seed + 100).normal(
+        size=(2,) + tuple(g.input_shape)).astype(np.float32)
+    opts = cgen.CodegenOptions(simd="generic", unroll=None)
+    gs_f = codegen.compile(g, opts, schedule=make_schedule(g))
+    gs_u = codegen.compile(g, opts,
+                           schedule=make_schedule(g, fusion=False))
+    assert gs_f.arena_bytes <= gs_u.arena_bytes
+    np.testing.assert_array_equal(
+        _build(g, "generic", True).predict_batch(x),
+        _build(g, "generic", False).predict_batch(x))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           c=st.integers(2, 6),
+           add_act=st.sampled_from([None, "relu", "leaky_relu"]))
+    def test_branchy_fused_equals_unfused(seed, c, add_act):
+        _assert_fused_matches_unfused(seed, c, add_act)
+
+else:
+
+    @pytest.mark.parametrize("seed,c,add_act", [
+        (0, 2, "relu"), (11, 5, None), (42, 3, "leaky_relu")])
+    def test_branchy_fused_equals_unfused(seed, c, add_act):
+        _assert_fused_matches_unfused(seed, c, add_act)
+
+
+# ------------------------------------------------- reorder pass --------
+
+def test_reorder_for_fusion_makes_producer_last():
+    """An Add whose topologically-last input is a MaxPool (not fusable)
+    but whose other input is a sole-consumer conv: the reorder pass
+    moves the conv to just before the Add — a pure permutation — and
+    the schedule then fuses it."""
+    rng = np.random.default_rng(4)
+    g = CNNGraph([
+        Input(shape=(8, 8, 3), name="in"),
+        _conv(rng, 3, 3, 3, 4, padding="same", activation="relu",
+              name="c1"),
+        _conv(rng, 3, 3, 4, 4, strides=(2, 2), padding="same",
+              name="c2"),
+        MaxPool(size=(2, 2), name="p", inputs=["c1"]),
+        Add(name="add", inputs=["c2", "p"], activation="relu"),
+        _conv(rng, 1, 1, 4, 3, name="head"),
+    ])
+    assert fusable_adds(g) == []          # MaxPool sits after c2
+    g2 = passes.reorder_for_fusion(g)
+    assert fusable_adds(g2) == [("c2", "add")]
+    assert [l.name for l in g.layers] != [l.name for l in g2.layers]
+    x = np.random.default_rng(9).normal(
+        size=g.input_shape).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(jax_exec.predict(g, x)),
+                                  np.asarray(jax_exec.predict(g2, x)))
+
+
+# ------------------------------------------------ compile() API --------
+
+def test_compile_api_surface():
+    g = _conv_add_net()
+    gs = codegen.compile(g, cgen.CodegenOptions(unroll=None))
+    assert isinstance(gs, codegen.GeneratedSource)
+    assert gs.precision == "fp32" and gs.simd == "sse"
+    assert gs.codegen_version == cgen.CODEGEN_VERSION
+    assert gs.entry == "nncg_net" and gs.entry_ws == "nncg_net_ws"
+    assert gs.schedule.fused_adds  # fusion is the default schedule
+    assert gs.nstages == 1 and gs.entry_pipeline is None
+    assert gs.arena_bytes == gs.workspace_elems * gs.elem_bytes
+    assert gs.source.startswith("/*")  # emitted C, header comment first
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        gs.simd = "avx"
+    d = gs.describe()
+    assert d["schedule"]["digest"] == gs.schedule.digest()
+
+    qs = codegen.compile(
+        quantize.quantize(g, np.random.default_rng(0).normal(
+            size=(4,) + tuple(g.input_shape)).astype(np.float32)))
+    assert qs.precision == "int8" and qs.elem_bytes == 1
+
+
+def test_legacy_shims_warn_once_per_process():
+    g = _conv_add_net()
+    opts = cgen.CodegenOptions(simd="generic", unroll=None)
+    cgen._LEGACY_WARNED[0] = False        # other tests may have tripped it
+    with pytest.warns(DeprecationWarning, match="generate_c"):
+        legacy = cgen.generate_c(g, opts)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")    # a second warning would raise
+        again = cgen.generate_c(g, opts)
+        qg = quantize.quantize(g, np.random.default_rng(0).normal(
+            size=(4,) + tuple(g.input_shape)).astype(np.float32))
+        cgen.generate_quantized_c(qg, opts)   # shared once-per-process flag
+    assert legacy == again
+    # the shims preserve the pre-schedule output exactly: compile()
+    # with an unfused single-stage schedule is the same program
+    assert legacy == codegen.compile(
+        g, opts, schedule=make_schedule(g, fusion=False)).source
+
+
+# --------------------------------------------- pipelined builds --------
+
+def test_pipeline_parity_float():
+    g = _conv_add_net(seed=6)
+    x = np.random.default_rng(1).normal(
+        size=(6,) + tuple(g.input_shape)).astype(np.float32)
+    base = _build(g, "generic", True, nstages=1)
+    pipe = _build(g, "generic", True, nstages=2)
+    assert pipe.nstages == 2 and len(pipe.stage_func_names) == 2
+    # single frame and a streamed batch, both bit-identical to the
+    # monolithic build (same kernels, same schedule, split emission)
+    np.testing.assert_array_equal(base.predict_batch(x[:1]),
+                                  pipe.predict_batch(x[:1]))
+    np.testing.assert_array_equal(base.predict_batch(x),
+                                  pipe.predict_batch(x))
+    gs = codegen.compile(g, cgen.CodegenOptions(simd="generic",
+                                                unroll=None),
+                         schedule=make_schedule(g, nstages=2))
+    assert gs.entry_pipeline == "nncg_net_pipeline"
+    assert len(gs.stage_entries) == 2
+    assert gs.workspace_elems >= gs.arena_elems + sum(gs.iface_elems)
+
+
+def test_pipeline_parity_int8():
+    g = _conv_add_net(seed=8)
+    xs = np.random.default_rng(2).normal(
+        size=(6,) + tuple(g.input_shape)).astype(np.float32)
+    qg = quantize.quantize(g, xs)
+    opts = cgen.CodegenOptions(simd="generic")
+    base = runtime.build_quantized(qg, opts,
+                                   schedule=make_schedule(g, nstages=1))
+    pipe = runtime.build_quantized(qg, opts,
+                                   schedule=make_schedule(g, nstages=2))
+    np.testing.assert_array_equal(base.predict_batch(xs),
+                                  pipe.predict_batch(xs))
+
+
+def test_pipeline_stage_candidates_host_gated():
+    cands = pipeline_stage_candidates()
+    import os
+    assert cands[0] == 1
+    assert all(s <= max(os.cpu_count() or 1, 1) for s in cands[1:])
+    # degenerate candidate list: decided without building anything
+    assert tune_pipeline_stages(_conv_add_net(), simd="generic",
+                                candidates=[1]) == 1
+
+
+# ----------------------------------------------- engine knobs ----------
+
+def test_session_config_schedule_roundtrip():
+    cfg = SessionConfig(backend="c", fusion=False, pipeline_stages=2)
+    assert SessionConfig(**cfg.to_dict()) == cfg.portable()
+    assert SessionConfig.from_dict(cfg.to_dict()).pipeline_stages == 2
+    with pytest.raises(ValueError, match="pipeline_stages"):
+        SessionConfig(pipeline_stages=-1)
+
+
+def test_session_selects_and_reports_schedule():
+    g = _conv_add_net(seed=9)
+    x = np.random.default_rng(3).normal(
+        size=g.input_shape).astype(np.float32)
+    plain = InferenceSession(g, config=SessionConfig(
+        backend="c", simd="generic", unroll=None))
+    piped = InferenceSession(g, config=SessionConfig(
+        backend="c", simd="generic", unroll=None, pipeline_stages=2))
+    np.testing.assert_array_equal(plain.predict(x), piped.predict(x))
+    info = piped.info
+    assert info["schedule"]["nstages"] == 2
+    assert info["schedule"]["fused_adds"]       # fusion defaults on
+    assert info["config"]["pipeline_stages"] == 2
+    # round-trip: the reported config reconstructs the same schedule
+    re_cfg = SessionConfig(**info["config"])
+    assert re_cfg.pipeline_stages == 2 and re_cfg.fusion is None
+    unfused = InferenceSession(g, config=SessionConfig(
+        backend="c", simd="generic", unroll=None, fusion=False))
+    np.testing.assert_array_equal(plain.predict(x), unfused.predict(x))
+    assert unfused.info["schedule"]["fused_adds"] == []

@@ -35,7 +35,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import cgen, jax_exec, passes, quantize  # noqa: E402
+from repro.core import cgen, codegen, jax_exec, passes, quantize  # noqa: E402
 from repro.core.graph import (  # noqa: E402
     Add, CNNGraph, Conv2D, Dense, DepthwiseConv2D, Flatten, Input,
     MaxPool,
@@ -163,7 +163,7 @@ def main() -> int:
             xs.astype("<f4").tofile(x_path)
             for simd in ARM_VARIANTS:
                 opts = cgen.CodegenOptions(simd=simd)
-                src = cgen.generate_quantized_c(qg, opts)
+                src = codegen.compile(qg, opts).source
                 src += _HARNESS.format(in_n=in_n, out_n=out_n,
                                        func=opts.func_name)
                 c_path = os.path.join(tmp, f"{name}_{simd}.c")
@@ -205,8 +205,8 @@ def main() -> int:
             # int8 build must survive -std=c89 -Werror on aarch64 too
             strict_c = os.path.join(tmp, f"{name}_strict.c")
             with open(strict_c, "w") as f:
-                f.write(cgen.generate_quantized_c(
-                    qg, cgen.CodegenOptions(simd="generic")))
+                f.write(codegen.compile(
+                    qg, cgen.CodegenOptions(simd="generic")).source)
             proc = subprocess.run(
                 [cc, *STRICT_FLAGS, "-c", strict_c, "-o",
                  strict_c + ".o"], capture_output=True, text=True)

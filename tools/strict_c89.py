@@ -10,7 +10,9 @@ out of scope for ANSI), then compiles each with
 Any warning, any C99-ism (mid-block declarations, ``//`` comments,
 ``for (int ...``, bare ``restrict``) fails the build.  Exercises both
 the fully-unrolled (weights-as-literals) and rolled (const-array)
-emission paths.
+emission paths, the epilogue-fused and unfused schedules, and the
+layer-pipelined (stage functions + ``<func>_pipeline`` driver) builds
+— float and int8.
 """
 from __future__ import annotations
 
@@ -23,32 +25,47 @@ import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.cnn_paper import ball_classifier, residual_cnn  # noqa: E402
-from repro.core import cgen, passes, quantize  # noqa: E402
+from repro.core import cgen, codegen, passes, quantize  # noqa: E402
+from repro.core.schedule import make_schedule  # noqa: E402
 
 STRICT_FLAGS = ["-std=c89", "-Wall", "-Wextra", "-Werror",
                 "-pedantic-errors"]
 
+# (tag, builder, unroll, quant method or None, nstages, fusion)
 CASES = [
-    ("ball", ball_classifier, 0),       # paper CNN, fully unrolled
-    ("ball", ball_classifier, None),    # paper CNN, rolled loops
-    ("residual", residual_cnn, None),   # DAG config (Add/Concat/depthwise)
+    ("ball-unrolled", ball_classifier, 0, None, 1, True),
+    ("ball-rolled", ball_classifier, None, None, 1, True),
+    # DAG config (Add/Concat/depthwise) — fused schedule folds the
+    # residual Adds into their producer conv loops
+    ("residual-fused", residual_cnn, None, None, 1, True),
+    ("residual-unfused", residual_cnn, None, None, 1, False),
+    # layer-pipelined float build: stage functions, interface buffers,
+    # the <func>_pipeline driver — all must survive -std=c89
+    ("residual-pipe2", residual_cnn, None, None, 2, True),
     # post-training-quantized builds, one per calibration method (the
     # requant constants differ; the emitted C must stay strict-ANSI
     # regardless of how the ranges were selected)
-    ("ball", ball_classifier, "int8:minmax"),
-    ("ball", ball_classifier, "int8:mse"),
-    # quantized DAG build: per-branch Concat requant under percentile
-    ("residual", residual_cnn, "int8:percentile"),
+    ("ball-int8", ball_classifier, None, "minmax", 1, True),
+    ("ball-int8-mse", ball_classifier, None, "mse", 1, True),
+    # quantized DAG build: per-branch Concat requant under percentile,
+    # fused int8 epilogues
+    ("residual-int8", residual_cnn, None, "percentile", 1, True),
+    # layer-pipelined int8 build
+    ("residual-int8-pipe2", residual_cnn, None, "percentile", 2, True),
 ]
 
 
-def _quantized_source(graph, method: str) -> str:
-    import numpy as np
-    xs = np.random.default_rng(0).normal(
-        size=(8,) + tuple(graph.input_shape)).astype(np.float32)
-    qg = quantize.quantize(graph, xs, method=method)
-    return cgen.generate_quantized_c(
-        qg, cgen.CodegenOptions(simd="generic"))
+def _compile_unit(graph, unroll, method, nstages, fusion) -> str:
+    opts = cgen.CodegenOptions(simd="generic", unroll=unroll)
+    sched = make_schedule(graph, nstages=nstages, fusion=fusion)
+    if method is not None:
+        import numpy as np
+        xs = np.random.default_rng(0).normal(
+            size=(8,) + tuple(graph.input_shape)).astype(np.float32)
+        unit = quantize.quantize(graph, xs, method=method)
+    else:
+        unit = graph
+    return codegen.compile(unit, opts, schedule=sched).source
 
 
 def main() -> int:
@@ -58,20 +75,15 @@ def main() -> int:
         return 2
     failures = 0
     with tempfile.TemporaryDirectory() as tmp:
-        for name, builder, unroll in CASES:
+        for tag, builder, unroll, method, nstages, fusion in CASES:
             g = passes.optimize(builder(), simd_multiple=1)
-            if isinstance(unroll, str) and unroll.startswith("int8"):
-                src = _quantized_source(g, unroll.split(":")[1])
-            else:
-                src = cgen.generate_c(
-                    g, cgen.CodegenOptions(simd="generic", unroll=unroll))
-            c_path = os.path.join(tmp, f"{name}_{unroll}.c")
+            src = _compile_unit(g, unroll, method, nstages, fusion)
+            c_path = os.path.join(tmp, f"{tag}.c")
             with open(c_path, "w") as f:
                 f.write(src)
             cmd = [gcc, *STRICT_FLAGS, "-c", c_path,
                    "-o", c_path + ".o"]
             proc = subprocess.run(cmd, capture_output=True, text=True)
-            tag = f"{name} unroll={unroll}"
             if proc.returncode == 0:
                 print(f"strict_c89: {tag}: OK ({len(src)} bytes)")
             else:
