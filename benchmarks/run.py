@@ -20,6 +20,10 @@ Reproduces the NNCG evaluation on the container CPU:
     is a hard >= 0.99 gate on every net.
   * Table VII — feature ablation: generic scalar C -> SSE layout ->
     SSE + full unroll -> autotuned per-layer selection.
+  * lm — the LM workload behind the same session surface (PR 9):
+    prefill tokens/s and decode ms/token of the reduced gemma3-4b
+    through the ``"pallas-lm"`` backend with its autotuned Pallas
+    kernel-variant policy, persisted as the ``"lm"`` section.
 
 Prints ``name,us_per_call,derived,arena_bytes`` CSV rows; ``derived``
 is the speed-up over the XLA baseline (Tables IV-VI) or over the
@@ -71,7 +75,12 @@ PIPELINE_GATE = 1.15
 PIPELINE_GATE_MIN_NETS = 2
 PIPELINE_RATCHET_TOLERANCE = 0.90
 
-RESULTS: dict = {"cnns": {}, "ablation": {}}
+RESULTS: dict = {"cnns": {}, "ablation": {}, "lm": {}}
+
+# the LM rows: reduced gemma3-4b through the unified session (Pallas
+# variants autotuned exactly like C unroll levels, winner cached)
+LM_ARCH = "gemma3-4b"
+LM_BATCH, LM_PROMPT, LM_NEW = 4, 24, 16
 
 
 def _prior_results() -> dict:
@@ -333,6 +342,60 @@ def bench_table7_features():
     RESULTS["ablation"] = rows
 
 
+def bench_lm():
+    """The LM workload through the same engine surface: prefill
+    throughput (tokens/s) and decode latency (ms/token) of the
+    ``"pallas-lm"`` backend with its autotuned kernel policy."""
+    from repro.engine import LMConfig, LMSession
+
+    sess = LMSession(config=SessionConfig(
+        backend="pallas-lm", autotune=True,
+        lm=LMConfig(arch=LM_ARCH, max_context=LM_PROMPT + LM_NEW,
+                    decode_batch=LM_BATCH)))
+    prompts = np.random.default_rng(0).integers(
+        0, sess.model_cfg.vocab_size,
+        (LM_BATCH, LM_PROMPT)).astype(np.int32)
+
+    logits, _ = sess.prefill(prompts)       # warm: jit compile both steps
+    tok0 = np.argmax(logits, -1).astype(np.int32)
+
+    t_prefill = None
+    for _ in range(3):                      # min: scheduler-noise guard
+        t0 = time.perf_counter()
+        logits, handle = sess.prefill(prompts)
+        dt = time.perf_counter() - t0
+        t_prefill = dt if t_prefill is None else min(t_prefill, dt)
+    sess.decode(handle, tok0)               # warm the decode program
+    t_decode = None
+    for _ in range(3):
+        _, handle = sess.prefill(prompts)
+        tok = tok0
+        t0 = time.perf_counter()
+        for _ in range(LM_NEW):
+            tok = np.argmax(sess.decode(handle, tok), -1).astype(np.int32)
+        dt = time.perf_counter() - t0
+        t_decode = dt if t_decode is None else min(t_decode, dt)
+
+    prefill_tok_s = LM_BATCH * LM_PROMPT / t_prefill
+    decode_ms_tok = t_decode / LM_NEW * 1e3  # per step (batch rides free)
+    pol = dict(sess.kernel_policy._asdict())
+    print(f"lm_{LM_ARCH}_prefill,{t_prefill * 1e6:.0f},"
+          f"prefill_tokens_per_s={prefill_tok_s:.0f},")
+    print(f"lm_{LM_ARCH}_decode,{t_decode * 1e6:.0f},"
+          f"decode_ms_per_token={decode_ms_tok:.2f},")
+    RESULTS["lm"][LM_ARCH] = {
+        "arch": sess.model_cfg.name,
+        "batch": LM_BATCH,
+        "prompt_tokens": LM_PROMPT,
+        "new_tokens": LM_NEW,
+        "prefill_tokens_per_s": round(prefill_tok_s, 1),
+        "decode_ms_per_token": round(decode_ms_tok, 3),
+        "kernel_policy": pol,
+        "tuned_from_cache": bool(sess.tuned.from_cache),
+        "n_params": sess.backend.describe()["n_params"],
+    }
+
+
 def _persist() -> None:
     RESULTS["meta"] = {
         "cc": runtime.cc_fingerprint(),
@@ -364,6 +427,7 @@ def main() -> None:
     bench_table6_robot()
     bench_residual_dag()
     bench_table7_features()
+    bench_lm()
     _check_pipeline_gate()
     _persist()
 

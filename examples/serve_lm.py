@@ -1,13 +1,24 @@
-"""Serving example: batched prefill + decode through the KV caches.
+"""Serving example: the LM workload through the unified session API.
 
-Uses the reduced gemma3-4b config (local:global pattern with ring caches
-for the SWA layers) so it runs on CPU; the same `make_prefill_step` /
-`make_decode_step` functions are what the 512-chip dry-run lowers.
+PR 9 folded the Pallas LM stack under the same engine surface the CNNs
+use — `SessionConfig` carries an `lm` sub-config, the `"pallas-lm"`
+registry entry compiles prefill/decode behind an explicit KV-cache
+handle, and the autotuner times the Pallas kernel variants (flash vs.
+reference attention, block sizes) exactly like C unroll levels, caching
+the winner on disk.  The reduced gemma3-4b config (local:global pattern
+with ring caches for the SWA layers) keeps this runnable on CPU; token
+requests can also ride the bounded-queue server (`LMTokenServer`).
+
+The old direct-import spelling
+(`make_prefill_step(...)` / `make_decode_step(...)` by hand) still
+works and is used below as the oracle: the session's greedy decode must
+reproduce it token-for-token.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 import os
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -16,32 +27,76 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.lm_archs import ARCHS
-from repro.models import init_params, make_decode_step, make_prefill_step
-
-cfg = ARCHS["gemma3-4b"].smoke()
-params = init_params(cfg, jax.random.PRNGKey(0))
+from repro.engine import LMConfig, LMSession, SessionConfig
+from repro.models import make_decode_step, make_prefill_step
+from repro.models.stack import DEFAULT_PAR
+from repro.serve import LMTokenServer, ServerConfig
 
 BATCH, PROMPT, NEW = 4, 24, 16
-prefill = jax.jit(make_prefill_step(cfg, max_len=PROMPT + NEW))
-decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+MAX_CTX = PROMPT + NEW
+
+cache_dir = os.environ.get("NNCG_LM_CACHE",
+                           os.path.join(tempfile.gettempdir(),
+                                        "nncg_lm_cache"))
+sess = LMSession(config=SessionConfig(
+    backend="pallas-lm", autotune=True, tune_cache=cache_dir,
+    lm=LMConfig(arch="gemma3-4b", max_context=MAX_CTX,
+                decode_batch=BATCH)))
+info = sess.info
+print(f"arch={info['arch']}  params={info['n_params']:,}  "
+      f"backend={info['backend']}")
+print(f"autotuned kernel policy: {info['kernel_policy']} "
+      f"(prefill {info['tuned_prefill_us']:.0f}us, "
+      f"{'cache hit' if info['tuned_from_cache'] else 'freshly timed'})")
 
 rng = np.random.default_rng(0)
-prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (BATCH, PROMPT)))
+prompts = rng.integers(0, sess.model_cfg.vocab_size,
+                       (BATCH, PROMPT)).astype(np.int32)
 
+# -- session path: prefill + greedy decode through the KV-cache handle --
 t0 = time.time()
-logits, caches, pos = prefill(params, {"tokens": prompts})
-tok = jnp.argmax(logits, -1)[:, None]
-generated = [tok]
+logits, handle = sess.prefill(prompts)
+t_prefill = time.time() - t0
+tok = np.argmax(logits, -1).astype(np.int32)
+out = [tok]
+t0 = time.time()
 for _ in range(NEW - 1):
-    logits, caches, pos = decode(params, caches, tok, pos)
-    tok = jnp.argmax(logits, -1)[:, None]
-    generated.append(tok)
-out = jnp.concatenate(generated, axis=1)
-dt = time.time() - t0
-
+    tok = np.argmax(sess.decode(handle, tok), -1).astype(np.int32)
+    out.append(tok)
+t_decode = time.time() - t0
+out = np.stack(out, axis=1)
 assert out.shape == (BATCH, NEW)
-assert bool(jnp.isfinite(logits).all())
-print(f"served {BATCH} requests: prompt={PROMPT} tokens, "
-      f"generated={NEW} tokens each in {dt:.2f}s")
-print("sample continuation token ids:", np.asarray(out[0])[:10])
+
+# -- oracle: the direct models/lm.py loop with the same kernel policy --
+par = DEFAULT_PAR.with_kernels(sess.kernel_policy)
+cfg = sess.model_cfg
+prefill = jax.jit(make_prefill_step(cfg, max_len=MAX_CTX, par=par))
+decode = jax.jit(make_decode_step(cfg, par=par))
+lg, caches, pos = prefill(sess.backend.params,
+                          {"tokens": jnp.asarray(prompts)})
+ref_tok = jnp.argmax(lg, -1)[:, None]
+ref = [np.asarray(ref_tok[:, 0], np.int32)]
+for _ in range(NEW - 1):
+    lg, caches, pos = decode(sess.backend.params, caches, ref_tok, pos)
+    ref_tok = jnp.argmax(lg, -1)[:, None]
+    ref.append(np.asarray(ref_tok[:, 0], np.int32))
+np.testing.assert_array_equal(out, np.stack(ref, axis=1))
+print("session tokens == direct model tokens: OK")
+
+# generate() is the same loop in one call, and the token server routes
+# it through the bounded queue / stats machinery
+np.testing.assert_array_equal(sess.generate(prompts, NEW), out)
+with LMTokenServer(sess, config=ServerConfig(
+        workers=1, max_batch=BATCH, request_timeout_ms=None)) as srv:
+    futs = [srv.submit(prompts[i], max_new=NEW) for i in range(BATCH)]
+    served = np.stack([f.result(timeout=300.0) for f in futs])
+    stats = srv.stats()
+np.testing.assert_array_equal(served, out)
+print(f"served {BATCH} queued requests through LMTokenServer "
+      f"(completed={stats['completed']:.0f})")
+
+tok_s = BATCH * PROMPT / t_prefill
+ms_tok = t_decode / (BATCH * (NEW - 1)) * 1e3
+print(f"prefill: {BATCH}x{PROMPT} tokens in {t_prefill:.2f}s "
+      f"({tok_s:.0f} tok/s)   decode: {ms_tok:.1f} ms/token")
+print("sample continuation token ids:", out[0][:10])

@@ -12,8 +12,10 @@ quantization range per tensor with a pluggable method —
   the observed distribution, so a handful of outliers stop inflating
   the quantization step for everything else;
 * ``"mse"``        — grid-search the clipped range minimizing the
-  quantization mean-squared-error over the histogram (the
-  entropy-style data-driven choice);
+  quantization mean-squared-error over the histogram;
+* ``"entropy"``    — grid-search the clipped range minimizing the
+  KL divergence between the observed distribution and its int8
+  reconstruction (the TensorRT-style information-loss criterion);
 
 — and derives:
 
@@ -136,7 +138,7 @@ def qparams_from_range(mn: float, mx: float) -> QParams:
 # calibration observers (streaming histograms + range selection)
 # ---------------------------------------------------------------------------
 
-CALIBRATION_METHODS = ("minmax", "percentile", "mse")
+CALIBRATION_METHODS = ("minmax", "percentile", "mse", "entropy")
 
 
 class Observer:
@@ -253,6 +255,65 @@ class Observer:
             lo = best[1]
         return best[1], best[2]
 
+    def range_entropy(self, grid: int = 24) -> Tuple[float, float]:
+        """Coordinate search over clipped ranges for the one minimizing
+        the KL divergence ``KL(P || Q)`` between the observed histogram
+        mass ``P`` and its int8 reconstruction ``Q`` (``P`` collapsed
+        onto the 256 codes, then spread back uniformly over each code's
+        bins) — the information-loss criterion.  Saturating a bin that
+        holds observed mass relocates its reconstruction out of the bin
+        entirely (``Q = 0`` where ``P > 0``), so such candidates score
+        ``KL = inf``: entropy only ever trims *empty* outlier gaps of
+        the histogram, trading them for a finer in-range step.  Same
+        ``los``/``his`` candidate grid and alternating two-end descent
+        as :meth:`range_mse`, and the full min/max range is always a
+        candidate — on the calibration distribution itself the choice
+        can never represent less mass than ``minmax`` does."""
+        mn, mx = self.range_minmax()
+        if mn == mx:
+            return mn, mx
+        centers = ((self.edges[:-1] + self.edges[1:]) * 0.5)
+        weights = np.asarray(self.counts, np.float64)
+        total = float(weights.sum())
+        if total == 0.0:
+            return mn, mx
+        P = weights / total
+
+        def err(lo: float, hi: float) -> float:
+            lo2, hi2 = min(lo, 0.0), max(hi, 0.0)
+            scale = (hi2 - lo2) / float(QMAX - QMIN)
+            if scale <= 0.0:
+                return np.inf
+            zp = np.floor(QMIN - lo2 / scale + 0.5)
+            q = np.floor(centers / scale + 0.5) + zp
+            keep = (q >= QMIN) & (q <= QMAX)
+            if float(P[~keep].sum()) > 0.0:
+                return np.inf  # saturates observed mass: not entropy's trade
+            codes = q[keep].astype(np.int64) - QMIN
+            code_mass = np.bincount(codes, weights=P[keep], minlength=256)
+            code_bins = np.bincount(codes, minlength=256)
+            Q = code_mass[codes] / code_bins[codes]
+            Pk = P[keep]
+            nz = Pk > 0.0
+            return float((Pk[nz] * np.log(Pk[nz] / Q[nz])).sum())
+
+        los = mn * np.linspace(1.0, 1.0 / grid, grid) if mn < 0 else [mn]
+        his = mx * np.linspace(1.0, 1.0 / grid, grid) if mx > 0 else [mx]
+        best = (err(mn, mx), mn, mx)
+        lo = mn
+        for _ in range(2):  # alternate the two ends (coordinate descent)
+            for h in his:
+                e = err(lo, float(h))
+                if e < best[0]:
+                    best = (e, lo, float(h))
+            hi = best[2]
+            for l_ in los:
+                e = err(float(l_), hi)
+                if e < best[0]:
+                    best = (e, float(l_), hi)
+            lo = best[1]
+        return best[1], best[2]
+
     def select_range(self, method: str,
                      percentile: float = 99.99) -> Tuple[float, float]:
         if method == "minmax":
@@ -261,6 +322,8 @@ class Observer:
             return self.range_percentile(percentile)
         if method == "mse":
             return self.range_mse()
+        if method == "entropy":
+            return self.range_entropy()
         raise ValueError(
             f"unknown calibration method {method!r}; "
             f"expected one of {CALIBRATION_METHODS}")
@@ -539,6 +602,64 @@ def quantize(graph: CNNGraph, calibration: np.ndarray, *,
     qg.method = method
     qg.percentile = percentile
     qg.ranges = ranges
+    return qg
+
+
+def quantize_from_qparams(graph: CNNGraph,
+                          qparams: Dict[str, object]) -> QuantizedGraph:
+    """Annotate a graph with *externally-determined* activation qparams
+    — e.g. exported from a QAT run — skipping the calibration pass
+    entirely (:class:`repro.engine.CalibrationConfig` ``qparams=...``).
+
+    ``qparams`` maps layer name -> :class:`QParams`, ``(scale,
+    zero_point)`` pair, or ``{"scale": ..., "zero_point": ...}`` dict.
+    Identity/MaxPool layers (:data:`_SHARE_INPUT_QPARAMS`) may be
+    omitted — they inherit their producer's entry, the same sharing
+    rule :func:`calibrate` applies.  Every other layer must be present.
+
+    Feeding back the ``acts`` dict of a calibrated
+    :class:`QuantizedGraph` reproduces that build bit-for-bit: the
+    weight/bias quantization depends only on the activation qparams.
+    """
+    acts: Dict[str, QParams] = {}
+    for name, qp in qparams.items():
+        if isinstance(qp, QParams):
+            pass
+        elif isinstance(qp, dict):
+            qp = QParams(scale=float(qp["scale"]),
+                         zero_point=int(qp["zero_point"]))
+        elif isinstance(qp, (tuple, list)) and len(qp) == 2:
+            qp = QParams(scale=float(qp[0]), zero_point=int(qp[1]))
+        else:
+            raise TypeError(
+                f"qparams[{name!r}]: expected QParams, (scale, "
+                f"zero_point), or a dict with those keys; got {qp!r}")
+        if not (qp.scale > 0.0):
+            raise ValueError(f"qparams[{name!r}]: scale must be > 0, "
+                             f"got {qp.scale!r}")
+        acts[name] = qp
+
+    known = {l.name for l in graph.layers}
+    unknown = sorted(set(acts) - known)
+    if unknown:
+        raise ValueError(f"qparams name {unknown[0]!r} is not a layer "
+                         "of this graph")
+    for layer in graph.layers:
+        if layer.name in acts:
+            continue
+        if isinstance(layer, _SHARE_INPUT_QPARAMS):
+            acts[layer.name] = acts[layer.inputs[0]]  # producer first in
+            continue                                  # topological order
+        raise ValueError(
+            f"qparams missing for layer {layer.name!r} "
+            f"({type(layer).__name__}); only identity/MaxPool layers "
+            "may be omitted")
+
+    qg = quantize_graph(graph, acts)
+    qg.method = "provided"
+    qg.ranges = {n: (float(qp.scale * (QMIN - qp.zero_point)),
+                     float(qp.scale * (QMAX - qp.zero_point)))
+                 for n, qp in qg.acts.items()}
     return qg
 
 

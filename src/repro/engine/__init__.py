@@ -1,10 +1,12 @@
 """Unified multi-backend inference engine (paper §III deployment +
 Table VII per-layer variant selection, as a library)."""
-from .autotune import (Autotuner, TuneResult, TuningCache, cc_fingerprint,
-                       graph_fingerprint, tune_best_simd)
-from .backends import (Backend, available_backends, get_backend,
-                       register_backend)
-from .config import CalibrationConfig, SessionConfig
+from .autotune import (Autotuner, LMTuneResult, TuneResult, TuningCache,
+                       cc_fingerprint, device_digest, graph_fingerprint,
+                       lm_fingerprint, tune_best_simd, tune_lm_variants)
+from .backends import (Backend, KVCacheHandle, LMBackend, PallasLMBackend,
+                       available_backends, get_backend, register_backend)
+from .config import CalibrationConfig, LMConfig, SessionConfig
+from .lm import LMSession
 from .session import InferenceSession
 
 __all__ = [
@@ -12,13 +14,22 @@ __all__ = [
     "Backend",
     "CalibrationConfig",
     "InferenceSession",
+    "KVCacheHandle",
+    "LMBackend",
+    "LMConfig",
+    "LMSession",
+    "LMTuneResult",
+    "PallasLMBackend",
     "SessionConfig",
     "TuneResult",
     "TuningCache",
     "available_backends",
     "cc_fingerprint",
+    "device_digest",
     "get_backend",
     "graph_fingerprint",
+    "lm_fingerprint",
     "register_backend",
     "tune_best_simd",
+    "tune_lm_variants",
 ]

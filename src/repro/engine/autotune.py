@@ -76,6 +76,12 @@ class TuningCache:
         ``extra``) the tuner's own search/measurement parameters."""
         raw = (f"{graph_fingerprint(graph)}:{simd}:{cc_fingerprint()}"
                f":v{cgen.CODEGEN_VERSION}:{extra}")
+        return self.key_raw(raw)
+
+    @staticmethod
+    def key_raw(raw: str) -> str:
+        """Key an arbitrary pre-built dependency string — the LM variant
+        tuner keys on (arch, shape, device) instead of a CNNGraph."""
         return hashlib.sha256(raw.encode()).hexdigest()[:24]
 
     def _file(self, key: str) -> str:
@@ -304,3 +310,143 @@ def tune_best_simd(graph: CNNGraph, simds, *,
     if best_simd is None:
         raise ValueError("tune_best_simd: empty simd candidate list")
     return best_simd, best_res
+
+
+# ============================================================ LM variants ====
+
+def lm_fingerprint(model_cfg) -> str:
+    """Content hash of a ModelConfig: the LM analogue of
+    :func:`graph_fingerprint`.  LM weights are randomly initialized or
+    caller-supplied (no trained artifact to hash), so the *architecture*
+    is the program identity the kernel-variant measurement depends on."""
+    import dataclasses as _dc
+    d = _dc.asdict(model_cfg)
+    raw = json.dumps(d, sort_keys=True, default=str)
+    return hashlib.sha256(raw.encode()).hexdigest()[:16]
+
+
+def device_digest() -> str:
+    """What the LM measurement runs on — the jax analogue of
+    :func:`cc_fingerprint` in the C cache key."""
+    import jax
+    devs = jax.devices()
+    return (f"{devs[0].platform}:{getattr(devs[0], 'device_kind', '?')}"
+            f":n{len(devs)}")
+
+
+@dataclass
+class LMTuneResult:
+    policy: "object"      # repro.models.kernel_policy.KernelPolicy
+    prefill_us: float     # measured prefill latency of the winner
+    from_cache: bool
+
+
+_LM_BLOCK_CANDIDATES = (128, 256, 512)
+
+
+def tune_lm_variants(model_cfg, params, *, max_context: int,
+                     batch: int = 1, prompt: int = 16,
+                     cache: Optional[TuningCache] = None, iters: int = 3,
+                     fixed: Optional[dict] = None,
+                     par=None) -> LMTuneResult:
+    """Fourth variant axis family: the Pallas kernel variants of the LM
+    stack, tuned exactly like C unroll levels — timed candidates, greedy
+    per-axis descent, winner persisted in the tuning cache.
+
+    Axes (each skipped when the arch has no such layer, or when the
+    caller pinned it via ``fixed``):
+
+    * attention kernel (``flash_jax`` / ``flash_pallas`` / ``reference``)
+      for archs with A/L/S blocks,
+    * flash block sizes for the attention winner,
+    * RWKV scan kernel (``chunked`` / ``linear_scan``) for R blocks.
+
+    The cache key is (arch fingerprint, prefill shape, device digest,
+    measurement params) — no CNNGraph involved."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm as lm_mod
+    from repro.models.kernel_policy import (ATTENTION_VARIANTS,
+                                            DEFAULT_KERNELS, KernelPolicy,
+                                            SCAN_VARIANTS, fit_block)
+    from repro.models.stack import DEFAULT_PAR
+
+    fixed = dict(fixed or {})
+    base = DEFAULT_KERNELS._replace(**fixed).validate()
+    kinds = set(model_cfg.pattern) | set(model_cfg.prologue or "")
+    tune_attn = bool(kinds & {"A", "L", "S"}) and "attention" not in fixed
+    tune_blocks = bool(kinds & {"A", "L", "S"}) \
+        and not {"block_q", "block_k"} & set(fixed)
+    tune_scan = "R" in kinds and "scan" not in fixed
+
+    cache = cache or TuningCache()
+    raw = (f"lm:{lm_fingerprint(model_cfg)}:ctx{max_context}:b{batch}"
+           f":p{prompt}:{device_digest()}:i{iters}"
+           f":fx{sorted(fixed.items())}:v1")
+    key = cache.key_raw(raw)
+    rec = cache.get(key)
+    if rec is not None:
+        return LMTuneResult(policy=KernelPolicy(**rec["policy"]).validate(),
+                            prefill_us=float(rec["prefill_us"]),
+                            from_cache=True)
+
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, model_cfg.vocab_size, size=(batch, prompt)), jnp.int32)
+    par0 = DEFAULT_PAR if par is None else par
+
+    def effective(pol: KernelPolicy):
+        # distinct requested blocks that fit to the same tiles at this
+        # prompt shape are the same program — time each once
+        return (pol.attention,
+                pol.scan if tune_scan else DEFAULT_KERNELS.scan,
+                fit_block(prompt, pol.block_q), fit_block(prompt, pol.block_k))
+
+    timed: Dict[tuple, float] = {}
+
+    def time_policy(pol: KernelPolicy) -> float:
+        eff = effective(pol)
+        if eff in timed:
+            return timed[eff]
+        step = jax.jit(lm_mod.make_prefill_step(
+            model_cfg, max_len=max_context, par=par0.with_kernels(pol)))
+        jax.block_until_ready(step(params, {"tokens": toks}))  # compile
+        best = None
+        for _ in range(max(1, iters)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(params, {"tokens": toks}))
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        timed[eff] = best * 1e6
+        return timed[eff]
+
+    best_pol, best_us = base, time_policy(base)
+    if tune_attn:
+        for attn in ATTENTION_VARIANTS:
+            trial = best_pol._replace(attention=attn)
+            t = time_policy(trial)
+            if t < best_us:
+                best_pol, best_us = trial, t
+    if tune_blocks:
+        for b in _LM_BLOCK_CANDIDATES:
+            trial = best_pol._replace(block_q=b, block_k=b)
+            t = time_policy(trial)
+            if t < best_us:
+                best_pol, best_us = trial, t
+    if tune_scan:
+        for scan in SCAN_VARIANTS:
+            trial = best_pol._replace(scan=scan)
+            t = time_policy(trial)
+            if t < best_us:
+                best_pol, best_us = trial, t
+
+    cache.put(key, {
+        "policy": dict(best_pol._asdict()),
+        "prefill_us": round(best_us, 3),
+        "arch": model_cfg.name,
+        "device": device_digest(),
+        "shape": {"batch": batch, "prompt": prompt,
+                  "max_context": max_context},
+    })
+    return LMTuneResult(policy=best_pol, prefill_us=best_us,
+                        from_cache=False)

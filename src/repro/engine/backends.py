@@ -75,10 +75,13 @@ class Backend(abc.ABC):
 
     name = "?"
     precision = "fp32"
+    workload = "cnn"
 
-    def __init__(self, graph: CNNGraph):
+    def __init__(self, graph: Optional[CNNGraph]):
+        # LM backends (workload="lm") have no CNNGraph; everything that
+        # reads .graph/.out_shape must tolerate None for them.
         self.graph = graph
-        self.out_shape = graph.output_shape
+        self.out_shape = graph.output_shape if graph is not None else None
 
     @abc.abstractmethod
     def predict_batch(self, x: np.ndarray) -> np.ndarray:
@@ -304,3 +307,151 @@ class PallasBackend(_JaxBackend):
             return jax_exec.forward_pallas(graph, x)
 
         return f
+
+
+# =========================================================== LM workload ====
+
+class KVCacheHandle:
+    """An opaque decode-state handle: the per-layer KV/recurrence caches
+    plus the next write position.  Returned by :meth:`LMBackend.prefill`,
+    advanced in place by :meth:`LMBackend.decode` — the token-server and
+    session layers never look inside."""
+
+    __slots__ = ("caches", "pos", "batch")
+
+    def __init__(self, caches, pos, batch: int):
+        self.caches = caches
+        self.pos = pos
+        self.batch = batch
+
+    def __repr__(self):
+        return f"KVCacheHandle(batch={self.batch}, pos={self.pos})"
+
+
+class LMBackend(Backend):
+    """The LM execution contract next to ``predict_batch``: explicit
+    prefill/decode steps over a :class:`KVCacheHandle`.
+
+    ``predict_batch`` stays in the interface — for an LM it maps int32
+    token ids ``(N, T)`` to full-sequence logits ``(N, T, V)`` — so the
+    registry, the server worker pool and ``describe()`` plumbing treat
+    both workloads identically; the token-level serving path uses the
+    three LM methods below."""
+
+    workload = "lm"
+
+    @abc.abstractmethod
+    def prefill(self, tokens: np.ndarray):
+        """``(B, T)`` int32 prompts -> ``(last_logits (B, V),
+        KVCacheHandle)``."""
+
+    @abc.abstractmethod
+    def decode(self, handle: KVCacheHandle, tokens: np.ndarray) -> np.ndarray:
+        """One step: ``(B,)`` int32 tokens against ``handle`` ->
+        ``(B, V)`` logits.  Advances the handle in place."""
+
+    def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        """Greedy decode: ``(B, T)`` int32 -> ``(B, max_new)`` int32."""
+        prompts = np.asarray(prompts, np.int32)
+        if max_new < 1:
+            return np.zeros((prompts.shape[0], 0), np.int32)
+        logits, handle = self.prefill(prompts)
+        tok = np.argmax(logits, axis=-1).astype(np.int32)
+        out = [tok]
+        for _ in range(max_new - 1):
+            logits = self.decode(handle, tok)
+            tok = np.argmax(logits, axis=-1).astype(np.int32)
+            out.append(tok)
+        return np.stack(out, axis=1)
+
+
+@register_backend("pallas-lm")
+class PallasLMBackend(LMBackend):
+    """The gemma3-style LM stack (:mod:`repro.models`) as a registry
+    citizen: jit-compiled prefill/decode closed over a
+    :class:`~repro.models.kernel_policy.KernelPolicy` (the autotuned
+    Pallas-variant choice) and an optional :class:`MeshPar` for
+    data-parallel prefill.  Constructed by
+    :class:`repro.engine.lm.LMSession`, not from a ``CNNGraph``."""
+
+    def __init__(self, model_cfg, *, params=None, max_context: int = 128,
+                 decode_batch: int = 1, policy=None, par=None, seed: int = 0):
+        import jax
+
+        from repro.models import lm as lm_mod
+        from repro.models.kernel_policy import DEFAULT_KERNELS
+        from repro.models.stack import DEFAULT_PAR
+
+        super().__init__(None)
+        self.model_cfg = model_cfg
+        self.max_context = int(max_context)
+        self.decode_batch = int(decode_batch)
+        base_par = DEFAULT_PAR if par is None else par
+        self.par = base_par.with_kernels(policy)
+        self.policy = getattr(self.par, "kernels", DEFAULT_KERNELS)
+        self.mesh = getattr(base_par, "mesh", None)
+        if params is None:
+            params = lm_mod.init_params(model_cfg, jax.random.PRNGKey(seed))
+        if self.mesh is not None:
+            from repro.launch.sharding import param_specs, to_named
+            params = jax.device_put(
+                params, to_named(self.mesh, param_specs(self.mesh, params)))
+        self.params = params
+        self._prefill_fn = jax.jit(lm_mod.make_prefill_step(
+            model_cfg, max_len=self.max_context, par=self.par))
+        self._decode_fn = (None if model_cfg.is_encoder else jax.jit(
+            lm_mod.make_decode_step(model_cfg, par=self.par)))
+
+        def _full(p, tokens):
+            logits, _ = lm_mod.forward(p, model_cfg, {"tokens": tokens},
+                                       self.par)
+            return logits
+
+        self._forward_fn = jax.jit(_full)
+
+    # ----------------------------------------------------- LM contract --
+    def prefill(self, tokens: np.ndarray):
+        import jax.numpy as jnp
+        tokens = np.asarray(tokens, np.int32)
+        B, T = tokens.shape
+        if T > self.max_context:
+            raise ValueError(
+                f"prompt length {T} > max_context {self.max_context}")
+        logits, caches, pos = self._prefill_fn(
+            self.params, {"tokens": jnp.asarray(tokens)})
+        return (np.asarray(logits, np.float32),
+                KVCacheHandle(caches, pos, batch=B))
+
+    def decode(self, handle: KVCacheHandle, tokens: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+        if self._decode_fn is None:
+            raise ValueError(
+                f"{self.model_cfg.name} is encoder-only: no decode step")
+        tokens = np.asarray(tokens, np.int32).reshape(handle.batch, 1)
+        logits, handle.caches, handle.pos = self._decode_fn(
+            self.params, handle.caches, jnp.asarray(tokens), handle.pos)
+        return np.asarray(logits, np.float32)
+
+    # ------------------------------------------------- shared contract --
+    def predict_batch(self, x: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+        tokens = jnp.asarray(np.asarray(x, np.int32))
+        return np.asarray(self._forward_fn(self.params, tokens), np.float32)
+
+    def describe(self) -> dict:
+        from repro.models.lm import param_count
+        return {
+            "name": self.name,
+            "precision": self.precision,
+            "workload": self.workload,
+            "arch": self.model_cfg.name,
+            "vocab_size": self.model_cfg.vocab_size,
+            "max_context": self.max_context,
+            "decode_batch": self.decode_batch,
+            "kernel_policy": dict(self.policy._asdict()),
+            "n_params": param_count(self.model_cfg),
+            "mesh": (None if self.mesh is None
+                     else dict(zip(self.mesh.axis_names,
+                                   [self.mesh.shape[a]
+                                    for a in self.mesh.axis_names]))),
+        }

@@ -41,12 +41,21 @@ class CalibrationConfig:
     ``data`` (the historical, bit-stable behavior), ``"percentile"``
     when the session synthesizes its default frames (outlier-tail clip
     is what keeps the robot net's top-1 agreement >= 0.99 there).
+
+    ``qparams`` accepts externally-determined quantization parameters —
+    e.g. exported from a QAT run — as a mapping of layer name to
+    :class:`repro.core.quantize.QParams` (or a ``(scale, zero_point)``
+    pair).  When set, the session skips calibration entirely and feeds
+    the provided scales/zero-points straight into the
+    :class:`QuantizedGraph`; like ``data`` it is runtime state, not a
+    serializable knob.
     """
 
     data: Optional[Any] = None          # np.ndarray; not serialized
     samples: int = 32
     method: Optional[str] = None        # None = auto (see above)
     percentile: float = 99.99
+    qparams: Optional[Dict[str, Any]] = None  # QAT import; not serialized
 
     def __post_init__(self):
         if (self.method is not None
@@ -70,6 +79,87 @@ class CalibrationConfig:
         """JSON-safe knobs (``data`` omitted — arrays don't serialize)."""
         return {"samples": self.samples, "method": self.method,
                 "percentile": self.percentile}
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    """The LM workload sub-config carried by ``SessionConfig.lm``.
+
+    Setting it routes the session through :class:`repro.engine.lm.LMSession`
+    and the ``"pallas-lm"`` backend instead of a compiled CNN graph.
+
+    ``arch`` names an entry of :data:`repro.configs.lm_archs.ARCHS`;
+    ``smoke=True`` shrinks it via ``ModelConfig.smoke()`` (the CI/CPU
+    shape).  ``attn_variant``/``scan_variant``/``block_q``/``block_k``
+    pin :class:`repro.models.kernel_policy.KernelPolicy` axes; axes left
+    ``None`` are chosen by the autotuner when ``autotune=True`` (winner
+    persisted in the tuning cache) and fall back to the defaults
+    otherwise.  ``mesh_shape`` requests a device mesh for data-parallel
+    prefill via :mod:`repro.launch.mesh`; when the host has fewer
+    devices the session falls back to single-device cleanly.
+    """
+
+    arch: str = "gemma3-4b"
+    smoke: bool = True
+    max_context: int = 128
+    decode_batch: int = 1
+    attn_variant: Optional[str] = None
+    scan_variant: Optional[str] = None
+    block_q: Optional[int] = None
+    block_k: Optional[int] = None
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        # deferred imports: repro.configs/repro.models pull in jax, which
+        # the pure-C config path must not require at import time
+        from repro.configs.lm_archs import ARCHS
+        from repro.models.kernel_policy import (ATTENTION_VARIANTS,
+                                                SCAN_VARIANTS)
+        if self.arch not in ARCHS:
+            raise ValueError(
+                f"lm arch {self.arch!r}; expected one of "
+                f"{tuple(sorted(ARCHS))}")
+        if self.max_context < 1:
+            raise ValueError(f"max_context {self.max_context} < 1")
+        if self.decode_batch < 1:
+            raise ValueError(f"decode_batch {self.decode_batch} < 1")
+        if (self.attn_variant is not None
+                and self.attn_variant not in ATTENTION_VARIANTS):
+            raise ValueError(
+                f"attn_variant {self.attn_variant!r}; expected one of "
+                f"{ATTENTION_VARIANTS} or None (autotuned)")
+        if (self.scan_variant is not None
+                and self.scan_variant not in SCAN_VARIANTS):
+            raise ValueError(
+                f"scan_variant {self.scan_variant!r}; expected one of "
+                f"{SCAN_VARIANTS} or None (autotuned)")
+        for name in ("block_q", "block_k"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"{name} {v} < 1")
+        if self.mesh_shape is not None:
+            object.__setattr__(self, "mesh_shape",
+                               tuple(int(d) for d in self.mesh_shape))
+            if any(d < 1 for d in self.mesh_shape):
+                raise ValueError(f"mesh_shape {self.mesh_shape}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        if d["mesh_shape"] is not None:
+            d["mesh_shape"] = list(d["mesh_shape"])
+        return d
+
+
+def _coerce_lm(v) -> Optional[LMConfig]:
+    if v is None or isinstance(v, LMConfig):
+        return v
+    if isinstance(v, dict):
+        return LMConfig(**v)
+    if isinstance(v, str):  # shorthand: lm="gemma3-4b"
+        return LMConfig(arch=v)
+    raise TypeError(f"lm must be an LMConfig, dict, arch name or None; "
+                    f"got {type(v).__name__}")
 
 
 def _coerce_calibration(v) -> CalibrationConfig:
@@ -112,6 +202,9 @@ class SessionConfig:
     # times the host's viable stage counts and keeps the fastest)
     fusion: Optional[bool] = None
     pipeline_stages: int = 1
+    # LM workload sub-config; None = classic CNN-graph session.  Accepts
+    # an LMConfig, a dict (from to_dict round-trips), or an arch name.
+    lm: Optional[LMConfig] = None
 
     def __post_init__(self):
         if self.precision not in _PRECISIONS:
@@ -127,6 +220,7 @@ class SessionConfig:
         # are stable regardless of how the caller spelled them
         object.__setattr__(self, "calibration",
                            _coerce_calibration(self.calibration))
+        object.__setattr__(self, "lm", _coerce_lm(self.lm))
         if self.simd_search is not None:
             object.__setattr__(self, "simd_search",
                                tuple(self.simd_search))
@@ -141,9 +235,10 @@ class SessionConfig:
         string is kept).  ``SessionConfig(**cfg.to_dict())`` equals
         ``cfg.portable()``."""
         changes: Dict[str, Any] = {}
-        if self.calibration.data is not None:
+        if (self.calibration.data is not None
+                or self.calibration.qparams is not None):
             changes["calibration"] = dataclasses.replace(
-                self.calibration, data=None)
+                self.calibration, data=None, qparams=None)
         if self.tune_cache is not None and not isinstance(
                 self.tune_cache, str):
             changes["tune_cache"] = getattr(self.tune_cache, "path", None)
@@ -154,6 +249,7 @@ class SessionConfig:
         p = self.portable()
         d = dataclasses.asdict(p)
         d["calibration"] = p.calibration.to_dict()
+        d["lm"] = p.lm.to_dict() if p.lm is not None else None
         if d["simd_search"] is not None:
             d["simd_search"] = list(d["simd_search"])
         return d

@@ -152,6 +152,11 @@ class InferenceSession:
                 _warn_legacy_once()
             config = _config_from_legacy(
                 "c" if backend is _UNSET else backend, legacy)
+        if config.lm is not None:
+            raise TypeError(
+                "SessionConfig.lm is an LM workload: construct "
+                "repro.engine.LMSession(config=cfg) instead of "
+                "InferenceSession (which serves CNN graphs)")
         self.config = config
 
         self.backend_name = config.backend
@@ -172,14 +177,20 @@ class InferenceSession:
         self.schedule: Optional[Schedule] = None
 
         if config.precision == "int8":
-            calibration = config.calibration.data
-            method = config.calibration.resolved_method(
-                data_provided=calibration is not None)
-            if calibration is None:
-                calibration = self._default_calibration()
-            self.qgraph = quantize_mod.quantize(
-                self.graph, calibration, method=method,
-                percentile=config.calibration.percentile)
+            if config.calibration.qparams is not None:
+                # externally-determined (e.g. QAT-exported) scales and
+                # zero-points: no calibration pass at all
+                self.qgraph = quantize_mod.quantize_from_qparams(
+                    self.graph, config.calibration.qparams)
+            else:
+                calibration = config.calibration.data
+                method = config.calibration.resolved_method(
+                    data_provided=calibration is not None)
+                if calibration is None:
+                    calibration = self._default_calibration()
+                self.qgraph = quantize_mod.quantize(
+                    self.graph, calibration, method=method,
+                    percentile=config.calibration.percentile)
             self._init_int8(candidates)
             return
 

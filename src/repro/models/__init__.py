@@ -1,4 +1,5 @@
 from .config import ModelConfig
+from .kernel_policy import DEFAULT_KERNELS, KernelPolicy
 from .stack import Par, DEFAULT_PAR, init_params, init_cache, apply_stack
 from .lm import (forward, loss_fn, make_train_step, make_eval_step,
                  make_prefill_step, make_decode_step, param_count,

@@ -1,0 +1,71 @@
+"""The autotunable Pallas/jax kernel-variant axes of the LM stack.
+
+The C backend's variant space is per-layer unroll levels and int8 ISA
+tiles; the LM stack's variant space is which attention/scan kernel the
+prefill path runs and at what block sizes.  :class:`KernelPolicy` is
+that selection as a value: the model code reads it off the ``Par``
+context (``par.kernels``), the autotuner times candidate policies like
+it times C code versions, and the winner is serialized into the same
+on-disk tuning cache (``KernelPolicy(**record)`` round-trips).
+
+Variant axes:
+
+* ``attention`` — the prefill/train attention kernel:
+  ``"flash_jax"`` (pure-jnp online-softmax flash with a custom VJP —
+  the historical default), ``"flash_pallas"`` (the Pallas TPU flash
+  kernel from :mod:`repro.kernels.flash_attention`; interpret mode on
+  CPU), or ``"reference"`` (dense masked softmax,
+  :func:`repro.kernels.ref.attention_ref`).
+* ``scan`` — the RWKV6 diagonal-decay recurrence: ``"chunked"``
+  (lax.scan of rematerialized chunks) or ``"linear_scan"`` (the Pallas
+  kernel from :mod:`repro.kernels.linear_scan`).
+* ``block_q`` / ``block_k`` — flash tile sizes; clipped per call site
+  to the largest divisor of the actual sequence length
+  (:func:`fit_block`), so one policy serves every prompt shape.
+
+Decode (T == 1) always runs the gather-based
+:func:`repro.models.layers.decode_attention_jax` path — a one-row
+flash tile has nothing to tile.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+ATTENTION_VARIANTS = ("flash_jax", "flash_pallas", "reference")
+SCAN_VARIANTS = ("chunked", "linear_scan")
+
+
+class KernelPolicy(NamedTuple):
+    attention: str = "flash_jax"
+    scan: str = "chunked"
+    block_q: int = 512
+    block_k: int = 512
+
+    def validate(self) -> "KernelPolicy":
+        if self.attention not in ATTENTION_VARIANTS:
+            raise ValueError(
+                f"attention variant {self.attention!r}; expected one of "
+                f"{ATTENTION_VARIANTS}")
+        if self.scan not in SCAN_VARIANTS:
+            raise ValueError(
+                f"scan variant {self.scan!r}; expected one of "
+                f"{SCAN_VARIANTS}")
+        if self.block_q < 1 or self.block_k < 1:
+            raise ValueError(
+                f"flash blocks ({self.block_q}, {self.block_k}) must be >= 1")
+        return self
+
+
+DEFAULT_KERNELS = KernelPolicy()
+
+
+def fit_block(n: int, block: int) -> int:
+    """Largest divisor of ``n`` that is <= ``block`` (>= 1).
+
+    The Pallas kernels assert the sequence length divides the tile; a
+    policy tuned at one shape must still run at every other, so block
+    sizes are a *ceiling*, fitted per call site."""
+    b = max(1, min(int(block), int(n)))
+    while n % b:
+        b -= 1
+    return b

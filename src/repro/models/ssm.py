@@ -19,6 +19,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .kernel_policy import fit_block
 from .layers import act_fn, group_norm_heads, linear, rms_norm
 
 
@@ -177,13 +178,22 @@ def _token_shift(x, prev):
 
 def rwkv6_time_mix(x, p, *, head_dim: int,
                    state: Optional[RWKVState] = None,
-                   constraint=None, chunk: int = 64):
+                   constraint=None, chunk: int = 64,
+                   scan: str = "chunked"):
     """RWKV6 'Finch' time mix with data-dependent per-channel decay.
 
     The recurrence runs as a scan-of-chunks with the chunk body
     rematerialized (jax.checkpoint): the differentiated outer scan stores
     one (B,H,N,N) state per *chunk* instead of per step — O(T/chunk)
-    instead of O(T) residuals. ``constraint`` shards the head dim."""
+    instead of O(T) residuals. ``constraint`` shards the head dim.
+
+    ``scan="linear_scan"`` routes the recurrence through the Pallas
+    kernel instead (prefill/train only; single-step decode keeps the
+    trivial scan). The kernel reads the state *post*-update (y_t = r·S_t)
+    while RWKV reads it pre-update plus the u-bonus, so the kernel gets
+    inputs shifted by one step — its state after step t is then S_{t-1} —
+    and the separable bonus r·(u ⊙ k_t v_tᵀ) = (Σ_n r u k)·v_t plus the
+    true final state are one elementwise step each outside the kernel."""
     B_, T, D = x.shape
     N = head_dim
     H = D // N
@@ -214,6 +224,22 @@ def rwkv6_time_mix(x, p, *, head_dim: int,
     rf = r.astype(jnp.float32)
     s0 = (jnp.zeros((B_, H, N, N), jnp.float32) if state is None
           else state.wkv)
+
+    if scan == "linear_scan" and T > 1:
+        from ..kernels.ops import linear_scan
+        one = jnp.ones((B_, 1, H, N), jnp.float32)
+        d_sh = jnp.concatenate([one, decay[:, :-1]], axis=1)
+        k_sh = jnp.concatenate([0.0 * one, kf[:, :-1]], axis=1)
+        v_sh = jnp.concatenate([0.0 * one, vf[:, :-1]], axis=1)
+        y, S_prev = linear_scan(d_sh, k_sh, v_sh, rf, s0,
+                                chunk=fit_block(T, chunk))
+        y = y + jnp.einsum("bthn,hn,bthn->bth", rf, u, kf)[..., None] * vf
+        S_final = (decay[:, -1][..., None] * S_prev
+                   + kf[:, -1][..., None] * vf[:, -1][..., None, :])
+        y = group_norm_heads(y, p["ln_x"].reshape(H, N)[None, None])
+        y = (y.reshape(B_, T, D).astype(x.dtype)) * g
+        out = linear(y, p["w_o"])
+        return out, S_final, x[:, -1]
 
     def step(S, inp):
         rt, kt, vt, dt = inp  # (B,H,N) x3, (B,H,N)

@@ -9,6 +9,7 @@ structural constant is the purest P3 exploit in the pool.
 """
 from __future__ import annotations
 
+import copy
 import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
@@ -17,6 +18,7 @@ import jax.numpy as jnp
 
 from .attention_vjp import flash_mha, local_mha
 from .config import ModelConfig
+from .kernel_policy import DEFAULT_KERNELS, KernelPolicy, fit_block
 from .layers import (
     decode_attention_jax,
     gated_mlp,
@@ -41,7 +43,21 @@ from .ssm import (
 class Par:
     """Parallelism context. The default is a single-device no-op; the
     distribution layer overrides hooks to add sharding constraints and a
-    shard_map'd MoE. Model code never imports mesh machinery."""
+    shard_map'd MoE. Model code never imports mesh machinery.
+
+    ``kernels`` carries the :class:`KernelPolicy` — the autotuned choice
+    of prefill attention / RWKV scan kernel — so kernel selection rides
+    the same context object as parallelism and the model code stays free
+    of engine imports."""
+
+    kernels: KernelPolicy = DEFAULT_KERNELS
+
+    def with_kernels(self, policy: Optional[KernelPolicy]) -> "Par":
+        if policy is None:
+            return self
+        out = copy.copy(self)
+        out.kernels = KernelPolicy(*policy).validate()
+        return out
 
     def constraint(self, x, kind: str):
         return x
@@ -231,6 +247,32 @@ def _apply_rope(cfg, q, k, positions, pos3):
             rope(k, positions, cfg.rope_theta, cfg.rope_dim))
 
 
+def _prefill_attention(q, k, v, cfg: ModelConfig, kind: str,
+                       pol: KernelPolicy):
+    """Prefill/train attention dispatch over the policy's variant axis.
+
+    q/k/v are (B, T, H, Dh); the Pallas kernel and the dense oracle both
+    speak (B, H, T, Dh), so those paths transpose at the boundary."""
+    window = cfg.window if kind == "L" and cfg.window is not None else None
+    if pol.attention == "flash_jax":
+        import os as _os
+        bq = int(_os.environ.get("NNCG_FLASH_BQ", pol.block_q))
+        bk = int(_os.environ.get("NNCG_FLASH_BK", pol.block_k))
+        if window is not None:
+            return local_mha(q, k, v, window, None, min(bq, 256))
+        return flash_mha(q, k, v, cfg.causal, None, None, bq, bk)
+    qh, kh, vh = (jnp.swapaxes(a, 1, 2) for a in (q, k, v))
+    if pol.attention == "flash_pallas":
+        from ..kernels.ops import flash_attention
+        o = flash_attention(qh, kh, vh, causal=cfg.causal, window=window,
+                            block_q=fit_block(qh.shape[2], pol.block_q),
+                            block_k=fit_block(kh.shape[2], pol.block_k))
+    else:  # "reference"
+        from ..kernels.ref import attention_ref
+        o = attention_ref(qh, kh, vh, causal=cfg.causal, window=window)
+    return jnp.swapaxes(o, 1, 2)
+
+
 def attention_block(x, p, cfg: ModelConfig, par: Par, kind: str, *,
                     positions, cache=None, pos=None, pos3=None):
     """Returns (y, new_cache). Handles train (no cache), prefill (cache
@@ -269,13 +311,8 @@ def attention_block(x, p, cfg: ModelConfig, par: Par, kind: str, *,
                 kc = jnp.roll(k[:, -S:], T % S, axis=1)
                 vc = jnp.roll(v[:, -S:], T % S, axis=1)
             new_cache = {"k": kc, "v": vc}
-        import os as _os
-        bq = int(_os.environ.get("NNCG_FLASH_BQ", 512))
-        bk = int(_os.environ.get("NNCG_FLASH_BK", 512))
-        if kind == "L" and cfg.window is not None:
-            o = local_mha(q, k, v, cfg.window, None, min(bq, 256))
-        else:
-            o = flash_mha(q, k, v, cfg.causal, None, None, bq, bk)
+        o = _prefill_attention(q, k, v, cfg, kind,
+                               getattr(par, "kernels", DEFAULT_KERNELS))
     o = par.constraint(o, "heads")
     y = linear(o.reshape(B, T, H * Dh), p["wo"])
     return y, new_cache
@@ -308,7 +345,8 @@ def apply_block(x, kind: str, p, cfg: ModelConfig, par: Par, *,
         h, wkv, prev_tm = rwkv6_time_mix(
             layer_norm(x, p["ln1"], p["ln1b"]), p["rwkv"],
             head_dim=cfg.ssm_head_dim, state=cache,
-            constraint=lambda t: par.constraint(t, "ssm_heads"))
+            constraint=lambda t: par.constraint(t, "ssm_heads"),
+            scan=getattr(par, "kernels", DEFAULT_KERNELS).scan)
         x = x + h
         h, prev_cm = rwkv6_channel_mix(
             layer_norm(x, p["ln2"], p["ln2b"]), p["rwkv"],

@@ -12,14 +12,15 @@
 
 See :mod:`repro.serve.server` for the architecture.
 """
-from .server import (InferenceResult, InferenceServer, RequestTimeout,
-                     ServeError, ServerClosed, ServerConfig,
+from .server import (InferenceResult, InferenceServer, LMTokenServer,
+                     RequestTimeout, ServeError, ServerClosed, ServerConfig,
                      ServerOverloaded)
 from .stats import ServerStats
 
 __all__ = [
     "InferenceResult",
     "InferenceServer",
+    "LMTokenServer",
     "RequestTimeout",
     "ServeError",
     "ServerClosed",

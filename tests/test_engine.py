@@ -82,7 +82,7 @@ def test_session_config_validates():
     with pytest.raises(ValueError, match="precision"):
         SessionConfig(precision="int4")
     with pytest.raises(ValueError, match="method"):
-        CalibrationConfig(method="entropy")
+        CalibrationConfig(method="histogram")
     with pytest.raises(ValueError, match="percentile"):
         CalibrationConfig(percentile=0.0)
     with pytest.raises(ValueError, match="tune_iters"):

@@ -228,7 +228,7 @@ def test_calibrate_chunked_equals_one_shot_minmax():
 def test_calibrate_rejects_unknown_method():
     g = passes.optimize(_zoo_graph(), simd_multiple=1)
     with pytest.raises(ValueError, match="calibration method"):
-        quantize.calibrate(g, _calib(g.input_shape), method="entropy")
+        quantize.calibrate(g, _calib(g.input_shape), method="kl-top")
 
 
 # ------------------------------------------------ integer-path parity ----
@@ -362,7 +362,7 @@ def test_trained_ball_int8_accuracy_and_method_ordering(trained_ball):
         assert qacc >= float_acc - 0.02, (method, qacc, float_acc)
         assert stats[method]["max_abs_err"] < 0.08, (method, stats)
     # the histogram methods never do worse than naive min/max here
-    for method in ("percentile", "mse"):
+    for method in ("percentile", "mse", "entropy"):
         assert stats[method]["top1_agreement"] >= \
             stats["minmax"]["top1_agreement"], stats
 
@@ -411,6 +411,76 @@ def test_session_int8_end_to_end():
     assert info["precision"] == "int8"
     assert info["quantized_layers"]
     assert info["arena_bytes"] > 0
+
+
+def test_provided_qparams_bit_identical_c():
+    """QAT-import seam: feeding the acts of a calibrated build back
+    through quantize_from_qparams must reproduce the generated C
+    bit-for-bit — weight/bias quantization depends only on the
+    activation qparams.  Identity/MaxPool entries may be omitted
+    (producer-sharing rule)."""
+    from repro.core import codegen
+    g = passes.optimize(PAPER_CNNS["ball"](), simd_multiple=1)
+    xs = _calib(g.input_shape, n=16)
+    qg_cal = quantize.quantize(g, xs)
+    shared = {l.name for l in g.layers
+              if isinstance(l, quantize._SHARE_INPUT_QPARAMS)}
+    qparams = {n: (qp.scale, qp.zero_point)
+               for n, qp in qg_cal.acts.items() if n not in shared}
+    qg_qp = quantize.quantize_from_qparams(g, qparams)
+    assert qg_qp.method == "provided"
+    assert qg_qp.acts == qg_cal.acts
+    opts = cgen.CodegenOptions(simd="generic")
+    src_qp = codegen.compile(qg_qp, opts).source
+    src_cal = codegen.compile(qg_cal, opts).source
+    # only the banner's provenance tag may differ; every emitted
+    # constant and loop is byte-identical
+    assert src_qp != src_cal  # the tag honestly records the source
+    assert src_qp.replace("calibration=provided",
+                          "calibration=minmax") == src_cal
+
+
+def test_provided_qparams_validation():
+    g = passes.optimize(PAPER_CNNS["ball"](), simd_multiple=1)
+    xs = _calib(g.input_shape, n=8)
+    acts = quantize.quantize(g, xs).acts
+    weighted = next(l.name for l in g.layers
+                    if isinstance(l, quantize._WEIGHTED))
+    missing = {n: qp for n, qp in acts.items() if n != weighted}
+    with pytest.raises(ValueError, match="missing"):
+        quantize.quantize_from_qparams(g, missing)
+    with pytest.raises(ValueError, match="not a layer"):
+        quantize.quantize_from_qparams(g, {**acts, "nope": (1.0, 0)})
+    with pytest.raises(TypeError, match="expected QParams"):
+        quantize.quantize_from_qparams(g, {**acts, weighted: "bad"})
+    with pytest.raises(ValueError, match="scale"):
+        quantize.quantize_from_qparams(g, {**acts, weighted: (0.0, 0)})
+    # accepted spellings: QParams, (scale, zp), {"scale": ..., ...}
+    mixed = dict(acts)
+    mixed[weighted] = {"scale": acts[weighted].scale,
+                       "zero_point": acts[weighted].zero_point}
+    assert quantize.quantize_from_qparams(g, mixed).acts == acts
+
+
+def test_session_provided_qparams_skips_calibration():
+    """CalibrationConfig(qparams=...) goes straight to the quantized
+    build — same predictions as the calibrated session it was exported
+    from, method reported as 'provided', no calibration data needed."""
+    from repro.engine import InferenceSession, SessionConfig
+    g = PAPER_CNNS["ball"]()
+    xs = _calib(g.input_shape, n=16)
+    s_cal = InferenceSession(g, backend="c", precision="int8",
+                             calibration=xs, simd="generic")
+    qparams = {n: (qp.scale, qp.zero_point)
+               for n, qp in s_cal.qgraph.acts.items()}
+    s_qp = InferenceSession(g, config=SessionConfig(
+        backend="c", precision="int8", simd="generic",
+        calibration={"qparams": qparams}))
+    np.testing.assert_array_equal(s_qp.predict(xs), s_cal.predict(xs))
+    assert s_qp.info["calibration_method"] == "provided"
+    # qparams are runtime state, like data: portable() drops them and
+    # the info config section stays reconstructible
+    assert SessionConfig(**s_qp.info["config"]).calibration.qparams is None
 
 
 def test_session_int8_arena_shrinks_vs_fp32():
