@@ -253,6 +253,32 @@ def _bench_cnn(name: str):
     t_seq_stream, t_pipe_stream, pstages = _pipeline_stream_us(g, simd)
     pipe_speedup = t_seq_stream / t_pipe_stream
     _check_pipeline_ratchet(name, pipe_speedup, t_pipe_stream)
+
+    # fusion record (feeds the README table): what the deployed float
+    # schedule fused, whether int8 autotune deployed the fused build,
+    # and the arena comparison at the canonical rolled build — the
+    # make_schedule invariant (fused arena never grows) re-checked on
+    # the real nets every benchmark run
+    from repro.core import cgen, codegen
+    from repro.core.schedule import make_schedule
+    g_opt = tuned.graph
+    ropts = cgen.CodegenOptions(simd=simd, unroll=None)
+    arena_fused = codegen.compile(
+        g_opt, ropts, schedule=make_schedule(g_opt)).arena_bytes
+    arena_unfused = codegen.compile(
+        g_opt, ropts,
+        schedule=make_schedule(g_opt, fusion=False)).arena_bytes
+    assert arena_fused <= arena_unfused, name
+    sd = tuned.schedule.describe()
+    fusion_rec = {
+        "fused_adds": len(sd["fused_adds"]),
+        "fused_pools": len(sd["fused_pools"]),
+        "fused_concats": len(sd["fused_concats"]),
+        "arena_bytes_fused": arena_fused,
+        "arena_bytes_unfused": arena_unfused,
+        "int8_deployed_fused": bool(int8.schedule is not None
+                                    and int8.schedule.has_fusion),
+    }
     print(f"table_{name}_nncg_c_autotuned,{t_c:.2f},"
           f"speedup_vs_xla={t_x / t_c:.2f},{arena}")
     print(f"table_{name}_nncg_c_untuned,{t_u:.2f},"
@@ -284,6 +310,7 @@ def _bench_cnn(name: str):
         "pipeline_stream_us": round(t_pipe_stream, 3),
         "sequential_stream_us": round(t_seq_stream, 3),
         "simd": simd,
+        "fusion": fusion_rec,
     }
     return t_c, t_u, t_x
 

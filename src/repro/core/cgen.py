@@ -72,13 +72,27 @@ from .graph import (
     pool_window_counts,
 )
 
+from .lowering import (
+    AddFuse,
+    Buffer,
+    ConcatFuse,
+    Epilogue,
+    FuseNode,
+    KernelCall,
+    Loop,
+    LoopNest,
+    PoolFuse,
+    Program,
+    render,
+)
+from .numerics import flit
 from .schedule import Schedule, make_schedule  # noqa: F401  (re-export)
 
 Level = Optional[int]  # 0 | 1 | 2 | None (no unroll)
 
 # bump whenever the emitted C changes for the same (graph, options) —
 # cached artifacts measured on older generated code must not be reused
-CODEGEN_VERSION = 7
+CODEGEN_VERSION = 8
 
 # the single source of truth for the unroll/icache emission budget
 # (both CodegenOptions.term_budget and choose_levels read it)
@@ -289,13 +303,9 @@ class CodegenOptions:
         return self.unroll
 
 
-def _flit(v: float) -> str:
-    """Format a float32 as a C literal (paper P3).
-
-    ``unique=True`` guarantees the shortest decimal that parses back to
-    the exact same float32 bit pattern (property-tested)."""
-    s = np.format_float_scientific(np.float32(v), unique=True, trim="0")
-    return f"{s}f"
+# float32 -> shortest round-trip C literal (paper P3) — shared with the
+# quantizer so printed constants are bit-identical across modules
+_flit = flit
 
 
 # most-negative finite float32 — the padding fill for max pooling (C89
@@ -407,13 +417,16 @@ def choose_levels(graph: CNNGraph,
 @dataclass
 class ArenaInterval:
     """One planned allocation: a value live over ``[start, end]`` layer
-    steps, placed at ``offset`` floats into the arena."""
+    steps, placed at ``offset`` floats into the arena.  ``align`` (in
+    arena elements) constrains the placement — int32 scratch inside the
+    int8 byte arena plans with ``align=4``."""
 
     value: str
     start: int
     end: int
     size: int
     offset: int = -1
+    align: int = 1
 
 
 @dataclass
@@ -453,9 +466,10 @@ def _value_map(graph: CNNGraph, quantized: bool = False,
     (``xq``), so Input *defines* a value.
 
     Under a fusing ``schedule``, a fused producer writes straight into
-    its Add's buffer — its own tensor never exists, so its name aliases
-    the Add's value.  (No identity layer can alias a fused producer:
-    the fusion predicate requires the Add to be its sole consumer.)"""
+    its consumer's buffer (Add, pool or Concat) — its own tensor never
+    exists, so its name aliases the consumer's value.  (No identity
+    layer can alias a fused producer: every fusion predicate requires
+    the consumer to be the producer's sole consumer.)"""
     val: Dict[str, str] = {}
     for l in graph.layers:
         if isinstance(l, Input):
@@ -465,8 +479,8 @@ def _value_map(graph: CNNGraph, quantized: bool = False,
         else:
             val[l.name] = l.name
     if schedule is not None:
-        for p, a in schedule.fused_adds:
-            val[p] = val[a]
+        for p, cname in schedule.fused_by_producer.items():
+            val[p] = val[cname]
     return val
 
 
@@ -571,12 +585,15 @@ def plan_arena(graph: CNNGraph,
     as needed.  Quantized plans are in int8 elements (1 byte each), the
     ~4x memory win the int8 path exists for.
 
-    Under a fusing ``schedule`` a fused producer *defines* its Add's
-    value (the store happens inside the producer's loop), so the
-    interval starts at the producer's step; the fused Add's own step
-    only extends lifetimes (the other operands are read there in the
-    unfused reference semantics, and reading them during the producer's
-    loop is covered because their intervals span it).
+    Under a fusing ``schedule`` a fused producer *defines* its
+    consumer's value (the store happens inside the producer's loop), so
+    the interval starts at the producer's step — the earliest producer
+    for a multi-edge fused Concat — and is sized by the *consumer's*
+    shape (equal for Add, smaller for a fused pool, larger for a fused
+    Concat slice); the consumer's own step only extends lifetimes (the
+    other operands are read there in the unfused reference semantics,
+    and reading them during the producer's loop is covered because
+    their intervals span it).
     """
     opts = opts or CodegenOptions()
     smap = graph.shape_map()
@@ -597,7 +614,7 @@ def plan_arena(graph: CNNGraph,
             defines = v == layer.name or fused_by_p.get(layer.name) == v
             if defines and v not in defs:  # first (producer) def wins
                 defs[v] = i
-                sizes[v] = int(np.prod(smap[layer.name]))
+                sizes[v] = int(np.prod(smap[v]))
             scratch = _pad_scratch_elems(layer, smap[layer.inputs[0]],
                                          opts, elide_static=not quantized)
             if scratch:
@@ -614,6 +631,18 @@ def plan_arena(graph: CNNGraph,
         ivals.append(ArenaInterval(value=v, start=d,
                                    end=last.get(v, d), size=sizes[v]))
 
+    if quantized and schedule is not None:
+        # int32 window-sum scratch for fused average pools: the
+        # producer's stores accumulate here, the finalize pass requants
+        # — live only during the producer's step, 4-byte aligned
+        step = {l.name: i for i, l in enumerate(graph.layers)}
+        for p, cname in getattr(schedule, "fused_pools", ()):
+            if isinstance(graph.layer(cname), AvgPool):
+                i = step[p]
+                ivals.append(ArenaInterval(
+                    value=cname + "__acc", start=i, end=i,
+                    size=int(np.prod(smap[cname])) * 4, align=4))
+
     # first-fit placement over interfering intervals
     ivals.sort(key=lambda iv: (iv.start, -iv.size, iv.value))
     placed: List[ArenaInterval] = []
@@ -621,6 +650,7 @@ def plan_arena(graph: CNNGraph,
         overlap = [p for p in placed
                    if not (iv.end < p.start or p.end < iv.start)]
         for cand in sorted({0} | {p.offset + p.size for p in overlap}):
+            cand = -(-cand // iv.align) * iv.align
             if all(cand + iv.size <= p.offset or p.offset + p.size <= cand
                    for p in overlap):
                 iv.offset = cand
@@ -653,16 +683,9 @@ def _cname(value: str) -> str:
     return "t_" + re.sub(r"[^0-9A-Za-z_]", "_", value)
 
 
-@dataclass
-class _FuseCtx:
-    """Active epilogue fusion while one producer's loops are emitted:
-    the Add folded into the store site, the producer's position in the
-    Add's (order-significant) input list, and the resolved source
-    expressions of every Add operand."""
-
-    add: Add
-    pos: int
-    srcs: List[str]
+# back-compat alias: the Add fusion context now lives in the lowering
+# IR module alongside the pool/concat variants
+_FuseCtx = AddFuse
 
 
 class CGenerator:
@@ -675,11 +698,28 @@ class CGenerator:
         self.w = _W()
         self.decls = _W()
         self._uid = 0
-        self._fuse: Optional[_FuseCtx] = None
-        self.plan: Optional[ArenaPlan] = None  # filled by generate()
+        self._epi: Optional[FuseNode] = None   # active store-site fusion
+        self._stage = 0                        # pipeline stage being emitted
+        self.nests: List[LoopNest] = []        # lowered IR, filled by lower()
+        self.plan: Optional[ArenaPlan] = None  # filled by lower()
+        self._program: Optional[Program] = None  # lower() result, cached
         self.ws_total_elems: int = 0           # arena + stage interfaces
         self.iface_elems: Tuple[int, ...] = ()
         self.stage_syms: Tuple[str, ...] = ()
+
+    @property
+    def _fuse(self) -> Optional[AddFuse]:
+        """The active Add fusion context, if any — the legacy view used
+        by the Add-specific store paths."""
+        return self._epi if isinstance(self._epi, AddFuse) else None
+
+    @property
+    def _pool_fuse(self) -> Optional[PoolFuse]:
+        return self._epi if isinstance(self._epi, PoolFuse) else None
+
+    @property
+    def _concat_fuse(self) -> Optional[ConcatFuse]:
+        return self._epi if isinstance(self._epi, ConcatFuse) else None
 
     # -- helpers ------------------------------------------------------------
 
@@ -726,11 +766,20 @@ class CGenerator:
 
     # -- fused stores (graph-level epilogue fusion) --------------------------
     #
-    # With an active _FuseCtx the producer's store site performs the
+    # With an active AddFuse the producer's store site performs the
     # downstream Add: the activated accumulator is substituted at the
     # producer's position in the Add's left-associated input-order sum,
     # then the Add's activation is applied — the exact float op order
     # of the unfused graph (emit_add), so fusion is bitwise identical.
+    #
+    # A PoolFuse reduces the producer's store into the pooled output
+    # element its position maps to (stride == window, so each element
+    # lands in exactly one window): max via the same strict-> ternary
+    # chain the unfused pool emits, avg via the same in-order sum; the
+    # divisor multiply runs in a finalize pass.  A ConcatFuse stores
+    # straight into the producer's channel slice of the Concat output.
+    # Both visit window taps / elements in the producer's row-major
+    # order — the unfused op order — so float results stay bitwise.
 
     def _fused_rhs(self, layer, expr: str, oidx: str) -> str:
         """RHS stored for output element ``oidx`` of ``layer`` given
@@ -745,17 +794,55 @@ class CGenerator:
         return self.act_scalar(" + ".join(terms), fc.add.activation,
                                fc.add.alpha)
 
-    def _store_scalar(self, layer, expr: str, oidx: str, dst: str) -> None:
-        self.w(f"{dst}[{oidx}] = {self._fused_rhs(layer, expr, oidx)};")
+    def _store_stmt(self, layer, expr: str, oidx: str, dst: str,
+                    pos=None) -> str:
+        """The C statement storing output element ``oidx`` (producer
+        position ``pos`` = (i, j, k)) with the active epilogue chain
+        applied."""
+        pf, cf = self._pool_fuse, self._concat_fuse
+        if pf is not None or cf is not None:
+            assert pos is not None, \
+                f"{layer.name}: fused store needs an output position"
+        act = layer.activation if layer.activation != "softmax" else None
+        if pf is not None:
+            di = pf.dst_index(pos)
+            term = self.act_scalar(expr, act, layer.alpha)
+            if pf.kind == "max":
+                return (f"{{ const float pv = {term}; {dst}[{di}] = "
+                        f"pv > {dst}[{di}] ? pv : {dst}[{di}]; }}")
+            return f"{dst}[{di}] += {term};"
+        if cf is not None:
+            return (f"{dst}[{cf.dst_index(pos)}] = "
+                    f"{self.act_scalar(expr, act, layer.alpha)};")
+        return f"{dst}[{oidx}] = {self._fused_rhs(layer, expr, oidx)};"
 
-    def _store_vec(self, layer, reg: str, oidx: str, dst: str) -> None:
+    def _store_scalar(self, layer, expr: str, oidx: str, dst: str,
+                      pos=None) -> None:
+        self.w(self._store_stmt(layer, expr, oidx, dst, pos))
+
+    def _store_vec(self, layer, reg: str, oidx: str, dst: str,
+                   pos=None) -> None:
         """Vector store of ``reg`` (one ISA-width channel group at flat
         output index ``oidx``), with the producer's activation and, when
-        fusing, the Add chain + Add activation applied in-register."""
+        fusing, the consumer's epilogue applied in-register."""
         w, isa = self.w, self.opts.isa
         act = layer.activation if layer.activation != "softmax" else None
         for ln in self.act_sse(reg, act, layer.alpha):
             w(ln)
+        pf, cf = self._pool_fuse, self._concat_fuse
+        if pf is not None:
+            di = pf.dst_index(pos)
+            if pf.kind == "max":
+                # new > old ? new : old — the scalar ternary's order
+                w(f"{reg} = {isa.vmax(reg, isa.load(f'{dst}[{di}]'))};")
+            else:
+                # old + new — the scalar `dst += term` order
+                w(f"{reg} = {isa.add(isa.load(f'{dst}[{di}]'), reg)};")
+            w(isa.store(f"{dst}[{di}]", reg))
+            return
+        if cf is not None:
+            w(isa.store(f"{dst}[{cf.dst_index(pos)}]", reg))
+            return
         fc = self._fuse
         if fc is not None:
             expr = None
@@ -906,7 +993,7 @@ class CGenerator:
                 w(f"acc = {isa.fmadd(isa.set1(xv), isa.load(wv), 'acc')};")
                 self.fclose(3)
                 self._store_vec(layer, "acc", f"(i * {ow} + j) * {co} + k",
-                                dst)
+                                dst, pos=("i", "j", "k"))
                 self.fclose()
             ks = range(co4, co)
         elif self.opts.simd == "structured":
@@ -924,8 +1011,9 @@ class CGenerator:
                     f"{wname}[((n * {kw_} + m) * {ci} + o) * {co} + k];"))
             self.fclose(3)
             w(_cfor("k", co,
-                    f"{dst}[(i * {ow} + j) * {co} + k] = "
-                    f"{self._fused_rhs(layer, 'acc[k]', f'(i * {ow} + j) * {co} + k')};"))
+                    self._store_stmt(layer, "acc[k]",
+                                     f"(i * {ow} + j) * {co} + k", dst,
+                                     ("i", "j", "k"))))
             w.close()
             ks = ()
         else:
@@ -938,7 +1026,7 @@ class CGenerator:
               f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];")
             self.fclose(3)
             self._store_scalar(layer, "acc", f"(i * {ow} + j) * {co} + k",
-                               dst)
+                               dst, pos=("i", "j", "k"))
             self.fclose()
             ks = ()
         # scalar tail for sse mode
@@ -951,7 +1039,8 @@ class CGenerator:
                 f"{src}[((i * {sh} + n) * {wdt} + (j * {sw} + m)) * {ci} + o];"
             ))))
             self._store_scalar(layer, "acc",
-                               f"(i * {ow} + j) * {co} + {k}", dst)
+                               f"(i * {ow} + j) * {co} + {k}", dst,
+                               pos=("i", "j", k))
             w.close()
 
     # unrolled bodies --------------------------------------------------------
@@ -981,7 +1070,8 @@ class CGenerator:
                       else f"{wname}[{((n * layer.kw + m) * layer.c_in + o) * co + k}]")
                 w(f"a{k} += {xv} * {wv};")
         for k in range(co):
-            self._store_scalar(layer, f"a{k}", out_index(i, j, k), dst)
+            self._store_scalar(layer, f"a{k}", out_index(i, j, k), dst,
+                               pos=(i, j, k))
         w.close()
 
     def _conv_body_sse(self, layer, W_, B_, wname, bname, literals,
@@ -1012,7 +1102,8 @@ class CGenerator:
                 w(f"  v{kg} = {isa.fmadd('xb', wreg, f'v{kg}')};")
             w("}")
         for kg in range(0, co4, vw):
-            self._store_vec(layer, f"v{kg}", out_index(i, j, kg), dst)
+            self._store_vec(layer, f"v{kg}", out_index(i, j, kg), dst,
+                            pos=(i, j, kg))
         # scalar tail, each channel in its own block (C89: decls first)
         for k in range(co4, co):
             bias = _flit(B_[k]) if literals else f"{bname}[{k}]"
@@ -1023,7 +1114,8 @@ class CGenerator:
                 wv = (_flit(W_[n, m, o, k]) if literals
                       else f"{wname}[{((n * layer.kw + m) * layer.c_in + o) * co + k}]")
                 w(f"t{k} += {xv} * {wv};")
-            self._store_scalar(layer, f"t{k}", out_index(i, j, k), dst)
+            self._store_scalar(layer, f"t{k}", out_index(i, j, k), dst,
+                               pos=(i, j, k))
             w.close()
         w.close()
 
@@ -1059,7 +1151,7 @@ class CGenerator:
                 f"{wname}[((n * {kw_} + m) * {ci} + c) * {mult} + {m_}];")))
             self._store_scalar(layer, "acc",
                                f"(i * {ow} + j) * {co} + c * {mult} + {m_}",
-                               dst)
+                               dst, pos=("i", "j", f"c * {mult} + {m_}"))
             w.close()
         self.fclose(3)
         if layer.activation == "softmax":
@@ -1265,14 +1357,20 @@ class CGenerator:
         w = self.w
         h, wdt, _ = in_shapes[0]
         co = int(sum(s[2] for s in in_shapes))
+        fused_by_p = self.schedule.fused_by_producer
+        fused = [fused_by_p.get(n) == layer.name for n in layer.inputs]
         w(f"/* Concat {layer.name}: {[tuple(s) for s in in_shapes]} -> "
           f"({h}, {wdt}, {co}) */")
+        if all(fused):
+            w("/* all inputs fused into their producers' stores */")
+            return
         self.floop("p", h * wdt)
         off = 0
-        for s, ish in zip(srcs, in_shapes):
+        for s, ish, fz in zip(srcs, in_shapes, fused):
             ck = int(ish[2])
-            w(_cfor("z", ck,
-                    f"{dst}[p * {co} + {off} + z] = {s}[p * {ck} + z];"))
+            if not fz:
+                w(_cfor("z", ck,
+                        f"{dst}[p * {co} + {off} + z] = {s}[p * {ck} + z];"))
             off += ck
         self.fclose()
 
@@ -1329,7 +1427,7 @@ class CGenerator:
         self.floop("k", d_out)
         w(f"float acc = {bname}[k];")
         w(_cfor("z", d_in, f"acc += {src}[z] * {wname}[z * {d_out} + k];"))
-        self._store_scalar(layer, "acc", "k", dst)
+        self._store_scalar(layer, "acc", "k", dst, pos=(0, 0, "k"))
         self.fclose()
         if layer.activation == "softmax":
             self.emit_softmax((1, 1, d_out), dst)
@@ -1379,26 +1477,130 @@ class CGenerator:
         else:  # pragma: no cover
             raise TypeError(f"cgen: unhandled layer {type(layer).__name__}")
 
+    def _fuse_node(self, layer, smap, val, ref) -> Optional[FuseNode]:
+        """Build the live fusion context for ``layer`` when the schedule
+        folds one of its consumers into its store site."""
+        cname = self.schedule.fused_by_producer.get(layer.name)
+        if cname is None:
+            return None
+        cons = self.g.layer(cname)
+        if isinstance(cons, Add):
+            return AddFuse(add=cons, pos=cons.inputs.index(layer.name),
+                           srcs=[ref(val[n]) for n in cons.inputs])
+        if isinstance(cons, (MaxPool, AvgPool)):
+            ph, pw, c = smap[cname]
+            sh, sw = cons.strides
+            kh, kw_ = cons.size
+            kind = "max" if isinstance(cons, MaxPool) else "avg"
+            return PoolFuse(
+                pool=cons, kind=kind, pw=pw, c=c, sh=sh, sw=sw,
+                dst=ref(val[cname]), n=ph * pw * c,
+                inv=_flit(1.0 / (kh * kw_)),
+                acc=(_cname(cname + "__acc")
+                     if self._quantized and kind == "avg" else ""))
+        pos = cons.inputs.index(layer.name)
+        return ConcatFuse(
+            concat=cons, pos=pos,
+            c_off=int(sum(smap[n][2] for n in cons.inputs[:pos])),
+            c_total=int(smap[cname][2]), ow=int(smap[cname][1]))
+
+    def _emit_fuse_init(self, node: FuseNode, smap) -> None:
+        """Prologue before a fused producer's loops: pooling fills the
+        consumer's output with the reduction identity."""
+        if isinstance(node, PoolFuse):
+            p = node.pool
+            self.w(f"/* fused {type(p).__name__} {p.name}: producer "
+                   f"stores reduce straight into the {node.kind} "
+                   f"windows */")
+            fill = _NEG_FLT_MAX if node.kind == "max" else "0.0f"
+            self.w(_cfor("z", node.n, f"{node.dst}[z] = {fill};"))
+        elif isinstance(node, ConcatFuse):
+            self.w(f"/* fused Concat {node.concat.name} edge {node.pos}: "
+                   f"producer writes its channel slice at offset "
+                   f"{node.c_off} directly */")
+
+    def _emit_fuse_finalize(self, node: FuseNode, smap) -> None:
+        """Epilogue after a fused producer's loops: average pooling
+        applies the window divisor (same op order as the unfused
+        ``s * inv`` store, so results stay bitwise)."""
+        if isinstance(node, PoolFuse) and node.kind == "avg":
+            self.w(_cfor("z", node.n, f"{node.dst}[z] *= {node.inv};"))
+
+    def _record_nest(self, layer, smap, node: Optional[FuseNode],
+                     start: int, end: int) -> None:
+        """Append the typed :class:`LoopNest` for the layer span just
+        emitted into ``self.w.lines[start:end]``."""
+        out_shape = tuple(smap[layer.name])
+        if isinstance(layer, (Conv2D, DepthwiseConv2D, MaxPool, AvgPool)):
+            oh, ow, c = out_shape
+            lvl = (effective_level(layer, smap[layer.inputs[0]], self.opts)
+                   if not self._quantized
+                   and isinstance(layer, (Conv2D, MaxPool)) else None)
+            loops = (Loop("i", oh, unrolled=lvl == 0),
+                     Loop("j", ow, unrolled=lvl in (0, 1)),
+                     Loop("k", c, unrolled=lvl is not None))
+            variant = f"level={lvl} simd={self.opts.simd}"
+        elif isinstance(layer, Dense):
+            loops = (Loop("k", out_shape[-1]),)
+            variant = f"simd={self.opts.simd}"
+        else:
+            loops = (Loop("z", int(np.prod(out_shape))),)
+            variant = f"simd={self.opts.simd}"
+        kind = ("q" if self._quantized else "") + type(layer).__name__.lower()
+        eps: List[Epilogue] = []
+        act = getattr(layer, "activation", None)
+        if act == "softmax":
+            eps.append(Epilogue("softmax", layer.name))
+        elif act:
+            eps.append(Epilogue("act", layer.name, act))
+        if self._quantized and layer is not self.g.sink and \
+                isinstance(layer, (Conv2D, DepthwiseConv2D, Dense)):
+            eps.append(Epilogue("requant", layer.name))
+        if isinstance(node, AddFuse):
+            eps.append(Epilogue("add_fuse", node.add.name,
+                                f"pos={node.pos}"))
+            if node.add.activation:
+                eps.append(Epilogue("act", node.add.name,
+                                    node.add.activation))
+            if self._quantized:
+                eps.append(Epilogue("requant", node.add.name))
+        elif isinstance(node, PoolFuse):
+            eps.append(Epilogue(f"{node.kind}pool_fuse", node.pool.name))
+            if self._quantized:
+                eps.append(Epilogue("requant", node.pool.name))
+        elif isinstance(node, ConcatFuse):
+            eps.append(Epilogue("concat_fuse", node.concat.name,
+                                f"edge={node.pos} c_off={node.c_off}"))
+            if self._quantized:
+                eps.append(Epilogue("requant", node.concat.name))
+        self.nests.append(LoopNest(
+            layer=layer.name, op=type(layer).__name__,
+            out_shape=out_shape, loops=loops,
+            kernel=KernelCall(kind=kind, layer=layer.name,
+                              variant=variant, span=(start, end)),
+            epilogue=tuple(eps), stage=self._stage))
+
     def _emit_graph_body(self, layers, smap, val, ref, plan) -> None:
-        """Emit ``layers`` in order, skipping identity layers and fused
-        Adds, arming the fusion context around fused producers."""
-        g = self.g
-        fused_by_p = self.schedule.fused_by_producer
-        fused_adds = set(self.schedule.fused_by_add)
+        """Emit ``layers`` in order, skipping identity layers and
+        absorbed consumers (fused Adds/pools), arming the fusion
+        context around fused producers."""
+        absorbed = self.schedule.absorbed_consumers
         for layer in layers:
             if isinstance(layer, IDENTITY_LAYERS) or \
-                    layer.name in fused_adds:
+                    layer.name in absorbed:
                 continue
-            a = fused_by_p.get(layer.name)
-            if a is not None:
-                add = g.layer(a)
-                self._fuse = _FuseCtx(
-                    add=add, pos=add.inputs.index(layer.name),
-                    srcs=[ref(val[n]) for n in add.inputs])
+            node = self._fuse_node(layer, smap, val, ref)
+            start = len(self.w.lines)
+            if node is not None:
+                self._emit_fuse_init(node, smap)
+            self._epi = node
             try:
                 self._emit_layer(layer, smap, val, ref, plan)
             finally:
-                self._fuse = None
+                self._epi = None
+            if node is not None:
+                self._emit_fuse_finalize(node, smap)
+            self._record_nest(layer, smap, node, start, len(self.w.lines))
 
     # -- pipeline emission ---------------------------------------------------
 
@@ -1422,12 +1624,12 @@ class CGenerator:
         quantized = self._quantized
         S = sched.nstages
         stage_of = {u: s for s, us in enumerate(sched.stages) for u in us}
-        fused_by_add = sched.fused_by_add
+        absorbed_by = sched.fused_by_consumer
 
         def eff_stage(name: str) -> int:
             """Stage where layer ``name``'s reads/writes actually run."""
-            if name in fused_by_add:
-                return stage_of[fused_by_add[name]]
+            if name in absorbed_by:
+                return stage_of[absorbed_by[name]]
             return stage_of[name]
 
         # def/last-use stages per value; sizes in elements
@@ -1475,6 +1677,7 @@ class CGenerator:
 
         copy_n = (f"{{n}} * sizeof(float)" if not quantized else "{n}")
         for s in range(S):
+            self._stage = s
             in_ty = "const float" if s == 0 or not quantized \
                 else f"const {elem}"
             out_ty = "float" if s == S - 1 else elem
@@ -1488,6 +1691,7 @@ class CGenerator:
                 if v not in used:
                     used.append(v)
             pads: List[str] = []
+            accs: List[str] = []
             for layer in layers:
                 need(val[layer.name])
                 for n in layer.inputs:
@@ -1496,6 +1700,8 @@ class CGenerator:
                 if a is not None:
                     for n in g.layer(a).inputs:
                         need(val[n])
+                    if a + "__acc" in plan.offsets:
+                        accs.append(a + "__acc")
                 if layer.name + "__pad" in plan.offsets:
                     pads.append(layer.name + "__pad")
             passthrough = [] if s == S - 1 else \
@@ -1507,7 +1713,7 @@ class CGenerator:
 
             names: Dict[str, str] = {}
             decls: List[str] = []
-            uses_ws = bool(pads)
+            uses_ws = bool(pads or accs)
             for v in sorted(used):
                 if not quantized and v == "x" and s == 0:
                     names[v] = "in"
@@ -1535,6 +1741,9 @@ class CGenerator:
                 w(d)
             for p in pads:
                 w(f"{elem} *const {_cname(p)} = ws + {plan.offsets[p]};")
+            for acc in accs:
+                w(f"int *const {_cname(acc)} = "
+                  f"(int *)(void *)(ws + {plan.offsets[acc]});")
             if not uses_ws:
                 w("(void) ws;")
             for v in passthrough:
@@ -1547,6 +1756,7 @@ class CGenerator:
                                   lambda v: names[v], plan)
             w.close()
             w("")
+        self._stage = 0
 
         # sequential driver: interfaces carved from the workspace tail,
         # every stage sharing one arena (interface and arena subranges
@@ -1574,7 +1784,13 @@ class CGenerator:
         self.ws_total_elems = cum
         self.stage_syms = tuple(opts.stage_func_name(s) for s in range(S))
 
-    def generate(self) -> str:
+    def lower(self) -> Program:
+        """Lower the scheduled graph into the loop-nest IR — fills the
+        writer blocks and ``self.nests`` and returns the
+        :class:`Program` that :func:`repro.core.lowering.render` turns
+        into C source."""
+        if self._program is not None:
+            return self._program
         g, opts, w = self.g, self.opts, self.w
         sched = self.schedule
         smap = g.shape_map()
@@ -1671,7 +1887,27 @@ class CGenerator:
         hdr("extern float expf(float);")
         hdr("#endif")
         hdr("")
-        return hdr.text() + self.decls.text() + "\n" + self.w.text()
+        return self._finish_program(hdr, plan, "fp32")
+
+    def _finish_program(self, hdr: _W, plan: ArenaPlan,
+                        precision: str) -> Program:
+        self._program = Program(
+            func_name=self.opts.func_name, precision=precision,
+            header=hdr.lines, decls=self.decls.lines, body=self.w.lines,
+            nests=self.nests,
+            buffers=[Buffer(name=iv.value, cname=_cname(iv.value),
+                            offset=iv.offset, size=iv.size,
+                            elem=("int" if iv.value.endswith("__acc")
+                                  else self._elem),
+                            start=iv.start, end=iv.end)
+                     for iv in plan.intervals],
+            arena_elems=plan.total_floats, elem_bytes=plan.elem_bytes)
+        return self._program
+
+    def generate(self) -> str:
+        """Emit the complete C translation unit (``render`` over the
+        lowered :class:`Program` — the single rendering path)."""
+        return render(self.lower())
 
 
 # one warning per process, shared by both legacy entry points
@@ -1762,22 +1998,45 @@ class QuantCGenerator(CGenerator):
     def _req_decls(self) -> str:
         """Requant scratch decls for a weighted layer's store block —
         fused stores additionally hold the producer's own int8 code in
-        ``qf`` before dequantizing it into the Add."""
-        return self._REQ_DECLS + (" signed char qf;" if self._fuse else "")
+        ``qf`` before feeding the consumer's epilogue."""
+        return self._REQ_DECLS + (" signed char qf;"
+                                  if self._epi is not None else "")
 
-    def _q_store(self, zp_out: int, oidx: str, dst: str) -> None:
+    def _q_store(self, zp_out, oidx: str, dst: str,
+                 pos=None) -> None:
         """Store the requant result ``t`` as the int8 code of output
-        element ``oidx``.  Unfused: the ordinary round/clamp into
-        ``dst``.  Fused: requantize to the producer's own code first
+        element ``oidx``.  ``zp_out`` is an int, or a C expression
+        string indexing a per-channel zero-point table.
+        Unfused: the ordinary round/clamp into ``dst``.  Fused: requantize to the producer's own code first
         (``qf`` — exactly the value the unfused kernel would have
-        written to memory), then run the Add's per-edge dequant sum,
-        activation and output requant, bit-exact with
-        :meth:`_qadd_scalar_body` on the unfused graph."""
-        fc = self._fuse
-        if fc is None:
+        written to memory), then run the fused consumer's arithmetic on
+        it: the Add's per-edge dequant sum (bit-exact with
+        :meth:`_qadd_scalar_body`), the max-pool code ternary
+        (:meth:`emit_qmaxpool`), the avg-pool int32 window sum
+        (:meth:`emit_qavgpool` — finalized after the producer loops), or
+        the Concat per-edge requant (:meth:`emit_qconcat`)."""
+        epi = self._epi
+        if epi is None:
             self._round_clamp(zp_out, f"{dst}[{oidx}]")
             return
-        qg, w, add = self.qg, self.w, fc.add
+        qg, w = self.qg, self.w
+        if isinstance(epi, PoolFuse):
+            di = epi.dst_index(pos)
+            self._round_clamp(zp_out, "qf")
+            if epi.kind == "max":
+                w(f"{dst}[{di}] = qf > {dst}[{di}] ? qf : {dst}[{di}];")
+            else:
+                w(f"{epi.acc}[{di}] += qf;")
+            return
+        if isinstance(epi, ConcatFuse):
+            cat = epi.concat
+            di = epi.dst_index(pos)
+            self._round_clamp(zp_out, "qf")
+            w(f"t = (float)(qf - {qg.in_qp(cat, epi.pos).zero_point}) * "
+              f"{_flit(qg.rescale(cat, epi.pos))};")
+            self._round_clamp(qg.out_qp(cat).zero_point, f"{dst}[{di}]")
+            return
+        fc, add = epi, epi.add
         self._round_clamp(zp_out, "qf")
         for i, s in enumerate(fc.srcs):
             op = "=" if i == 0 else "+="
@@ -1788,14 +2047,45 @@ class QuantCGenerator(CGenerator):
         self._act_float(add.activation, add.alpha)
         self._round_clamp(qg.out_qp(add).zero_point, f"{dst}[{oidx}]")
 
-    def _fused_lane_loop(self, G: int, base: str, dst: str) -> None:
-        """Fused-Add epilogue after a vector requant into ``qtmp``: for
-        each of the ``G`` just-produced producer codes, dequantize every
-        Add operand (the producer from ``qtmp``, the rest from memory),
-        sum in input order, activate and requantize — the scalar
-        reference arithmetic, so the tiled kernels stay bit-exact."""
-        fc = self._fuse
-        qg, w, add = self.qg, self.w, fc.add
+    def _fused_lane_loop(self, G: int, base: str, dst: str,
+                         pos=None) -> None:
+        """Fused epilogue after a vector requant into ``qtmp``: for each
+        of the ``G`` just-produced producer codes, run the consumer's
+        scalar reference arithmetic — the Add dequant sum, the max-pool
+        code ternary, the avg-pool int32 window accumulate, or the
+        Concat per-edge requant — so the tiled kernels stay bit-exact
+        with the unfused emission."""
+        epi = self._epi
+        qg, w = self.qg, self.w
+        if isinstance(epi, PoolFuse):
+            i, j, k = pos
+            di = epi.dst_index((i, j, f"{k} + lz"))
+            w.open("")
+            w("int lz;")
+            w.open(f"for (lz = 0; lz < {G}; ++lz)")
+            if epi.kind == "max":
+                w(f"{dst}[{di}] = qtmp[lz] > {dst}[{di}] ? "
+                  f"qtmp[lz] : {dst}[{di}];")
+            else:
+                w(f"{epi.acc}[{di}] += qtmp[lz];")
+            w.close()
+            w.close()
+            return
+        if isinstance(epi, ConcatFuse):
+            i, j, k = pos
+            cat = epi.concat
+            di = epi.dst_index((i, j, f"{k} + lz"))
+            w.open("")
+            w("int lz; float t; float u; int q;")
+            w.open(f"for (lz = 0; lz < {G}; ++lz)")
+            w(f"t = (float)(qtmp[lz] - "
+              f"{qg.in_qp(cat, epi.pos).zero_point}) * "
+              f"{_flit(qg.rescale(cat, epi.pos))};")
+            self._round_clamp(qg.out_qp(cat).zero_point, f"{dst}[{di}]")
+            w.close()
+            w.close()
+            return
+        fc, add = epi, epi.add
         w.open("")
         w("int lz; float t; float u; int q;")
         w.open(f"for (lz = 0; lz < {G}; ++lz)")
@@ -1871,10 +2161,10 @@ class QuantCGenerator(CGenerator):
         w.close()
         w.close()
 
-    def _round_clamp(self, zp_out: int, dst_expr: str) -> None:
+    def _round_clamp(self, zp_out, dst_expr: str) -> None:
         """``t`` (float, s_out units) -> int8 code at ``dst_expr``;
-        round half up (``floor(t + 0.5)``), add the zero point,
-        saturate.  The floor is truncate-then-fixup — exact for every
+        round half up (``floor(t + 0.5)``), add the zero point
+        (an int, or a per-channel table index expression), saturate.  The floor is truncate-then-fixup — exact for every
         in-range value and, unlike ``floorf``, never a libm call on
         pre-SSE4.1 targets (it was the requant hot spot).  Requires
         ``float t; float u; int q;`` declared in the enclosing block."""
@@ -1966,7 +2256,8 @@ class QuantCGenerator(CGenerator):
 
     def _vec_requant(self, eff: QISA, tf_init: str, mexpr: Optional[str],
                      act: Optional[str], alpha: float, is_sink: bool,
-                     zp: int, dstp: str) -> None:
+                     zp: int, dstp: str,
+                     zp_vec: Optional[str] = None) -> None:
         """The fused requant epilogue on one ``group``-wide vector:
         float rescale, activation, round-half-up (trunc+fixup floor, the
         scalar emitter's exact sequence), zero point, saturating int8
@@ -1974,7 +2265,9 @@ class QuantCGenerator(CGenerator):
         pre-scale float vector (an int32 accumulator convert, or a raw
         float load for input quantization); ``mexpr`` the multiplier
         vector (``None`` to skip); ``dstp`` the destination pointer
-        (float for the sink, int8 codes otherwise)."""
+        (float for the sink, int8 codes otherwise).  ``zp_vec`` (a
+        pointer expression into a per-channel zero-point table)
+        replaces the scalar ``zp`` broadcast for per-channel requant."""
         w = self.w
         if eff.arch == "arm":
             w.open("")
@@ -1994,7 +2287,10 @@ class QuantCGenerator(CGenerator):
             # trunc+fixup floor for every non-saturating value
             w("float32x4_t uf = vaddq_f32(tf, vdupq_n_f32(0.5f));")
             w("int32x4_t qi = vcvtq_s32_f32(vrndmq_f32(uf));")
-            w(f"qi = vaddq_s32(qi, vdupq_n_s32({zp}));")
+            if zp_vec is not None:
+                w(f"qi = vaddq_s32(qi, vld1q_s32({zp_vec}));")
+            else:
+                w(f"qi = vaddq_s32(qi, vdupq_n_s32({zp}));")
             w.open("")
             w("int16x4_t q16 = vqmovn_s32(qi);")
             w("int8x8_t q8 = vqmovn_s16(vcombine_s16(q16, q16));")
@@ -2026,7 +2322,13 @@ class QuantCGenerator(CGenerator):
         else:
             w("qi = _mm_add_epi32(qi, _mm_castps_si128("
               "_mm_cmpgt_ps(_mm_cvtepi32_ps(qi), uf)));")
-        w(f"qi = {pfx}_add_epi32(qi, {pfx}_set1_epi32({zp}));")
+        if zp_vec is not None:
+            ri = "__m256i" if eff.wide else "__m128i"
+            ld = "_mm256_loadu_si256" if eff.wide else "_mm_loadu_si128"
+            w(f"qi = {pfx}_add_epi32(qi, {ld}((const {ri} *)"
+              f"({zp_vec})));")
+        else:
+            w(f"qi = {pfx}_add_epi32(qi, {pfx}_set1_epi32({zp}));")
         w.open("")
         if eff.wide:
             w("__m128i pk = _mm_packs_epi32(_mm256_castsi256_si128(qi), "
@@ -2104,7 +2406,9 @@ class QuantCGenerator(CGenerator):
                           bias_main: np.ndarray, bias_plain: np.ndarray,
                           scales: np.ndarray, act: Optional[str],
                           alpha: float, is_sink: bool, zp_out: int,
-                          xbase, xbase_var: str, oidx: str) -> None:
+                          xbase, xbase_var: str, oidx: str,
+                          opos=(0, 0),
+                          zp_tab: Optional[str] = None) -> None:
         """The register-tiled channel-group kernel for one conv/dense
         layer (caller has opened the output-position loops and resolved
         padding).  Weight tiles are packed so each dot instruction feeds
@@ -2147,11 +2451,12 @@ class QuantCGenerator(CGenerator):
                       f"(const __m256i *)({bname} + {g * G}));")
                 else:
                     w(f"int32x4_t acc{g} = vld1q_s32({bname} + {g * G});")
-            if self._fuse is not None and not (x86 and eff.wide):
-                # fused Add epilogue, narrow-vector fallback: the vector
-                # requant packs the producer's codes here, the scalar
-                # lane loop then runs the Add arithmetic (bit-exact
-                # with the unfused path)
+            if self._epi is not None and not (
+                    isinstance(self._epi, AddFuse) and x86 and eff.wide):
+                # fused epilogue, lane-loop fallback: the vector requant
+                # packs the producer's codes here, the scalar lane loop
+                # then runs the consumer arithmetic (bit-exact with the
+                # unfused path)
                 w(f"signed char qtmp[{G}];")
             for n in range(kh):
                 for p in range(P):
@@ -2175,15 +2480,19 @@ class QuantCGenerator(CGenerator):
                     self._vec_requant_fused(eff, tf_init, mexpr, act,
                                             alpha, zp_out,
                                             f"{oidx} + {g * G}", dst)
-                elif self._fuse is not None:
+                elif self._epi is not None:
                     self._vec_requant(eff, tf_init, mexpr, act, alpha,
                                       False, zp_out, "qtmp")
-                    self._fused_lane_loop(G, f"{oidx} + {g * G}", dst)
+                    self._fused_lane_loop(G, f"{oidx} + {g * G}", dst,
+                                          pos=(opos[0], opos[1], g * G))
                 else:
                     dstp = (f"out + {oidx} + {g * G}" if is_sink
                             else f"{dst} + {oidx} + {g * G}")
-                    self._vec_requant(eff, tf_init, mexpr, act, alpha,
-                                      is_sink, zp_out, dstp)
+                    self._vec_requant(
+                        eff, tf_init, mexpr, act, alpha, is_sink,
+                        zp_out, dstp,
+                        zp_vec=(f"{zp_tab} + {g * G}"
+                                if zp_tab is not None else None))
             w.close()
         if k0 < co:
             use_sse = x86 and row >= 16
@@ -2206,7 +2515,11 @@ class QuantCGenerator(CGenerator):
             if is_sink:
                 w(f"out[{oidx} + {k0} + kk] = t;")
             else:
-                self._q_store(zp_out, f"{oidx} + {k0} + kk", dst)
+                self._q_store(
+                    f"{zp_tab}[{k0} + kk]" if zp_tab is not None
+                    else zp_out,
+                    f"{oidx} + {k0} + kk", dst,
+                    pos=(opos[0], opos[1], f"{k0} + kk"))
             w.close()
             w.close()
             w.close()
@@ -2240,10 +2553,13 @@ class QuantCGenerator(CGenerator):
         eff = self._layer_qisa(wt, co, kh, row)
         use_sse = self._x86 and row >= 16
         zp_out = 0 if is_sink else qg.out_qp(layer).zero_point
+        cq = None if is_sink else qg.channel_qp(layer.name)
         if eff is not None:
             if eff.name != self.opts.simd:
                 w(f"/* {layer.name}: maddubsw saturation unprovable, "
                   f"pair-madd variant */")
+            zname = (self.const_i32(f"z{self.uid()}", cq.zero_point)
+                     if cq is not None else None)
             self.floop("i", oh)
             self.floop("j", ow)
             self._emit_tiled_layer(
@@ -2256,7 +2572,8 @@ class QuantCGenerator(CGenerator):
                 xbase=lambda n: (f"((i * {sh} + {n}) * {wdt} + "
                                  f"j * {sw}) * {ci}"),
                 xbase_var=f"((i * {sh} + n) * {wdt} + j * {sw}) * {ci}",
-                oidx=f"(i * {ow} + j) * {co}")
+                oidx=f"(i * {ow} + j) * {co}", opos=("i", "j"),
+                zp_tab=zname)
             self.fclose(2)
             if is_sink and act == "softmax":
                 self.emit_softmax((oh, ow, co), "out")
@@ -2265,14 +2582,19 @@ class QuantCGenerator(CGenerator):
             bname = self.const_i32(f"b{self.uid()}",
                                    qg.effective_bias(layer))
             mname = self.const_array(f"m{self.uid()}", scales)
+            zname = (self.const_i32(f"z{self.uid()}", cq.zero_point)
+                     if cq is not None else None)
 
-        def requant_one(oidx: str) -> None:
+        def requant_one(oidx: str, pos) -> None:
             w(f"t = (float)acc * {mname}[k];")
             self._act_float(act, layer.alpha)
             if is_sink:
                 w(f"out[{oidx}] = t;")
             else:
-                self._q_store(qg.out_qp(layer).zero_point, oidx, dst)
+                self._q_store(
+                    f"{zname}[k]" if cq is not None
+                    else qg.out_qp(layer).zero_point,
+                    oidx, dst, pos=pos)
 
         if taps < 16:
             # tiny window (e.g. first conv on a 1-channel image):
@@ -2298,8 +2620,10 @@ class QuantCGenerator(CGenerator):
                 if is_sink:
                     w(f"out[(i * {ow} + j) * {co} + {k}] = t;")
                 else:
-                    self._q_store(qg.out_qp(layer).zero_point,
-                                  f"(i * {ow} + j) * {co} + {k}", dst)
+                    self._q_store(int(cq.zero_point[k]) if cq is not None
+                                  else qg.out_qp(layer).zero_point,
+                                  f"(i * {ow} + j) * {co} + {k}", dst,
+                                  pos=("i", "j", k))
                 w.close()
             self.fclose(2)
         else:
@@ -2319,7 +2643,7 @@ class QuantCGenerator(CGenerator):
             self.fclose()
             if use_sse:
                 self._hsum_sse()
-            requant_one(f"(i * {ow} + j) * {co} + k")
+            requant_one(f"(i * {ow} + j) * {co} + k", ("i", "j", "k"))
             w.close()
             self.fclose(3)
         if is_sink and act == "softmax":
@@ -2349,6 +2673,9 @@ class QuantCGenerator(CGenerator):
         scales = (qg.dequant_scales(layer) if is_sink
                   else qg.requant_scales(layer))
         mname = self.const_array(f"m{self.uid()}", scales)
+        cq = None if is_sink else qg.channel_qp(layer.name)
+        zname = (self.const_i32(f"z{self.uid()}", cq.zero_point)
+                 if cq is not None else None)
         self.floop("i", oh)
         self.floop("j", ow)
         self.floop("c", ci)
@@ -2367,7 +2694,10 @@ class QuantCGenerator(CGenerator):
             if is_sink:
                 w(f"out[{oidx}] = t;")
             else:
-                self._q_store(qg.out_qp(layer).zero_point, oidx, dst)
+                self._q_store(
+                    f"{zname}[c * {mult} + {m_}]" if cq is not None
+                    else qg.out_qp(layer).zero_point,
+                    oidx, dst, pos=("i", "j", f"c * {mult} + {m_}"))
             w.close()
         self.fclose(3)
         if is_sink and act == "softmax":
@@ -2382,11 +2712,14 @@ class QuantCGenerator(CGenerator):
         wt = qg.weights[layer.name].w_q.T  # (d_out, d_in)
         scales = (qg.dequant_scales(layer) if is_sink
                   else qg.requant_scales(layer))
+        cq = None if is_sink else qg.channel_qp(layer.name)
         eff = self._layer_qisa(wt, d_out, 1, d_in)
         if eff is not None:
             if eff.name != self.opts.simd:
                 w(f"/* {layer.name}: maddubsw saturation unprovable, "
                   f"pair-madd variant */")
+            zname = (self.const_i32(f"z{self.uid()}", cq.zero_point)
+                     if cq is not None else None)
             self._emit_tiled_layer(
                 eff, src=src, dst=dst, co=d_out, kh=1, row=d_in, wt=wt,
                 bias_main=qg.effective_bias(
@@ -2394,13 +2727,16 @@ class QuantCGenerator(CGenerator):
                 bias_plain=qg.effective_bias(layer), scales=scales,
                 act=act, alpha=layer.alpha, is_sink=is_sink,
                 zp_out=0 if is_sink else qg.out_qp(layer).zero_point,
-                xbase=lambda n: "0", xbase_var="0", oidx="0")
+                xbase=lambda n: "0", xbase_var="0", oidx="0",
+                zp_tab=zname)
             if is_sink and act == "softmax":
                 self.emit_softmax((1, 1, d_out), "out")
             return
         wname = self.const_i8(f"w{self.uid()}", wt)
         bname = self.const_i32(f"b{self.uid()}", qg.effective_bias(layer))
         mname = self.const_array(f"m{self.uid()}", scales)
+        zname = (self.const_i32(f"z{self.uid()}", cq.zero_point)
+                 if cq is not None else None)
         use_sse = self._x86 and d_in >= 16
         self.floop("k", d_out)
         w.open("")
@@ -2416,7 +2752,9 @@ class QuantCGenerator(CGenerator):
         if is_sink:
             w("out[k] = t;")
         else:
-            self._q_store(qg.out_qp(layer).zero_point, "k", dst)
+            self._q_store(f"{zname}[k]" if cq is not None
+                          else qg.out_qp(layer).zero_point,
+                          "k", dst, pos=(0, 0, "k"))
         w.close()
         self.fclose()
         if is_sink and act == "softmax":
@@ -2619,12 +2957,20 @@ class QuantCGenerator(CGenerator):
         h, wdt, _ = in_shapes[0]
         co = int(sum(s[2] for s in in_shapes))
         zp_out = qg.out_qp(layer).zero_point
+        fused_by_p = self.schedule.fused_by_producer
+        fused = [fused_by_p.get(n) == layer.name for n in layer.inputs]
         w(f"/* QConcat {layer.name}: {[tuple(s) for s in in_shapes]} -> "
           f"({h}, {wdt}, {co}) (per-input requant) */")
+        if all(fused):
+            w("/* all inputs fused into their producers' stores */")
+            return
         self.floop("p", h * wdt)
         off = 0
         for i, (s, ish) in enumerate(zip(srcs, in_shapes)):
             ck = int(ish[2])
+            if fused[i]:
+                off += ck
+                continue
             qp = qg.in_qp(layer, i)
             # the multiply and the +0.5f stay separate statements: in
             # one expression an FP_CONTRACT-honoring compiler could
@@ -2672,6 +3018,47 @@ class QuantCGenerator(CGenerator):
         self.emit_softmax(in_shape, "out")
 
     # -- driver ---------------------------------------------------------------
+
+    def _emit_fuse_init(self, node: FuseNode, smap) -> None:
+        """Int8 fusion prologue: max pooling fills the consumer's codes
+        with -128 (the reduction identity — every window sees >= 1
+        producer code), average pooling zeroes the int32 window-sum
+        scratch the producer stores accumulate into."""
+        if isinstance(node, PoolFuse):
+            p = node.pool
+            self.w(f"/* fused Q{type(p).__name__} {p.name}: producer "
+                   f"stores reduce straight into the {node.kind} "
+                   f"windows */")
+            if node.kind == "max":
+                self.w(_cfor("z", node.n, f"{node.dst}[z] = -128;"))
+            else:
+                self.w(_cfor("z", node.n, f"{node.acc}[z] = 0;"))
+        elif isinstance(node, ConcatFuse):
+            self.w(f"/* fused QConcat {node.concat.name} edge "
+                   f"{node.pos}: producer writes its channel slice at "
+                   f"offset {node.c_off} directly */")
+
+    def _emit_fuse_finalize(self, node: FuseNode, smap) -> None:
+        """Int8 fusion epilogue: average pooling requantizes the int32
+        window sums — the exact :meth:`emit_qavgpool` arithmetic, so
+        fused results stay bit-identical."""
+        if not (isinstance(node, PoolFuse) and node.kind == "avg"):
+            return
+        qg, w = self.qg, self.w
+        p = node.pool
+        kh, kw_ = p.size
+        zp_in = qg.in_qp(p).zero_point
+        minv = qg.pool_scales(p, smap[p.inputs[0]])
+        assert np.unique(minv).size == 1, \
+            f"{p.name}: fused avg pool requires a uniform window divisor"
+        mexpr = _flit(minv.ravel()[0])
+        self.floop("z", node.n)
+        w.open("")
+        w(self._REQ_DECLS)
+        w(f"t = (float)({node.acc}[z] - {kh * kw_ * zp_in}) * {mexpr};")
+        self._round_clamp(qg.out_qp(p).zero_point, f"{node.dst}[z]")
+        w.close()
+        self.fclose()
 
     def _emit_input_quant(self, xsrc: str) -> None:
         """Input quantization prologue: float ``xsrc`` -> int8 codes in
@@ -2746,7 +3133,9 @@ class QuantCGenerator(CGenerator):
                 f"{type(layer).__name__} "
                 f"(run passes.optimize before quantizing)")
 
-    def generate(self) -> str:
+    def lower(self) -> Program:
+        if self._program is not None:
+            return self._program
         g, opts, w = self.g, self.opts, self.w
         sched = self.schedule
         smap = g.shape_map()
@@ -2774,6 +3163,14 @@ class QuantCGenerator(CGenerator):
         else:
             for iv in sorted(plan.intervals,
                              key=lambda iv: (iv.offset, iv.value)):
+                if iv.value.endswith("__acc"):
+                    # int32 window-sum scratch of a fused avg pool:
+                    # planned 4-aligned inside the byte arena
+                    w(f"int *const {_cname(iv.value)} = "
+                      f"(int *)(void *)(ws + {iv.offset}); "
+                      f"/* {iv.size} bytes, live layers "
+                      f"[{iv.start}, {iv.end}] */")
+                    continue
                 w(f"signed char *const {_cname(iv.value)} = "
                   f"ws + {iv.offset}; "
                   f"/* {iv.size} bytes, live layers "
@@ -2785,12 +3182,20 @@ class QuantCGenerator(CGenerator):
         w.close()
 
         arena = f"{opts.func_name}_arena"
-        self.decls(f"static signed char {arena}"
-                   f"[{max(self.ws_total_elems, 1)}];")
+        if any(iv.value.endswith("__acc") for iv in plan.intervals):
+            # the byte arena hosts int32 scratch: declare it as an int
+            # array so the fused avg-pool pointers are aligned
+            self.decls(f"static int {arena}_i4"
+                       f"[{(max(self.ws_total_elems, 1) + 3) // 4}];")
+            arena_arg = f"(signed char *){arena}_i4"
+        else:
+            self.decls(f"static signed char {arena}"
+                       f"[{max(self.ws_total_elems, 1)}];")
+            arena_arg = arena
         w("")
         w.open(f"void {opts.func_name}(const float *NNCG_RESTRICT x, "
                f"float *NNCG_RESTRICT out)")
-        w(f"{opts.ws_func_name}(x, out, {arena});")
+        w(f"{opts.ws_func_name}(x, out, {arena_arg});")
         w.close()
         w("")
         w.open(f"long {opts.ws_bytes_func_name}(void)")
@@ -2814,7 +3219,7 @@ class QuantCGenerator(CGenerator):
             w.open(f"void {opts.batch_func_name}("
                    f"const float *NNCG_RESTRICT x, "
                    f"float *NNCG_RESTRICT out, int n)")
-            w(f"{opts.batch_ws_func_name}(x, out, n, {arena});")
+            w(f"{opts.batch_ws_func_name}(x, out, n, {arena_arg});")
             w.close()
 
         hdr = _W()
@@ -2841,7 +3246,7 @@ class QuantCGenerator(CGenerator):
         hdr("extern float expf(float);")
         hdr("#endif")
         hdr("")
-        return hdr.text() + self.decls.text() + "\n" + self.w.text()
+        return self._finish_program(hdr, plan, "int8")
 
 
 def generate_quantized_c(qgraph,

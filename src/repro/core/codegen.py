@@ -9,23 +9,32 @@ needs — mirroring the ``SessionConfig`` consolidation one layer up.
 
 A :class:`~repro.core.schedule.Schedule` (epilogue fusion + pipeline
 stage assignment) rides along: the default schedule fuses every
-eligible Add epilogue (bitwise-identical output, smaller arena) and
-emits a single stage; pass ``schedule=make_schedule(g, nstages=k)``
-for the layer-pipelined build.
+eligible Add/pool/Concat epilogue (bitwise-identical output, smaller
+arena) and emits a single stage; pass
+``schedule=make_schedule(g, nstages=k)`` for the layer-pipelined build.
+
+Since the loop-nest IR split, generation is two explicit phases:
+:func:`lower` produces a typed :class:`~repro.core.lowering.Program`
+(loop nests, kernel variants, epilogue chains, planned buffers) and
+:func:`~repro.core.lowering.render` turns it into the C string —
+``compile()`` does both and keeps the ``Program`` on the result for
+inspection (``tools/dump_ir.py``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from .cgen import (CODEGEN_VERSION, CGenerator, CodegenOptions,
                    QuantCGenerator)
+from .lowering import Program, render
 from .schedule import Schedule, make_schedule
 
-__all__ = ["GeneratedSource", "compile", "CodegenOptions", "Schedule",
-           "make_schedule", "CODEGEN_VERSION"]
+__all__ = ["GeneratedSource", "compile", "lower", "CodegenOptions",
+           "Schedule", "make_schedule", "Program", "render",
+           "CODEGEN_VERSION"]
 
 
 @dataclass(frozen=True)
@@ -64,6 +73,9 @@ class GeneratedSource:
     arena_buffer_sum_bytes: int = 0
     peak_live_bytes: int = 0
     per_layer_live_bytes: Optional[Dict[str, int]] = None
+    # the lowered IR the source was rendered from (identity-compared
+    # only: Program is mutable and not part of the value semantics)
+    program: Optional[Program] = field(default=None, compare=False)
 
     @property
     def workspace_bytes(self) -> int:
@@ -88,17 +100,11 @@ class GeneratedSource:
         }
 
 
-def compile(graph_or_qgraph, opts: Optional[CodegenOptions] = None,
-            schedule: Optional[Schedule] = None) -> GeneratedSource:
-    """Generate ANSI C for a float :class:`~repro.core.graph.CNNGraph`
-    or a calibrated :class:`~repro.core.quantize.QuantizedGraph`.
-
-    ``schedule=None`` builds the default: every eligible Add epilogue
-    fused (output bitwise identical to the unfused graph, arena never
-    larger), single stage.  ``make_schedule(g, fusion=False)``
-    reproduces the legacy layout byte-for-byte;
-    ``make_schedule(g, nstages=k)`` adds the ``<func>_stage<i>`` /
-    ``<func>_pipeline`` entries for layer-pipelined execution.
+def lower(graph_or_qgraph, opts: Optional[CodegenOptions] = None,
+          schedule: Optional[Schedule] = None):
+    """Lower a graph to a :class:`~repro.core.lowering.Program` without
+    rendering it.  Returns ``(generator, program)`` — the generator
+    carries the plan and entry-symbol metadata ``compile()`` packages.
     """
     from .quantize import QuantizedGraph  # lazy: quantize imports jax
     opts = opts or CodegenOptions()
@@ -108,7 +114,32 @@ def compile(graph_or_qgraph, opts: Optional[CodegenOptions] = None,
         schedule = make_schedule(graph, fusion=True, nstages=1)
     gen = (QuantCGenerator(graph_or_qgraph, opts, schedule=schedule)
            if quantized else CGenerator(graph, opts, schedule=schedule))
-    source = gen.generate()
+    return gen, gen.lower()
+
+
+def compile(graph_or_qgraph, opts: Optional[CodegenOptions] = None,
+            schedule: Optional[Schedule] = None) -> GeneratedSource:
+    """Generate ANSI C for a float :class:`~repro.core.graph.CNNGraph`
+    or a calibrated :class:`~repro.core.quantize.QuantizedGraph`.
+
+    ``schedule=None`` builds the default: every eligible Add/pool/
+    Concat epilogue fused (output bitwise identical to the unfused
+    graph, arena never larger), single stage.
+    ``make_schedule(g, fusion=False)`` reproduces the legacy layout
+    byte-for-byte; ``make_schedule(g, nstages=k)`` adds the
+    ``<func>_stage<i>`` / ``<func>_pipeline`` entries for
+    layer-pipelined execution.
+    """
+    from .quantize import QuantizedGraph  # lazy: quantize imports jax
+    opts = opts or CodegenOptions()
+    quantized = isinstance(graph_or_qgraph, QuantizedGraph)
+    graph = graph_or_qgraph.graph if quantized else graph_or_qgraph
+    if schedule is None:
+        schedule = make_schedule(graph, fusion=True, nstages=1)
+    gen = (QuantCGenerator(graph_or_qgraph, opts, schedule=schedule)
+           if quantized else CGenerator(graph, opts, schedule=schedule))
+    program = gen.lower()
+    source = render(program)
     plan = gen.plan
     S = schedule.nstages
     peak = max(plan.per_layer_live.values(), default=0) * plan.elem_bytes
@@ -137,4 +168,5 @@ def compile(graph_or_qgraph, opts: Optional[CodegenOptions] = None,
         peak_live_bytes=peak,
         per_layer_live_bytes={k: v * plan.elem_bytes
                               for k, v in plan.per_layer_live.items()},
+        program=program,
     )

@@ -247,8 +247,10 @@ def forward_quantized(qg, x: jnp.ndarray) -> jnp.ndarray:
             t = jnp.where(t > 0, t, jnp.float32(0.0))
         elif act == "leaky_relu":
             t = jnp.where(t > 0, t, jnp.float32(layer.alpha) * t)
-        q = jnp.floor(t + half).astype(jnp.int32) \
-            + qg.out_qp(layer).zero_point
+        cq = qg.channel_qp(layer.name)  # per-channel output zps, or None
+        zp = (jnp.asarray(cq.zero_point, jnp.int32) if cq is not None
+              else qg.out_qp(layer).zero_point)
+        q = jnp.floor(t + half).astype(jnp.int32) + zp
         return jnp.clip(q, -128, 127)
 
     def requant_codes(layer, t):
@@ -272,7 +274,10 @@ def forward_quantized(qg, x: jnp.ndarray) -> jnp.ndarray:
         in_shape = smap[layer.inputs[0]]
         if isinstance(layer, (Conv2D, DepthwiseConv2D)):
             lq = qg.weights[name]
-            zp_in = qg.in_qp(layer).zero_point
+            cin = qg.in_channel_qp(layer)
+            zp_in = (jnp.asarray(cin.zero_point, jnp.int32)
+                     if cin is not None  # eligibility forbids padding
+                     else qg.in_qp(layer).zero_point)
             pt, pb, pl, pr = layer.pad_amounts(in_shape)
             xin = qi - zp_in  # zero-padded by conv == C's zp-code fill
             wq = jnp.asarray(lq.w_q, jnp.int32)
@@ -290,7 +295,10 @@ def forward_quantized(qg, x: jnp.ndarray) -> jnp.ndarray:
             vals[name] = affine_out(layer, acc, is_sink)
         elif isinstance(layer, Dense):
             lq = qg.weights[name]
-            zp_in = qg.in_qp(layer).zero_point
+            cin = qg.in_channel_qp(layer)
+            zp_in = (jnp.asarray(cin.zero_point, jnp.int32)
+                     if cin is not None  # subtract over channels first,
+                     else qg.in_qp(layer).zero_point)  # then flatten
             flat = (qi - zp_in).reshape(qi.shape[0], -1)
             acc = flat @ jnp.asarray(lq.w_q, jnp.int32) \
                 + jnp.asarray(lq.b_q, jnp.int32)

@@ -15,7 +15,9 @@ Adds, Concats) are rewritten correctly:
 * ``reorder_for_fusion`` — emission-order canonicalization: a
   sole-consumer Conv/DW/Dense feeding a residual Add is moved to just
   before the Add so ``schedule.fusable_adds`` can fold the Add into its
-  output loop (pure permutation — numerics unchanged).
+  output loop (pure permutation — numerics unchanged).  Pool/Concat
+  fusion needs no such help: those consumers read only their producer,
+  so eligibility is position-independent.
 * ``align_channels`` — paper P4: pad conv output channels to a SIMD
   multiple (4 for SSSE3, 128 for TPU lanes) with zero filters; downstream
   layers are widened consistently so numerics are unchanged.
@@ -149,7 +151,13 @@ def reorder_for_fusion(graph: CNNGraph) -> CNNGraph:
     left-associated sum follows the Add's *input list* order, not
     emission order), only the layer list is permuted.  Moving is safe
     because the producer's sole consumer is the Add itself, so nothing
-    between its old and new position reads it."""
+    between its old and new position reads it.
+
+    The other fused consumer kinds need no reordering: a fusable
+    MaxPool/AvgPool or Concat edge reads *only* its producer, so the
+    producer's emission position is irrelevant — ``fusable_pools`` /
+    ``fusable_concats`` qualify on sole-consumership alone and this
+    pass never has to move anything for them."""
     layers = _copy_layers(graph)
     sink = graph.sink.name
     for add in [l for l in layers if isinstance(l, Add)]:

@@ -49,6 +49,22 @@ Concat *output* range is the union of its inputs' *calibrated* ranges
 concatenated tensor, where one wide branch would decide the clip for
 all of them.
 
+**Per-channel requant zero points** (opt-in, ``per_channel=True``):
+an eligible weighted layer's *activation* gets per-output-channel
+``(scale[k], zero_point[k])`` instead of one per-tensor pair —
+a channel whose range is a fraction of its widest sibling's gets a
+proportionally finer step.  The integer inner loops never change:
+the producer's requant epilogue indexes a per-channel multiplier and
+zero-point table (it already indexed the multiplier table), and every
+*consumer* folds the producer's per-channel scales into its own weight
+quantization (``w_eff[.., ci, k] = w[.., ci, k] * s_x[ci]``, then the
+usual per-output-channel symmetric scheme) and the per-channel input
+zero points into its int32 effective bias — a dot product over raw
+codes, exactly as before.  Eligibility (see
+:func:`per_channel_eligible`): weighted, non-sink, non-softmax, and
+every consumer is a weighted layer reading it directly without
+padding (a padded consumer would need a per-channel pad fill).
+
 Every scale used anywhere is computed **here** and cast to float32
 once, so the code generator (which prints it via ``_flit``, a bit-exact
 round-trip) and the jax reference (which closes over the same array)
@@ -77,6 +93,7 @@ from .graph import (
     Softmax,
     pool_window_counts,
 )
+from .numerics import round_half_up
 
 QMIN, QMAX = -128, 127
 
@@ -107,12 +124,38 @@ class QParams:
         """Reference quantizer: float -> int8 codes (round half up) —
         the same ``floor(x*inv + 0.5) + zp`` the C and jax paths use."""
         t = np.asarray(x, np.float32) * self.inv_scale
-        q = np.floor(t + np.float32(0.5)).astype(np.int64) + self.zero_point
+        q = round_half_up(t).astype(np.int64) + self.zero_point
         return np.clip(q, QMIN, QMAX).astype(np.int8)
 
     def dequantize(self, q: np.ndarray) -> np.ndarray:
         return ((np.asarray(q, np.int32) - self.zero_point)
                 * np.float32(self.scale)).astype(np.float32)
+
+
+@dataclass(frozen=True)
+class ChannelQParams:
+    """Per-channel asymmetric int8 affine quantization of one
+    activation tensor: ``real[..., k] = scale[k] * (q[..., k] -
+    zero_point[k])`` over the channel (last) axis."""
+
+    scale: np.ndarray       # (C,) float32
+    zero_point: np.ndarray  # (C,) int32
+
+    @property
+    def inv_scale(self) -> np.ndarray:
+        """(C,) float32 multipliers — same construction rule as
+        :meth:`QParams.inv_scale`, per channel."""
+        return np.float32(1.0 / self.scale.astype(np.float64))
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        t = np.asarray(x, np.float32) * self.inv_scale
+        q = round_half_up(t).astype(np.int64) \
+            + self.zero_point.astype(np.int64)
+        return np.clip(q, QMIN, QMAX).astype(np.int8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return ((np.asarray(q, np.int32) - self.zero_point)
+                * self.scale).astype(np.float32)
 
 
 def qparams_from_range(mn: float, mx: float) -> QParams:
@@ -130,8 +173,62 @@ def qparams_from_range(mn: float, mx: float) -> QParams:
     if scale == 0.0:  # constant-zero tensor
         scale = 1.0
     scale = float(np.float32(scale))
-    zp = int(np.clip(np.floor(QMIN - mn / scale + 0.5), QMIN, QMAX))
+    zp = int(np.clip(round_half_up(QMIN - mn / scale), QMIN, QMAX))
     return QParams(scale=scale, zero_point=zp)
+
+
+def channel_qparams_from_range(mn: np.ndarray,
+                               mx: np.ndarray) -> ChannelQParams:
+    """Vectorized :func:`qparams_from_range` over the channel axis —
+    the same zero-widening, float32 scale cast, and half-up zero-point
+    rule, applied elementwise."""
+    mn = np.minimum(np.asarray(mn, np.float64), 0.0)
+    mx = np.maximum(np.asarray(mx, np.float64), 0.0)
+    scale = (mx - mn) / float(QMAX - QMIN)
+    scale = np.where(scale == 0.0, 1.0, scale).astype(np.float32)
+    zp = np.clip(round_half_up(QMIN - mn / scale.astype(np.float64)),
+                 QMIN, QMAX).astype(np.int32)
+    return ChannelQParams(scale=scale, zero_point=zp)
+
+
+def per_channel_eligible(graph: CNNGraph) -> list:
+    """Layer names whose *activation* may quantize per channel.
+
+    The scheme keeps integer inner loops unchanged by moving all
+    per-channel bookkeeping to constants: the producer's requant
+    epilogue indexes zero-point/multiplier tables it already has the
+    loop structure for, and each consumer folds ``s_x[ci]`` into its
+    weight quantization and ``zp_x[ci]`` into its effective bias.
+    That fold only exists for weighted consumers, so eligibility is:
+    weighted, not the sink (the sink dequantizes to float), activation
+    not softmax, and every consumer a Conv2D/DepthwiseConv2D/Dense
+    reading the producer directly with zero padding (a padded consumer
+    fills with the producer's zero code — a scalar, which a per-channel
+    zero point no longer is)."""
+    smap = graph.shape_map()
+    cons = graph.consumers()
+    sink = graph.sink.name
+    out = []
+    for p in graph.layers:
+        if not isinstance(p, _WEIGHTED) or p.name == sink:
+            continue
+        if p.activation == "softmax":
+            continue
+        cs = cons[p.name]
+        if not cs:
+            continue
+        ok = True
+        for c in cs:
+            if not isinstance(c, _WEIGHTED) or c.inputs[0] != p.name:
+                ok = False
+                break
+            if isinstance(c, (Conv2D, DepthwiseConv2D)) \
+                    and any(c.pad_amounts(smap[p.name])):
+                ok = False
+                break
+        if ok:
+            out.append(p.name)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -233,8 +330,8 @@ class Observer:
             scale = (hi2 - lo2) / float(QMAX - QMIN)
             if scale <= 0.0:
                 return np.inf
-            zp = np.floor(QMIN - lo2 / scale + 0.5)
-            q = np.clip(np.floor(centers / scale + 0.5) + zp, QMIN, QMAX)
+            zp = round_half_up(QMIN - lo2 / scale)
+            q = np.clip(round_half_up(centers / scale) + zp, QMIN, QMAX)
             deq = (q - zp) * scale
             return float(((centers - deq) ** 2 * weights).sum())
 
@@ -284,8 +381,8 @@ class Observer:
             scale = (hi2 - lo2) / float(QMAX - QMIN)
             if scale <= 0.0:
                 return np.inf
-            zp = np.floor(QMIN - lo2 / scale + 0.5)
-            q = np.floor(centers / scale + 0.5) + zp
+            zp = round_half_up(QMIN - lo2 / scale)
+            q = round_half_up(centers / scale) + zp
             keep = (q >= QMIN) & (q <= QMAX)
             if float(P[~keep].sum()) > 0.0:
                 return np.inf  # saturates observed mass: not entropy's trade
@@ -337,6 +434,11 @@ class LayerQuant:
     w_scale: np.ndarray  # (c_out,) float32, symmetric per-channel
     w_q: np.ndarray      # int8
     b_q: np.ndarray      # int32 at scale s_in * s_w[k]
+    # True when the producer's per-channel input scales were folded
+    # into the weights before quantization: ``w_scale`` then already
+    # carries the input-scale dimension, so every derived constant
+    # drops its ``s_in`` factor (bias scale, requant, dequant).
+    in_folded: bool = False
 
 
 @dataclass
@@ -355,6 +457,11 @@ class QuantizedGraph:
     # qparams_from_range (debug/info; Concat entries are the union of
     # their branches' calibrated ranges)
     ranges: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+    # per-channel activation qparams for the layers
+    # :func:`per_channel_eligible` admitted (opt-in; empty by default).
+    # A name present here overrides its scalar ``acts`` entry for the
+    # int8 execution path; the scalar entry is kept for info/digest.
+    channel_acts: Dict[str, ChannelQParams] = field(default_factory=dict)
 
     # -- qparam lookups ------------------------------------------------------
 
@@ -364,6 +471,14 @@ class QuantizedGraph:
     def in_qp(self, layer, idx: int = 0) -> QParams:
         return self.acts[layer.inputs[idx]]
 
+    def channel_qp(self, name: str) -> Optional[ChannelQParams]:
+        """Per-channel qparams of ``name``'s output, or None."""
+        return self.channel_acts.get(name)
+
+    def in_channel_qp(self, layer, idx: int = 0) \
+            -> Optional[ChannelQParams]:
+        return self.channel_acts.get(layer.inputs[idx])
+
     @property
     def input_qp(self) -> QParams:
         return self.acts[self.graph.layers[0].name]
@@ -371,15 +486,28 @@ class QuantizedGraph:
     # -- derived constants (single source for cgen AND the jax ref) ----------
 
     def requant_scales(self, layer) -> np.ndarray:
-        """(c_out,) float32: ``s_in * s_w[k] / s_out``."""
+        """(c_out,) float32: ``s_in * s_w[k] / s_out``.
+
+        Per-channel variants fold into the same shape: an ``in_folded``
+        layer's ``w_scale`` already carries ``s_in``, and a per-channel
+        *output* divides by the per-channel ``s_out[k]`` vector — the
+        epilogue still reads one multiplier per output channel."""
         lq = self.weights[layer.name]
-        s_in = float(self.in_qp(layer).scale)
-        s_out = float(self.out_qp(layer).scale)
-        return np.float32(s_in * lq.w_scale.astype(np.float64) / s_out)
+        if lq.in_folded:
+            num = lq.w_scale.astype(np.float64)
+        else:
+            s_in = float(self.in_qp(layer).scale)
+            num = s_in * lq.w_scale.astype(np.float64)
+        cq = self.channel_qp(layer.name)
+        if cq is not None:
+            return np.float32(num / cq.scale.astype(np.float64))
+        return np.float32(num / float(self.out_qp(layer).scale))
 
     def dequant_scales(self, layer) -> np.ndarray:
         """(c_out,) float32: ``s_in * s_w[k]`` — sink dequantization."""
         lq = self.weights[layer.name]
+        if lq.in_folded:
+            return np.float32(lq.w_scale.astype(np.float64))
         s_in = float(self.in_qp(layer).scale)
         return np.float32(s_in * lq.w_scale.astype(np.float64))
 
@@ -414,8 +542,22 @@ class QuantizedGraph:
         bit), and this fold subtracts the matching ``128 * sum(w)`` —
         the int32 accumulator is bit-identical to the signed kernels'."""
         lq = self.weights[layer.name]
-        zp = self.in_qp(layer).zero_point + x_offset
         w = lq.w_q.astype(np.int64)
+        cin = self.in_channel_qp(layer)
+        if cin is not None:
+            # per-channel input zero points: the correction is a per-
+            # input-channel weighted sum instead of zp * sum(w)
+            zpv = cin.zero_point.astype(np.int64) + x_offset
+            if isinstance(layer, Conv2D):
+                zsum = np.einsum("hwck,c->k", w, zpv)
+            elif isinstance(layer, DepthwiseConv2D):
+                zsum = (w.sum(axis=(0, 1))
+                        * zpv[:, None]).reshape(-1)  # (ci*mult,)
+            else:  # Dense: flattened NHWC input, channel fastest
+                zfull = np.tile(zpv, w.shape[0] // zpv.size)
+                zsum = (w * zfull[:, None]).sum(axis=0)
+            return (lq.b_q.astype(np.int64) - zsum).astype(np.int32)
+        zp = self.in_qp(layer).zero_point + x_offset
         if isinstance(layer, Conv2D):
             wsum = w.sum(axis=(0, 1, 2))
         elif isinstance(layer, DepthwiseConv2D):
@@ -456,6 +598,8 @@ def calibrate(graph: CNNGraph, xs: np.ndarray, *,
               nbins: int = 2048,
               chunk_size: int = 8,
               ranges_out: Optional[Dict[str, Tuple[float, float]]] = None,
+              channel_names: Tuple[str, ...] = (),
+              channel_out: Optional[Dict[str, ChannelQParams]] = None,
               ) -> Dict[str, QParams]:
     """Stream the calibration batch through the float oracle in chunks
     and derive per-tensor (post-activation) qparams.
@@ -473,6 +617,12 @@ def calibrate(graph: CNNGraph, xs: np.ndarray, *,
     output takes the **union of its branches' calibrated ranges** —
     the generated C and the jax reference then requantize each input
     edge with its own ``rescale(layer, idx)`` multiplier.
+
+    ``channel_names`` requests additional per-output-channel exact
+    min/max tracking for those layers (the per-channel path always
+    uses minmax — 2048-bin histograms per channel would dwarf the
+    model); results land in ``channel_out`` as
+    :class:`ChannelQParams`.
     """
     from . import jax_exec  # deferred: keep quantize importable sans jax
     import jax.numpy as jnp
@@ -502,6 +652,9 @@ def calibrate(graph: CNNGraph, xs: np.ndarray, *,
     observers: Dict[str, Observer] = {
         l.name: Observer(nbins) for l in graph.layers
         if l.name not in derived}
+    ch_set = frozenset(channel_names)
+    ch_mn: Dict[str, np.ndarray] = {}
+    ch_mx: Dict[str, np.ndarray] = {}
 
     chunk_size = max(1, int(chunk_size))
     for c0 in range(0, len(xs), chunk_size):
@@ -516,6 +669,16 @@ def calibrate(graph: CNNGraph, xs: np.ndarray, *,
                     layer, [vals[n] for n in layer.inputs])
             if layer.name in observers:
                 observers[layer.name].update(np.asarray(vals[layer.name]))
+            if layer.name in ch_set:
+                v = np.asarray(vals[layer.name], np.float32)
+                v = v.reshape(-1, v.shape[-1])
+                cmn, cmx = v.min(axis=0), v.max(axis=0)
+                if layer.name in ch_mn:
+                    ch_mn[layer.name] = np.minimum(ch_mn[layer.name], cmn)
+                    ch_mx[layer.name] = np.maximum(ch_mx[layer.name], cmx)
+                else:
+                    ch_mn[layer.name] = cmn
+                    ch_mx[layer.name] = cmx
             for src in layer.inputs:
                 pending[src] -= 1
                 if pending[src] == 0:
@@ -542,12 +705,29 @@ def calibrate(graph: CNNGraph, xs: np.ndarray, *,
         acts[name] = qparams_from_range(*ranges[name])
     if ranges_out is not None:
         ranges_out.update(ranges)
+    if channel_out is not None:
+        for name in ch_set:
+            channel_out[name] = channel_qparams_from_range(
+                ch_mn[name], ch_mx[name])
     return acts
 
 
-def quantize_weights(layer) -> LayerQuant:
-    """Symmetric per-output-channel int8 weights + int32 bias."""
+def quantize_weights(layer,
+                     in_scales: Optional[np.ndarray] = None) -> LayerQuant:
+    """Symmetric per-output-channel int8 weights + int32 bias.
+
+    ``in_scales`` (producer per-channel activation scales, one per
+    input channel) folds into the weights before quantization:
+    ``w_eff[.., ci, k] = w[.., ci, k] * s_x[ci]``, so the consumer's
+    raw-code dot product implicitly rescales each input channel —
+    the integer inner loop is unchanged."""
     w = np.asarray(layer.weights, np.float64)
+    if in_scales is not None:
+        s = np.asarray(in_scales, np.float64)
+        if isinstance(layer, (Conv2D, DepthwiseConv2D)):
+            w = w * s[None, None, :, None]        # HWIO / HWCM ci axis
+        else:  # Dense: flattened NHWC input, channel fastest
+            w = w * np.tile(s, w.shape[0] // s.size)[:, None]
     if isinstance(layer, Conv2D):
         absmax = np.abs(w).max(axis=(0, 1, 2))          # (c_out,)
     elif isinstance(layer, DepthwiseConv2D):
@@ -566,20 +746,30 @@ def quantize_weights(layer) -> LayerQuant:
     w_q = np.clip(np.round(w / per_tap.astype(np.float64)),
                   -QMAX, QMAX).astype(np.int8)
     return LayerQuant(w_scale=scale, w_q=w_q,
-                      b_q=np.zeros(scale.shape, np.int32))
+                      b_q=np.zeros(scale.shape, np.int32),
+                      in_folded=in_scales is not None)
 
 
 def quantize_graph(graph: CNNGraph,
-                   acts: Dict[str, QParams]) -> QuantizedGraph:
+                   acts: Dict[str, QParams],
+                   channel_acts: Optional[Dict[str, ChannelQParams]] = None,
+                   ) -> QuantizedGraph:
     """Annotate a calibrated graph with quantized weights and biases."""
     check_quantizable(graph)
-    qg = QuantizedGraph(graph=graph, acts=dict(acts))
+    channel_acts = dict(channel_acts or {})
+    qg = QuantizedGraph(graph=graph, acts=dict(acts),
+                        channel_acts=channel_acts)
     for layer in graph.layers:
         if not isinstance(layer, _WEIGHTED):
             continue
-        lq = quantize_weights(layer)
-        s_in = float(acts[layer.inputs[0]].scale)
-        bias_scale = s_in * lq.w_scale.astype(np.float64)
+        cin = channel_acts.get(layer.inputs[0])
+        lq = quantize_weights(
+            layer, in_scales=None if cin is None else cin.scale)
+        if cin is None:
+            s_in = float(acts[layer.inputs[0]].scale)
+            bias_scale = s_in * lq.w_scale.astype(np.float64)
+        else:  # s_in folded into w_scale already
+            bias_scale = lq.w_scale.astype(np.float64)
         lq.b_q = np.round(
             np.asarray(layer.bias, np.float64) / bias_scale
         ).astype(np.int32)
@@ -591,14 +781,23 @@ def quantize(graph: CNNGraph, calibration: np.ndarray, *,
              method: str = "minmax",
              percentile: float = 99.99,
              nbins: int = 2048,
-             chunk_size: int = 8) -> QuantizedGraph:
+             chunk_size: int = 8,
+             per_channel: bool = False) -> QuantizedGraph:
     """The two-step pipeline: calibrate on samples (streaming histogram
-    observers, range selection per ``method``), annotate the graph."""
+    observers, range selection per ``method``), annotate the graph.
+
+    ``per_channel=True`` additionally gives every
+    :func:`per_channel_eligible` layer per-output-channel activation
+    qparams (exact min/max per channel), folding the scales into the
+    consumers' weight quantization — see the module docstring."""
     ranges: Dict[str, Tuple[float, float]] = {}
+    ch_names = tuple(per_channel_eligible(graph)) if per_channel else ()
+    channel_out: Dict[str, ChannelQParams] = {}
     acts = calibrate(graph, calibration, method=method,
                      percentile=percentile, nbins=nbins,
-                     chunk_size=chunk_size, ranges_out=ranges)
-    qg = quantize_graph(graph, acts)
+                     chunk_size=chunk_size, ranges_out=ranges,
+                     channel_names=ch_names, channel_out=channel_out)
+    qg = quantize_graph(graph, acts, channel_acts=channel_out)
     qg.method = method
     qg.percentile = percentile
     qg.ranges = ranges
@@ -675,6 +874,12 @@ def qparams_digest(qg: QuantizedGraph) -> str:
         qp = qg.acts[name]
         h.update(f"{name}={np.float32(qp.scale).tobytes().hex()}"
                  f",{qp.zero_point};".encode())
+    for name in sorted(qg.channel_acts):
+        cq = qg.channel_acts[name]
+        h.update(f"ch:{name}="
+                 f"{cq.scale.astype(np.float32).tobytes().hex()},"
+                 f"{cq.zero_point.astype(np.int32).tobytes().hex()};"
+                 .encode())
     return h.hexdigest()[:16]
 
 

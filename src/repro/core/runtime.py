@@ -135,10 +135,18 @@ class CompiledNet:
     iface_elems: Tuple[int, ...] = ()
     arena_elems: int = 0             # per-stage private arena size
     schedule_digest: str = ""
+    # (Adds, pools, Concat edges) the deployed schedule fused — the
+    # net object self-describes which epilogues run at producer store
+    # sites without re-deriving the schedule from the graph
+    fused_counts: Tuple[int, int, int] = (0, 0, 0)
 
     @property
     def nstages(self) -> int:
         return max(len(self.stage_func_names), 1)
+
+    @property
+    def has_fusion(self) -> bool:
+        return any(self.fused_counts)
 
     def __post_init__(self):
         lib = ctypes.CDLL(self.so_path)
@@ -386,6 +394,9 @@ def build(graph: CNNGraph, opts: Optional[CodegenOptions] = None,
         iface_elems=gs.iface_elems,
         arena_elems=gs.arena_elems,
         schedule_digest=gs.schedule.digest(),
+        fused_counts=(len(gs.schedule.fused_adds),
+                      len(gs.schedule.fused_pools),
+                      len(gs.schedule.fused_concats)),
     )
 
 
@@ -427,6 +438,9 @@ def build_quantized(qgraph, opts: Optional[CodegenOptions] = None,
         iface_elems=gs.iface_elems,
         arena_elems=gs.arena_elems,
         schedule_digest=gs.schedule.digest(),
+        fused_counts=(len(gs.schedule.fused_adds),
+                      len(gs.schedule.fused_pools),
+                      len(gs.schedule.fused_concats)),
     )
 
 

@@ -222,6 +222,30 @@ def int8_variant_candidates(qgraph=None) -> List[str]:
     return cands
 
 
+def fusion_schedule_candidates(graph: CNNGraph, *,
+                               nstages: int = 1) -> List[Schedule]:
+    """Schedule variants the int8 autotuner times, deduped by digest.
+
+    Fusion kinds are a code-variant axis: fused output is bit-identical
+    to unfused, but on layers with channel-group tails a fused requant
+    epilogue can lose more than the skipped memory round-trip buys — so
+    each kind subset that yields a distinct program is timed like any
+    other code version.  Subsets are nested (all kinds ⊃ Adds-only ⊃
+    none) rather than the full power set: the pool/Concat fusions
+    landed together and share the tail-sensitivity concern, while Add
+    fusion predates them with its own track record."""
+    cands: List[Schedule] = []
+    seen = set()
+    for kinds in (("add", "pool", "concat"), ("add",), ()):
+        s = make_schedule(graph, nstages=nstages,
+                          fusion=bool(kinds), kinds=kinds or ("add",))
+        d = s.digest()
+        if d not in seen:
+            seen.add(d)
+            cands.append(s)
+    return cands
+
+
 def pipeline_stage_candidates(max_stages: int = 4) -> List[int]:
     """Stage counts worth timing on this host: layer pipelining trades
     one inter-stage hand-off per frame for stage-level core

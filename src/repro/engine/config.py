@@ -49,6 +49,13 @@ class CalibrationConfig:
     the provided scales/zero-points straight into the
     :class:`QuantizedGraph`; like ``data`` it is runtime state, not a
     serializable knob.
+
+    ``per_channel=True`` gives eligible layers per-output-channel
+    activation qparams (scales folded into the consumers' weight
+    quantization; see :func:`repro.core.quantize.per_channel_eligible`)
+    — finer steps for narrow channels at zero inner-loop cost.
+    Ignored when ``qparams`` is provided (the import format is
+    per-tensor).
     """
 
     data: Optional[Any] = None          # np.ndarray; not serialized
@@ -56,6 +63,7 @@ class CalibrationConfig:
     method: Optional[str] = None        # None = auto (see above)
     percentile: float = 99.99
     qparams: Optional[Dict[str, Any]] = None  # QAT import; not serialized
+    per_channel: bool = False
 
     def __post_init__(self):
         if (self.method is not None
@@ -78,7 +86,8 @@ class CalibrationConfig:
     def to_dict(self) -> Dict[str, Any]:
         """JSON-safe knobs (``data`` omitted — arrays don't serialize)."""
         return {"samples": self.samples, "method": self.method,
-                "percentile": self.percentile}
+                "percentile": self.percentile,
+                "per_channel": self.per_channel}
 
 
 @dataclass(frozen=True)
@@ -195,11 +204,14 @@ class SessionConfig:
     func_name: str = "nncg_net"
     precision: str = "fp32"
     calibration: CalibrationConfig = field(default_factory=CalibrationConfig)
-    # graph-level schedule (C backend): epilogue fusion on/off
-    # (None = auto = on; output is bitwise identical either way) and
-    # pipeline stage count (1 = monolithic, k>1 = layer-pipelined
-    # build streaming batches across k cores, 0 = auto: the autotuner
-    # times the host's viable stage counts and keeps the fastest)
+    # graph-level schedule (C backend): epilogue fusion on/off for
+    # every consumer kind — residual Adds, MaxPool/AvgPool, Concat
+    # edges (None = auto = on, and int8 autotune additionally times
+    # kind subsets as code variants; output is bitwise identical
+    # either way) and pipeline stage count (1 = monolithic, k>1 =
+    # layer-pipelined build streaming batches across k cores, 0 =
+    # auto: the autotuner times the host's viable stage counts and
+    # keeps the fastest)
     fusion: Optional[bool] = None
     pipeline_stages: int = 1
     # LM workload sub-config; None = classic CNN-graph session.  Accepts

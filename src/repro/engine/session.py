@@ -33,6 +33,7 @@ from repro.core.graph import CNNGraph
 from repro.core.schedule import Schedule, make_schedule
 
 from .autotune import (Autotuner, TuneResult, TuningCache,
+                       fusion_schedule_candidates,
                        int8_variant_candidates, tune_best_simd,
                        tune_pipeline_stages)
 from .backends import (Backend, CBackend, QuantizedXLABackend, get_backend)
@@ -190,7 +191,8 @@ class InferenceSession:
                     calibration = self._default_calibration()
                 self.qgraph = quantize_mod.quantize(
                     self.graph, calibration, method=method,
-                    percentile=config.calibration.percentile)
+                    percentile=config.calibration.percentile,
+                    per_channel=config.calibration.per_channel)
             self._init_int8(candidates)
             return
 
@@ -295,16 +297,16 @@ class InferenceSession:
                 # builds after fallback collapses variants)
                 cands = list(dict.fromkeys(
                     runtime.resolve_int8_simd(s) for s in cands))
-            # fusion is a variant axis too when the config leaves it to
-            # auto: fused output is bit-identical, but on layers with
-            # channel-group tails the fused requant epilogue can lose
-            # more than the skipped memory round-trip buys, so it is
-            # timed like any other code version rather than assumed
+            # fusion kinds are a variant axis too when the config
+            # leaves fusion to auto: fused output is bit-identical,
+            # but on layers with channel-group tails a fused requant
+            # epilogue can lose more than the skipped memory
+            # round-trip buys, so each distinct kind subset (all,
+            # Adds-only, none) is timed like any other code version
             scheds = [sched]
-            if cfg.fusion is None and sched.fused_adds:
-                scheds.append(make_schedule(self.graph,
-                                            nstages=len(sched.stages),
-                                            fusion=False))
+            if cfg.fusion is None:
+                scheds = fusion_schedule_candidates(
+                    self.graph, nstages=len(sched.stages))
             cache = self._tuning_cache()
             # the generated int8 C embeds the calibration-derived
             # qparams, so the cache key must carry them: a different

@@ -18,9 +18,12 @@ except ImportError:
 from repro.configs.cnn_paper import residual_cnn
 from repro.core import cgen, codegen, jax_exec, passes, quantize, runtime
 from repro.core.graph import (
-    Add, CNNGraph, Conv2D, Dense, Flatten, Input, MaxPool,
+    Add, AvgPool, CNNGraph, Concat, Conv2D, Dense, Flatten, Input,
+    MaxPool,
 )
-from repro.core.schedule import fusable_adds, make_schedule
+from repro.core.schedule import (
+    fusable_adds, fusable_concats, fusable_pools, make_schedule,
+)
 from repro.engine import InferenceSession, SessionConfig
 from repro.engine.autotune import (
     pipeline_stage_candidates, tune_pipeline_stages,
@@ -254,6 +257,107 @@ else:
         (0, 2, "relu"), (11, 5, None), (42, 3, "leaky_relu")])
     def test_branchy_fused_equals_unfused(seed, c, add_act):
         _assert_fused_matches_unfused(seed, c, add_act)
+
+
+# -------------------- branchy pool/Concat sweep (both precisions) ------
+
+def _pool_concat_net(seed: int, c: int) -> CNNGraph:
+    """Every fused-epilogue consumer kind from one generator: a MaxPool
+    and an AvgPool each behind a sole-consumer conv (window == stride,
+    no pads, divisible extent — the fusable shape), and a two-edge
+    Concat whose both producers qualify.  ``c`` sweeps the SIMD-group
+    channel tails: 1..17 covers sub-group, exact-group and group+tail
+    counts for the 8/16-wide kernels."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(8, 8, 2), name="in"),
+        _conv(rng, 3, 3, 2, c, padding="same", activation="relu",
+              name="s"),
+        _conv(rng, 1, 1, c, c, activation="relu", name="pm"),
+        MaxPool(size=(2, 2), name="mp"),
+        _conv(rng, 1, 1, c, c, activation="leaky_relu", name="pa",
+              inputs=["s"]),
+        AvgPool(size=(2, 2), name="ap"),
+        _conv(rng, 3, 3, c, c, padding="same", name="cb1",
+              inputs=["mp"]),
+        _conv(rng, 1, 1, c, c, name="cb2", inputs=["ap"]),
+        Concat(name="cat", inputs=["cb1", "cb2"]),
+        _conv(rng, 1, 1, 2 * c, 3, name="head"),
+    ])
+
+
+def _assert_pool_concat_parity(seed: int, c: int) -> None:
+    g = _pool_concat_net(seed, c)
+    assert fusable_pools(g) == [("pm", "mp"), ("pa", "ap")]
+    assert fusable_concats(g) == [("cb1", "cat"), ("cb2", "cat")]
+    sched_f = make_schedule(g)
+    sched_u = make_schedule(g, fusion=False)
+    assert sched_f.fused_pools and sched_f.fused_concats
+    xs = np.random.default_rng(seed + 500).normal(
+        size=(4,) + tuple(g.input_shape)).astype(np.float32)
+    opts = cgen.CodegenOptions(simd="generic", unroll=None)
+    # the fused arena never grows — the schedule invariant under test
+    assert (codegen.compile(g, opts, schedule=sched_f).arena_bytes
+            <= codegen.compile(g, opts, schedule=sched_u).arena_bytes)
+    # float: bitwise identical by construction (same op order per slot)
+    np.testing.assert_array_equal(
+        _build(g, "generic", True).predict_batch(xs),
+        _build(g, "generic", False).predict_batch(xs))
+    # int8: fused and unfused both bit-exact against the jax oracle
+    qg = quantize.quantize(g, xs)
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    for fusion in (True, False):
+        net = runtime.build_quantized(
+            qg, cgen.CodegenOptions(simd="generic"),
+            schedule=make_schedule(g, fusion=fusion))
+        np.testing.assert_array_equal(
+            net.predict_batch(xs).reshape(ref.shape), ref)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000), c=st.integers(1, 17))
+    def test_pool_concat_fused_parity_sweep(seed, c):
+        _assert_pool_concat_parity(seed, c)
+
+else:
+
+    @pytest.mark.parametrize("seed,c", [
+        (0, 1), (7, 2), (11, 4), (21, 7), (5, 16), (42, 17)])
+    def test_pool_concat_fused_parity_sweep(seed, c):
+        _assert_pool_concat_parity(seed, c)
+
+
+# --------------------------------------- fusion kinds as variant axes --
+
+def test_make_schedule_kinds_axis():
+    """``kinds`` restricts which consumer kinds fuse — the int8
+    autotuner times kind subsets as code variants."""
+    from repro.engine.autotune import fusion_schedule_candidates
+    g = _pool_concat_net(0, 5)
+    full = make_schedule(g)
+    adds_only = make_schedule(g, kinds=("add",))
+    assert full.fused_pools and full.fused_concats
+    assert not adds_only.fused_pools and not adds_only.fused_concats
+    with pytest.raises(ValueError):
+        make_schedule(g, kinds=("pool", "bogus"))
+    cands = fusion_schedule_candidates(g)
+    digs = [s.digest() for s in cands]
+    assert len(digs) == len(set(digs)), "candidates must be distinct"
+    assert digs[0] == full.digest()     # deployed default leads
+    assert any(not s.has_fusion for s in cands)
+
+
+def test_compiled_net_fused_counts():
+    """CompiledNet self-describes the deployed fusion (adds, pools,
+    concat edges) without re-deriving the schedule."""
+    g = _pool_concat_net(0, 4)
+    fused = _build(g, "generic", True)
+    assert fused.has_fusion
+    assert fused.fused_counts[1] >= 1 and fused.fused_counts[2] >= 1
+    unfused = _build(g, "generic", False)
+    assert unfused.fused_counts == (0, 0, 0) and not unfused.has_fusion
 
 
 # ------------------------------------------------- reorder pass --------

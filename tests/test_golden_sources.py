@@ -1,0 +1,111 @@
+"""Golden-source digests: the generated C of every bench net is pinned.
+
+One sha256 per (net x precision x schedule) cell — 4 paper/bench nets
+x {float, int8} x {fused, unfused}.  Any codegen change that alters
+even one byte of any cell fails here *by name*, so refactors that are
+supposed to be emission-neutral (the loop-nest IR split was) get a
+byte-level regression gate, and intentional changes leave an explicit
+diff in review.
+
+The recipe is fully deterministic: ``passes.optimize`` on the builder
+graph, int8 calibration on ``np.random.default_rng(0)`` uniform noise
+(PCG64 is stable across numpy versions), default ``CodegenOptions``.
+
+Regenerating after an *intentional* emission change — one command::
+
+    PYTHONPATH=src python tests/test_golden_sources.py --regen
+
+which rewrites ``tests/golden_digests.json`` in place; commit the diff
+together with the codegen change that caused it.
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import cnn_paper
+from repro.core import codegen, passes, quantize
+from repro.core.cgen import CodegenOptions
+from repro.core.schedule import make_schedule
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__),
+                           "golden_digests.json")
+
+NETS = {
+    "ball": cnn_paper.ball_classifier,
+    "pedestrian": cnn_paper.pedestrian_classifier,
+    "robot": cnn_paper.robot_detector,
+    "residual": cnn_paper.residual_cnn,
+}
+
+
+def _cells():
+    for name in sorted(NETS):
+        for prec in ("float", "int8"):
+            for sched in ("unfused", "fused"):
+                yield f"{name}_{prec}_{sched}"
+
+
+def _source_for(tag: str) -> str:
+    name, prec, sched = tag.split("_")
+    g = passes.optimize(NETS[name]())
+    unit = g
+    if prec == "int8":
+        rng = np.random.default_rng(0)
+        h, w, c = g.layers[0].shape
+        calib = rng.uniform(-1.0, 1.0,
+                            size=(8, h, w, c)).astype(np.float32)
+        unit = quantize.quantize(g, calib)
+    schedule = make_schedule(g, fusion=(sched == "fused"))
+    return codegen.compile(unit, CodegenOptions(),
+                           schedule=schedule).source
+
+
+def _digest(src: str) -> str:
+    return hashlib.sha256(src.encode()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert os.path.exists(GOLDEN_PATH), (
+        "tests/golden_digests.json missing — regenerate with:\n"
+        "  PYTHONPATH=src python tests/test_golden_sources.py --regen")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("tag", list(_cells()))
+def test_golden_source_digest(tag, golden):
+    assert tag in golden, (
+        f"no golden digest for {tag} — regenerate with:\n"
+        "  PYTHONPATH=src python tests/test_golden_sources.py --regen")
+    got = _digest(_source_for(tag))
+    assert got == golden[tag], (
+        f"{tag}: generated C changed (sha256 {got[:16]} != golden "
+        f"{golden[tag][:16]}).  If intentional, regenerate with:\n"
+        "  PYTHONPATH=src python tests/test_golden_sources.py --regen")
+
+
+def test_golden_table_complete(golden):
+    assert sorted(golden) == sorted(_cells())
+
+
+def _regen() -> None:
+    table = {}
+    for tag in _cells():
+        table[tag] = _digest(_source_for(tag))
+        print(f"{tag:32s} {table[tag][:16]}")
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print("wrote", GOLDEN_PATH)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

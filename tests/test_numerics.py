@@ -1,0 +1,115 @@
+"""Property tests for the shared numeric helpers (repro.core.numerics).
+
+``flit`` and ``round_half_up`` were historically duplicated between
+``cgen.py`` and ``quantize.py``; both now import the single definition.
+These tests pin the two contracts everything bit-exact rests on:
+
+* ``flit(v)`` parses back to the *identical* float32 bit pattern — the
+  paper's P3 (weights as source constants) and every requant multiplier
+  depend on it;
+* ``round_half_up(x)`` equals the generated C's trunc-plus-fixup floor
+  (``u = t + 0.5f; q = (int)u; q -= (float)q > u;``) for every value
+  the int8 path can produce, and preserves the argument dtype.
+"""
+import numpy as np
+import pytest
+
+try:  # hypothesis widens the search; the fixed grid runs without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import cgen, quantize
+from repro.core.numerics import flit, round_half_up
+
+
+# ----------------------------------------------------------- flit ----
+
+def _assert_roundtrip(v: np.float32) -> None:
+    lit = flit(v)
+    assert lit.endswith("f"), lit
+    back = np.float32(lit[:-1])
+    assert back.tobytes() == np.float32(v).tobytes(), (v, lit, back)
+
+
+_GRID = np.concatenate([
+    np.random.default_rng(0).normal(0, 1, 300),
+    np.random.default_rng(1).normal(0, 1e-30, 60),
+    np.random.default_rng(2).normal(0, 1e30, 60),
+    [0.0, -0.0, 1.0, -1.0, 1 / 3, 2 / 3, np.float32(2 ** -149),
+     -np.float32(2 ** -149), np.finfo(np.float32).max,
+     np.finfo(np.float32).min, np.finfo(np.float32).tiny,
+     np.float32(0.1), np.float32(16777216.0), np.float32(16777217.0)],
+]).astype(np.float32)
+
+
+def test_flit_roundtrip_grid():
+    for v in _GRID:
+        _assert_roundtrip(v)
+
+
+def test_flit_is_the_shared_definition():
+    """cgen._flit IS numerics.flit — no second copy to drift."""
+    assert cgen._flit is flit
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=500, deadline=None)
+    @given(st.floats(width=32, allow_nan=False, allow_infinity=False))
+    def test_flit_roundtrip_property(x):
+        _assert_roundtrip(np.float32(x))
+
+
+# -------------------------------------------------- round_half_up ----
+
+def _c_floor_sequence(t: np.ndarray) -> np.ndarray:
+    """The emitted C requant rounding, replayed in float32: trunc
+    toward zero, then subtract one when the trunc overshot."""
+    t = np.asarray(t, np.float32)
+    u = t + np.float32(0.5)
+    q = np.trunc(u)
+    return q - (q > u)
+
+
+def test_round_half_up_matches_c_sequence_grid():
+    rng = np.random.default_rng(3)
+    t = np.concatenate([
+        rng.normal(0, 200, 5000),
+        np.arange(-130.0, 130.0, 0.5),     # every exact .5 boundary
+        np.arange(-130.0, 130.0, 0.25),
+    ]).astype(np.float32)
+    np.testing.assert_array_equal(round_half_up(t), _c_floor_sequence(t))
+
+
+def test_round_half_up_halves_go_up_not_bankers():
+    # floor(x + 0.5): 2.5 -> 3 and -2.5 -> -2 (banker's would give 2/-2)
+    vals = np.float32([2.5, -2.5, 0.5, -0.5, 3.5, -3.5])
+    np.testing.assert_array_equal(round_half_up(vals),
+                                  np.float32([3, -2, 1, 0, 4, -3]))
+
+
+def test_round_half_up_preserves_dtype():
+    assert round_half_up(np.float32([1.2])).dtype == np.float32
+    assert round_half_up(np.float64([1.2])).dtype == np.float64
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=500, deadline=None)
+    @given(st.floats(-3e8, 3e8, allow_nan=False, width=32))
+    def test_round_half_up_matches_c_sequence_property(x):
+        t = np.float32([x])
+        np.testing.assert_array_equal(round_half_up(t),
+                                      _c_floor_sequence(t))
+
+
+# -------------------------------------- the consumers stay wired ----
+
+def test_quantize_uses_shared_rounding():
+    """QParams.quantize and the zero-point rule are built on
+    round_half_up — one scheme everywhere (regression anchor for the
+    dedup refactor)."""
+    qp = quantize.qparams_from_range(-1.0, 1.0)
+    x = np.float32([0.5 * qp.scale])  # lands exactly on a .5 code
+    got = int(qp.quantize(x)[0])
+    assert got == int(round_half_up(np.float32(0.5))) + qp.zero_point

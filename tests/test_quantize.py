@@ -23,8 +23,8 @@ from repro.configs.cnn_paper import (
 from repro.core import cgen, jax_exec, passes, quantize, runtime
 from repro.core.cgen import _flit
 from repro.core.graph import (
-    Add, AvgPool, BatchNorm, CNNGraph, Concat, Conv2D, DepthwiseConv2D,
-    GlobalAvgPool, Input, MaxPool,
+    Add, AvgPool, BatchNorm, CNNGraph, Concat, Conv2D, Dense,
+    DepthwiseConv2D, GlobalAvgPool, Input, MaxPool,
 )
 from repro.data.pipeline import ball_image_batch
 
@@ -334,6 +334,133 @@ def test_quantized_c_matches_jax_reference_pedestrian_robot():
         net = runtime.build_quantized(qg, cgen.CodegenOptions(simd="sse"))
         got = net.predict_batch(xs).reshape(ref.shape)
         np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------- per-channel requant ----
+
+def _per_channel_graph(co=17, seed=13) -> CNNGraph:
+    """A valid-padding chain where every non-sink weighted layer is
+    per-channel eligible: Conv (channel tail ``co=17`` exercises the
+    tiled groups AND the scalar-tail zero-point table indexing) ->
+    Conv -> DepthwiseConv (multiplier 2, group-major channel order) ->
+    Dense sink (softmax-free: whole net on the exact integer path,
+    and the sink dequant exercises the folded-input branch)."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(10, 10, 3), name="in"),
+        _conv(rng, 3, 3, 3, co, padding="valid", activation="relu",
+              name="c1"),
+        _conv(rng, 3, 3, co, 8, padding="valid", name="c2"),
+        _dw(rng, 1, 1, 8, 2, padding="valid", name="dwx"),
+        Dense(weights=rng.normal(0, 0.1, (6 * 6 * 16, 5))
+              .astype(np.float32),
+              bias=rng.normal(0, 0.05, (5,)).astype(np.float32),
+              name="fc"),
+    ])
+
+
+def test_channel_qparams_match_scalar_rule():
+    """channel_qparams_from_range is qparams_from_range applied
+    elementwise — same zero-widening, float32 cast, half-up rule."""
+    rng = np.random.default_rng(21)
+    mn = rng.normal(0, 5, 40)
+    mx = mn + np.abs(rng.normal(0, 5, 40))
+    cq = quantize.channel_qparams_from_range(mn, mx)
+    for i in range(mn.size):
+        qp = quantize.qparams_from_range(float(mn[i]), float(mx[i]))
+        assert float(cq.scale[i]) == qp.scale, i
+        assert int(cq.zero_point[i]) == qp.zero_point, i
+    # zero stays exactly representable per channel
+    z = cq.quantize(np.zeros((1, mn.size), np.float32))
+    assert (z[0] == cq.zero_point).all()
+    assert (cq.dequantize(z)[0] == 0.0).all()
+
+
+def test_per_channel_eligibility():
+    g = passes.optimize(_per_channel_graph(), simd_multiple=1)
+    # every non-sink weighted layer qualifies; the Dense sink does not
+    assert quantize.per_channel_eligible(g) == ["c1", "c2", "dwx"]
+    # padded consumers disqualify the producer (the pad fill is one
+    # scalar zero code; a per-channel zero point no longer is)
+    zoo = passes.optimize(_zoo_graph(), simd_multiple=1)
+    for name in quantize.per_channel_eligible(zoo):
+        layer = next(l for l in zoo.layers if l.name == name)
+        assert all(isinstance(c, quantize._WEIGHTED)
+                   for c in zoo.consumers()[layer.name])
+
+
+@pytest.mark.parametrize("simd", ["generic", "sse", "avx"])
+def test_per_channel_bit_exact_vs_jax(simd):
+    """Opt-in per-channel requant zero points: producer epilogues index
+    per-channel multiplier/zero-point tables, consumers fold the
+    producer scales into their weight quantization — and the generated
+    C still matches the jax reference bit-for-bit on every SIMD
+    variant (the integer inner loop never changed)."""
+    _skip_unless_simd(simd)
+    g = passes.optimize(_per_channel_graph(), simd_multiple=1)
+    xs = _calib(g.input_shape, n=16)
+    qg = quantize.quantize(g, xs, per_channel=True)
+    assert sorted(qg.channel_acts) == ["c1", "c2", "dwx"]
+    # the per-channel zps genuinely vary (otherwise this tests nothing)
+    assert any(np.unique(cq.zero_point).size > 1
+               for cq in qg.channel_acts.values())
+    for name in qg.channel_acts:
+        layer = next(l for l in g.layers if l.name == name)
+        for c in g.consumers()[name]:
+            assert qg.weights[c.name].in_folded
+        assert qg.requant_scales(layer).shape == \
+            qg.weights[name].w_scale.shape
+    ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
+    net = runtime.build_quantized(qg, cgen.CodegenOptions(simd=simd))
+    np.testing.assert_array_equal(
+        net.predict_batch(xs).reshape(ref.shape), ref)
+
+
+def test_per_channel_improves_or_matches_per_tensor():
+    """Finer steps for narrow channels can only help on this net: the
+    per-channel build's max |int8 - float| error never exceeds the
+    per-tensor build's by more than float noise."""
+    g = passes.optimize(_per_channel_graph(), simd_multiple=1)
+    xs = _calib(g.input_shape, n=24)
+    e_pt = quantize.quantization_error(
+        quantize.quantize(g, xs), xs)["max_abs_err"]
+    e_pc = quantize.quantization_error(
+        quantize.quantize(g, xs, per_channel=True), xs)["max_abs_err"]
+    assert e_pc <= e_pt * 1.05 + 1e-6, (e_pc, e_pt)
+
+
+def test_per_channel_off_is_default_and_digest_differs():
+    """per_channel=False (the default) is the historical build —
+    identical generated C; turning it on changes the qparams digest
+    (autotune cache keys must not mix the two)."""
+    from repro.core import codegen
+    g = passes.optimize(_per_channel_graph(), simd_multiple=1)
+    xs = _calib(g.input_shape, n=8)
+    qg_off = quantize.quantize(g, xs)
+    qg_def = quantize.quantize(g, xs, per_channel=False)
+    assert not qg_off.channel_acts and not qg_def.channel_acts
+    opts = cgen.CodegenOptions(simd="generic")
+    assert codegen.compile(qg_off, opts).source == \
+        codegen.compile(qg_def, opts).source
+    qg_on = quantize.quantize(g, xs, per_channel=True)
+    assert quantize.qparams_digest(qg_on) != quantize.qparams_digest(qg_off)
+    assert codegen.compile(qg_on, opts).source != \
+        codegen.compile(qg_off, opts).source
+
+
+def test_session_per_channel_flag():
+    from repro.engine import InferenceSession, SessionConfig
+    g = _per_channel_graph()
+    xs = _calib(g.input_shape, n=16)
+    s = InferenceSession(g, config=SessionConfig(
+        backend="c", precision="int8", simd="generic",
+        calibration={"data": xs, "per_channel": True}))
+    ref = InferenceSession(g, config=SessionConfig(
+        backend="xla", precision="int8",
+        calibration={"data": xs, "per_channel": True}))
+    np.testing.assert_array_equal(s.predict(xs), ref.predict(xs))
+    assert s.qgraph.channel_acts
+    assert s.config.calibration.to_dict()["per_channel"] is True
 
 
 # ------------------------------------------------- accuracy vs float ----

@@ -37,9 +37,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import cgen, codegen, jax_exec, passes, quantize  # noqa: E402
 from repro.core.graph import (  # noqa: E402
-    Add, CNNGraph, Conv2D, Dense, DepthwiseConv2D, Flatten, Input,
-    MaxPool,
+    Add, AvgPool, CNNGraph, Concat, Conv2D, Dense, DepthwiseConv2D,
+    Flatten, Input, MaxPool,
 )
+from repro.core.schedule import fusable_concats, fusable_pools  # noqa: E402
 
 ARM_VARIANTS = ["generic", "neon", "neon_dot"]
 STRICT_FLAGS = ["-std=c89", "-Wall", "-Wextra", "-Werror",
@@ -123,6 +124,30 @@ def _camera_conv_net(seed=9) -> CNNGraph:
     ])
 
 
+def _pool_concat_net(seed=11) -> CNNGraph:
+    """Branchy DAG covering the fused pool/Concat epilogues on NEON:
+    MaxPool and AvgPool absorbed into their producer convs, a two-edge
+    fused Concat, and a per-channel-requanted stem (quantized with
+    ``per_channel=True`` below) whose NEON zero-point-table loads only
+    this lane executes on real aarch64 code."""
+    rng = np.random.default_rng(seed)
+    return CNNGraph([
+        Input(shape=(12, 12, 2), name="in"),
+        _conv(rng, 3, 3, 2, 20, padding="valid", activation="relu",
+              name="s"),
+        _conv(rng, 1, 1, 20, 16, activation="relu", name="pm"),
+        MaxPool(size=(2, 2), name="mp"),
+        _conv(rng, 1, 1, 20, 16, activation="leaky_relu", name="pa",
+              inputs=["s"]),
+        AvgPool(size=(2, 2), name="ap"),
+        _conv(rng, 3, 3, 16, 16, padding="same", name="cb1",
+              inputs=["mp"]),
+        _conv(rng, 1, 1, 16, 16, name="cb2", inputs=["ap"]),
+        Concat(name="cat", inputs=["cb1", "cb2"]),
+        _conv(rng, 1, 1, 32, 7, name="head"),
+    ])
+
+
 def _find_tool(explicit, names):
     if explicit:
         return explicit if shutil.which(explicit) else None
@@ -147,15 +172,23 @@ def main() -> int:
               file=sys.stderr)
         return 2
 
-    nets = {"zoo": _kernel_zoo(), "camera": _camera_conv_net()}
+    nets = {"zoo": _kernel_zoo(), "camera": _camera_conv_net(),
+            "poolcat": _pool_concat_net()}
     failures = 0
     with tempfile.TemporaryDirectory() as tmp:
         for name, g0 in nets.items():
             g = passes.optimize(g0, simd_multiple=1)
+            if name == "poolcat":
+                assert fusable_pools(g) and fusable_concats(g), \
+                    "poolcat net must exercise the fused pool/Concat C"
             rng = np.random.default_rng(3)
             xs = rng.normal(size=(8,) + tuple(g.input_shape)).astype(
                 np.float32)
-            qg = quantize.quantize(g, xs)
+            qg = quantize.quantize(g, xs,
+                                   per_channel=name == "poolcat")
+            if name == "poolcat":
+                assert qg.channel_acts, \
+                    "poolcat must carry per-channel zero-point tables"
             ref = np.asarray(jax_exec.make_jit_forward_quantized(qg)(xs))
             in_n = int(np.prod(g.input_shape))
             out_n = ref.size // len(xs)

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Dump the typed loop-nest IR (``repro.core.lowering.Program``) a net
+lowers to — the inspection window between the schedule and the C text.
+
+Usage::
+
+    python tools/dump_ir.py ball                 # float build
+    python tools/dump_ir.py robot --int8         # calibrated int8
+    python tools/dump_ir.py residual --no-fusion # legacy layout
+    python tools/dump_ir.py ball --simd sse --stages 2 --bodies
+
+Prints each nest with its loop structure (``~`` marks unrolled loops),
+kernel kind/variant, epilogue chain (requant, activation, fused
+Add/pool/Concat consumers), and the planned arena buffers with byte
+offsets and live ranges.  ``--bodies`` inlines the rendered C lines of
+every kernel span.  ``--c`` prints the rendered translation unit
+instead (what ``render(program)`` — and therefore ``compile()`` —
+emits).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import codegen, passes  # noqa: E402
+from repro.core.cgen import CodegenOptions  # noqa: E402
+from repro.core.lowering import format_program, render  # noqa: E402
+from repro.core.schedule import make_schedule  # noqa: E402
+from repro.configs import cnn_paper  # noqa: E402
+
+NETS = {
+    "ball": cnn_paper.ball_classifier,
+    "pedestrian": cnn_paper.pedestrian_classifier,
+    "robot": cnn_paper.robot_detector,
+    "residual": cnn_paper.residual_cnn,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("net", choices=sorted(NETS),
+                    help="bench net to lower")
+    ap.add_argument("--int8", action="store_true",
+                    help="calibrate (synthetic frames) and lower the "
+                         "quantized build")
+    ap.add_argument("--per-channel", action="store_true",
+                    help="with --int8: per-channel requant zero points")
+    ap.add_argument("--simd", default="generic",
+                    help="kernel variant (default: generic)")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stage count (default: 1)")
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="legacy unfused schedule")
+    ap.add_argument("--bodies", action="store_true",
+                    help="inline the rendered C lines of each kernel")
+    ap.add_argument("--c", action="store_true",
+                    help="print the rendered C instead of the IR")
+    args = ap.parse_args(argv)
+
+    graph = passes.optimize(NETS[args.net]())
+    target = graph
+    if args.int8:
+        from repro.core import quantize
+        from repro.data.pipeline import camera_frame_batch
+        calib = camera_frame_batch(16, graph.input_shape, seed=0)
+        target = quantize.quantize(graph, np.asarray(calib),
+                                   method="percentile",
+                                   per_channel=args.per_channel)
+    schedule = make_schedule(graph, fusion=not args.no_fusion,
+                             nstages=args.stages)
+    _, program = codegen.lower(target, CodegenOptions(simd=args.simd),
+                               schedule=schedule)
+    if args.c:
+        sys.stdout.write(render(program))
+    else:
+        print(f"# schedule: {schedule.describe()}")
+        print(format_program(program, bodies=args.bodies))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,12 +26,49 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.cnn_paper import ball_classifier, residual_cnn  # noqa: E402
 from repro.core import cgen, codegen, passes, quantize  # noqa: E402
-from repro.core.schedule import make_schedule  # noqa: E402
+from repro.core.schedule import (  # noqa: E402
+    fusable_concats, fusable_pools, make_schedule,
+)
 
 STRICT_FLAGS = ["-std=c89", "-Wall", "-Wextra", "-Werror",
                 "-pedantic-errors"]
 
-# (tag, builder, unroll, quant method or None, nstages, fusion)
+
+def pool_concat_dag():
+    """Branchy DAG exercising the pooling/Concat fused epilogues: a
+    MaxPool and an AvgPool each absorbed into their producer conv, a
+    two-edge fused Concat, and (under ``:pc``) a per-channel-requanted
+    stem whose zero-point table feeds the epilogue."""
+    import numpy as np
+    from repro.core.graph import (
+        AvgPool, CNNGraph, Concat, Conv2D, Input, MaxPool,
+    )
+    rng = np.random.default_rng(11)
+
+    def conv(kh, kw, ci, co, **kw_args):
+        return Conv2D(
+            weights=rng.normal(0, 0.5, (kh, kw, ci, co)).astype(
+                np.float32),
+            bias=rng.normal(0, 0.1, (co,)).astype(np.float32),
+            **kw_args)
+
+    return CNNGraph([
+        Input(shape=(12, 12, 2), name="in"),
+        conv(3, 3, 2, 20, padding="valid", activation="relu", name="s"),
+        conv(1, 1, 20, 16, activation="relu", name="pm"),
+        MaxPool(size=(2, 2), name="mp"),
+        conv(1, 1, 20, 16, activation="leaky_relu", name="pa",
+             inputs=["s"]),
+        AvgPool(size=(2, 2), name="ap"),
+        conv(3, 3, 16, 16, padding="same", name="cb1", inputs=["mp"]),
+        conv(1, 1, 16, 16, name="cb2", inputs=["ap"]),
+        Concat(name="cat", inputs=["cb1", "cb2"]),
+        conv(1, 1, 32, 7, name="head"),
+    ])
+
+
+# (tag, builder, unroll, quant method or None, nstages, fusion);
+# a ":pc" method suffix selects per-channel requant zero points
 CASES = [
     ("ball-unrolled", ball_classifier, 0, None, 1, True),
     ("ball-rolled", ball_classifier, None, None, 1, True),
@@ -52,6 +89,12 @@ CASES = [
     ("residual-int8", residual_cnn, None, "percentile", 1, True),
     # layer-pipelined int8 build
     ("residual-int8-pipe2", residual_cnn, None, "percentile", 2, True),
+    # pooling/Concat fused epilogues (MaxPool + AvgPool absorbed into
+    # their producer loops, fused Concat slice stores) — float, int8,
+    # and int8 with per-channel requant zero-point tables
+    ("poolcat-fused", pool_concat_dag, None, None, 1, True),
+    ("poolcat-int8", pool_concat_dag, None, "minmax", 1, True),
+    ("poolcat-int8-pc", pool_concat_dag, None, "minmax:pc", 1, True),
 ]
 
 
@@ -60,9 +103,14 @@ def _compile_unit(graph, unroll, method, nstages, fusion) -> str:
     sched = make_schedule(graph, nstages=nstages, fusion=fusion)
     if method is not None:
         import numpy as np
+        method, _, pc = method.partition(":")
         xs = np.random.default_rng(0).normal(
             size=(8,) + tuple(graph.input_shape)).astype(np.float32)
-        unit = quantize.quantize(graph, xs, method=method)
+        unit = quantize.quantize(graph, xs, method=method,
+                                 per_channel=pc == "pc")
+        if pc == "pc":
+            assert unit.channel_acts, \
+                "per-channel case must emit zero-point tables"
     else:
         unit = graph
     return codegen.compile(unit, opts, schedule=sched).source
@@ -77,6 +125,10 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as tmp:
         for tag, builder, unroll, method, nstages, fusion in CASES:
             g = passes.optimize(builder(), simd_multiple=1)
+            if tag.startswith("poolcat"):
+                # the case exists to gate the fused pool/Concat C —
+                # fail loudly if the optimizer ever defeats that shape
+                assert fusable_pools(g) and fusable_concats(g), tag
             src = _compile_unit(g, unroll, method, nstages, fusion)
             c_path = os.path.join(tmp, f"{tag}.c")
             with open(c_path, "w") as f:
